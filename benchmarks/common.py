@@ -1,0 +1,62 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case
+from repro.data import partition, synthetic
+from repro.fl.models import linreg_model, mlp_model
+from repro.fl.trainer import FLConfig, FLTrainer
+
+POLICIES = ("perfect", "inflota", "random")
+
+# Paper Sec. VI: U=20, P_max=10 mW, sigma^2=1e-4 mW, h ~ Exp(1).
+PAPER_CHANNEL = ChannelConfig(sigma2=1e-4, p_max=10.0)
+
+
+def linreg_workers(U: int = 20, k_bar: int = 30, seed: int = 0):
+    counts = partition.sample_counts(U, k_bar, seed=seed)
+    x, y = synthetic.linreg(int(np.sum(counts)) + 512, seed=seed)
+    workers = partition.partition(x, y, counts, seed=seed)
+    test = (x[-512:], y[-512:])
+    return workers, test
+
+
+def mlp_workers(U: int = 20, k_bar: int = 40, seed: int = 0,
+                n_test: int = 2000):
+    counts = partition.sample_counts(U, k_bar, seed=seed)
+    x, y = synthetic.mnist_like(int(np.sum(counts)) + n_test, seed=seed)
+    workers = partition.partition(x[:-n_test], y[:-n_test], counts,
+                                  seed=seed)
+    return workers, (x[-n_test:], y[-n_test:])
+
+
+def run_policy(task, workers, test, policy: str, rounds: int,
+               lr: float, case: Case, sigma2: float | None = None,
+               k_b: int | None = None, seed: int = 0,
+               constants: LearningConstants | None = None) -> Dict:
+    chanc = PAPER_CHANNEL if sigma2 is None else ChannelConfig(
+        sigma2=sigma2, p_max=PAPER_CHANNEL.p_max)
+    cfg = FLConfig(rounds=rounds, lr=lr, policy=policy, case=case,
+                   k_b=k_b, channel=chanc,
+                   constants=constants or LearningConstants(
+                       sigma2=chanc.sigma2),
+                   seed=seed)
+    tr = FLTrainer(task, workers, cfg)
+    t0 = time.time()
+    hist = tr.run(key=jax.random.PRNGKey(seed), eval_data=test)
+    hist["wall_s"] = time.time() - t0
+    return hist
+
+
+def emit(rows: List[dict]) -> None:
+    """Print benchmark rows as ``name,metric,value`` CSV lines."""
+    for r in rows:
+        print(f"{r['name']},{r['metric']},{r['value']}")

@@ -1,0 +1,73 @@
+"""Microbenchmarks of the OTA compute hot-spots (CPU wall-time).
+
+Times the pure-jnp reference implementations of the two per-round hot
+spots — the fused OTA transmit/aggregate and the Theorem-4 INFLOTA search —
+across D to document the O(D·U) / O(D·U^2) scaling the Pallas kernels tile.
+(The Pallas kernels themselves only run in interpret mode on CPU, which
+measures the Python interpreter, not the kernel; on-TPU timing is the
+deploy-time benchmark.)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, channel, inflota
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case, case_numerator
+
+
+def _time(f, *args, reps: int = 5):
+    f(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(U: int = 20):
+    rows = []
+    c = LearningConstants()
+    k_i = jnp.ones((U,)) * 50.0
+    p_max = jnp.full((U,), 10.0)
+    numer = case_numerator(Case.GD_NONCONVEX, k_i, c)
+    for D in (1024, 16384, 131072):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(U, D)), jnp.float32)
+        h = jnp.asarray(rng.exponential(size=(U, D)), jnp.float32)
+        noise = jnp.asarray(rng.normal(size=(D,)) * 1e-2, jnp.float32)
+        w_abs = jnp.abs(w[0])
+
+        agg_f = jax.jit(lambda w, h, n: aggregation.ota_aggregate(
+            w, h, jnp.ones((U,)), jnp.ones((D,)), k_i, 10.0, n)[0])
+        us = _time(agg_f, w, h, noise)
+        rows.append({"name": f"ota_aggregate_D{D}", "metric": "us_per_call",
+                     "value": round(us, 1)})
+
+        sol_f = jax.jit(lambda h, wa: inflota.solve(
+            h, k_i, wa, 1e-3, p_max, c, Case.GD_NONCONVEX))
+        us = _time(sol_f, h, w_abs)
+        rows.append({"name": f"inflota_search_D{D}_U{U}",
+                     "metric": "us_per_call", "value": round(us, 1)})
+    # bucketed (beyond-paper) search at LM scale
+    D = 1 << 20
+    wa = jnp.abs(jnp.asarray(np.random.default_rng(1).normal(size=(D,)),
+                             jnp.float32))
+    hw = jnp.asarray(np.random.default_rng(2).exponential(size=(U,)),
+                     jnp.float32)
+    f = jax.jit(lambda hw, wa: inflota.solve_bucketed(
+        hw, k_i, wa, 1e-3, p_max, c, 256, Case.GD_NONCONVEX))
+    us = _time(f, hw, wa)
+    rows.append({"name": f"inflota_bucketed_D{D}_nb256",
+                 "metric": "us_per_call", "value": round(us, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,42 @@
+"""Render EXPERIMENTS.md roofline tables from results/*.jsonl."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}m"
+    return f"{x*1e6:.1f}u"
+
+
+def render(path):
+    rows = [json.loads(l) for l in open(path)]
+    print(f"\n### {path}")
+    print("| arch | shape | compute_s | memory_s | collective_s |"
+          " bottleneck | useful | live GB | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for m in rows:
+        rf = m["roofline"]
+        n_chips = 1
+        for d in m["mesh"].split("x"):
+            n_chips *= int(d)
+        useful = (m.get("model_flops", 0) / n_chips / rf["flops"]
+                  if rf["flops"] else 0)
+        mem = m.get("memory", {})
+        print(f"| {m['arch']} | {m['shape']} | {fmt(rf['compute_s'])} "
+              f"| {fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} "
+              f"| {rf['bottleneck']} | {useful:.2f} "
+              f"| {mem.get('live_bytes', 0)/1e9:.1f} "
+              f"| {'Y' if mem.get('fits_16gb') else 'n'} |")
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        render(p)

@@ -1,0 +1,62 @@
+"""Benchmark driver — one section per paper table/figure + roofline.
+
+Prints ``name,metric,value`` CSV.  Sections:
+  fig2_3   linear regression fit + MSE-vs-iterations   (paper Sec. VI-A)
+  fig4_5_6 MSE sweeps over U, K̄, sigma^2              (paper Sec. VI-A)
+  fig7_8   MLP cross-entropy + accuracy                (paper Sec. VI-B)
+  kernels  OTA aggregate / INFLOTA search micro-scaling
+  roofline per-(arch × shape × mesh) dry-run terms      (§Roofline)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only X]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (common, csi_ablation, fig2_3_linreg,
+                        fig4_5_6_sweeps, fig7_8_mlp, kernels_micro,
+                        roofline_table, theory_check)
+
+SECTIONS = {
+    "fig2_3": lambda r: fig2_3_linreg.run(rounds=r),
+    "fig4_5_6": lambda r: fig4_5_6_sweeps.run(rounds=max(r * 4 // 5, 20)),
+    "fig7_8": lambda r: fig7_8_mlp.run(rounds=r),
+    "theory": lambda r: theory_check.run(rounds=min(r, 60)),
+    "csi": lambda r: csi_ablation.run(rounds=max(r * 4 // 5, 20)),
+    "kernels": lambda r: kernels_micro.run(),
+    "roofline": lambda r: roofline_table.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer FL rounds (CI-speed)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-length runs (500 rounds)")
+    ap.add_argument("--only", default=None, choices=list(SECTIONS))
+    args = ap.parse_args()
+
+    rounds = 40 if args.quick else (500 if args.full else 150)
+    names = [args.only] if args.only else list(SECTIONS)
+    print("name,metric,value")
+    t0 = time.time()
+    ok = True
+    for name in names:
+        try:
+            rows = SECTIONS[name](rounds)
+        except Exception as e:  # keep the suite going, report at the end
+            print(f"{name},ERROR,{e!r}")
+            ok = False
+            continue
+        common.emit(rows)
+    print(f"total,wall_s,{time.time() - t0:.1f}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

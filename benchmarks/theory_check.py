@@ -1,0 +1,142 @@
+"""Quantitative check of the paper's convergence THEORY (Lemma 1).
+
+Runs FL over the air on a task whose constants are exactly computable —
+ridge-regularized linear least squares
+
+    F(w) = ||Xw - y||^2 / K + lam ||w||^2,
+
+so L = 2 lambda_max(X^T X / K) + 2 lam, mu = 2 lambda_min(X^T X / K) +
+2 lam, and F(w*) is closed-form.  Each round we accumulate the Lemma-1
+upper bound from the *realized* (beta_t, b_t) via A_t (14) / B_t (15) and
+compare the empirical expected gap E[F(w_t) - F*] (mean over channel
+seeds) against it.  The bound must hold (up to Monte-Carlo noise) and be
+within a reasonable factor at the steady state — this validates eqs.
+(13)-(16) end-to-end, not just their algebra.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import channel as chan
+from repro.core import inflota
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import A_t, B_t, LearningConstants
+from repro.core.objectives import Case
+
+
+def _make_problem(U=10, k=40, d=8, lam=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(U * k, d)) / np.sqrt(d)
+    w_true = rng.normal(size=(d,))
+    y = X @ w_true + 0.1 * rng.normal(size=(U * k,))
+    G = X.T @ X / X.shape[0]
+    evals = np.linalg.eigvalsh(G)
+    L = 2 * evals[-1] + 2 * lam
+    mu = 2 * evals[0] + 2 * lam
+    w_star = np.linalg.solve(G + lam * np.eye(d), X.T @ y / X.shape[0])
+    return X, y, w_true, w_star, float(L), float(mu), lam
+
+
+def run(rounds: int = 60, n_seeds: int = 8):
+    U, k, d = 10, 40, 8
+    X, y, _, w_star, L, mu, lam = _make_problem(U, k, d)
+    Xs = X.reshape(U, k, d)
+    ys = y.reshape(U, k)
+    k_i = jnp.full((U,), float(k))
+    K = float(U * k)
+
+    def F(w):
+        r = X @ np.asarray(w) - y
+        return float(r @ r / X.shape[0] + lam * np.asarray(w) @ np.asarray(w))
+
+    F_star = F(w_star)
+    cfgc = ChannelConfig(sigma2=1e-4, p_max=10.0)
+
+    # Assumption 3 must actually HOLD along the trajectory for the bound
+    # to be valid: measure rho1 = max_t max_sample ||grad f||^2 on a
+    # noise-free pre-pass (rho2 = 0 keeps A_t = 1 - mu/L exact).
+    def sample_grad_sq_max(w):
+        r = X @ np.asarray(w) - y
+        g = 2 * X * r[:, None] + 2 * lam * np.asarray(w)[None, :]
+        return float(np.max(np.sum(g * g, axis=1)))
+
+    w = np.zeros((d,))
+    rho1 = 0.0
+    for _ in range(80):
+        rho1 = max(rho1, sample_grad_sq_max(w))
+        gF = 2 * (X.T @ (X @ w - y)) / X.shape[0] + 2 * lam * w
+        w = w - gF / L
+    consts = LearningConstants(L=L, mu=mu, rho1=1.1 * rho1, rho2=0.0,
+                               sigma2=cfgc.sigma2)
+
+    gaps = np.zeros((n_seeds, rounds))
+    bound = None
+    for s in range(n_seeds):
+        key = jax.random.PRNGKey(100 + s)
+        w = jnp.zeros((d,))
+        w_prev2 = w
+        btrack = float(F(w) - F_star)
+        bounds_s = []
+        for t in range(rounds):
+            key, kch = jax.random.split(key)
+            # local full-GD step, alpha = 1/L (Theorem 1's rate)
+            grads = jax.vmap(
+                lambda Xi, yi, w=w: 2 * Xi.T @ (Xi @ w - yi) / k
+                + 2 * lam * w)(jnp.asarray(Xs), jnp.asarray(ys))
+            W = w[None, :] - (1.0 / L) * grads                  # (U, d)
+            kg, kn = chan.round_keys(kch, t)
+            h_w = chan.sample_gains(kg, (U,), cfgc)
+            h = jnp.broadcast_to(h_w[:, None], (U, d))
+            noise = chan.sample_noise(kn, (d,), cfgc)
+            # Theorem 1 models the UNCLIPPED policy (6); Assumption 4's
+            # eta must genuinely bound |w_{i,t} - w_{t-1}| (eq. 40) or the
+            # power constraint binds and the bound is transiently violated
+            # (measurably so with the |w_{t-1}-w_{t-2}| proxy at w_0 = 0,
+            # where every entry clips for ~5 rounds — see EXPERIMENTS.md).
+            # The simulation can evaluate the true eta, which the theorem
+            # permits; the proxy remains the deployable protocol choice.
+            eta = jnp.max(jnp.abs(W - w[None, :]), axis=0) + 1e-9
+            sol = inflota.solve(h, k_i, jnp.abs(w), eta,
+                                jnp.full((U,), cfgc.p_max), consts,
+                                Case.GD_CONVEX, 0.0)
+            what, _ = agg.ota_aggregate(W, h, sol.beta, sol.b, k_i,
+                                        cfgc.p_max, noise)
+            den = agg.denominator(sol.beta, k_i, sol.b)
+            w_new = jnp.where(den > 1e-12, what, w)
+            # Lemma-1 recursion with the realized (beta, b)
+            a_t = float(A_t(sol.beta, k_i, consts))
+            b_t = float(B_t(sol.beta, sol.b, k_i, consts))
+            btrack = b_t + a_t * btrack
+            bounds_s.append(btrack)
+            w_prev2 = w
+            w = w_new
+            gaps[s, t] = F(w) - F_star
+        bound = np.asarray(bounds_s)   # identical policy/channel per seed?
+        # (channel differs per seed; keep the max bound across seeds)
+        if s == 0:
+            bmax = bound
+        else:
+            bmax = np.maximum(bmax, bound)
+
+    mean_gap = gaps.mean(axis=0)
+    holds = bool(np.all(mean_gap <= bmax * 1.05 + 1e-6))
+    tight = float(bmax[-1] / max(mean_gap[-1], 1e-12))
+    return [
+        {"name": "lemma1_bound", "metric": "empirical<=bound",
+         "value": int(holds)},
+        {"name": "lemma1_bound", "metric": "final_gap",
+         "value": f"{mean_gap[-1]:.3e}"},
+        {"name": "lemma1_bound", "metric": "final_bound",
+         "value": f"{bmax[-1]:.3e}"},
+        {"name": "lemma1_bound", "metric": "bound/empirical",
+         "value": f"{tight:.1f}"},
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's core loop in ~60 lines of public API.
+
+Trains the paper's linear-regression task (Sec. VI-A) with federated
+learning over a simulated wireless MAC, comparing the three policies:
+Perfect aggregation / INFLOTA (the paper's method) / Random.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case
+from repro.data import partition, synthetic
+from repro.fl.models import linreg_model
+from repro.fl.trainer import FLConfig, FLTrainer
+
+U, ROUNDS = 20, 120
+
+# 1. federated data: 20 workers, K_i ~ round(U[25, 35]) samples each
+counts = partition.sample_counts(U, k_bar=30, seed=0)
+x, y = synthetic.linreg(int(np.sum(counts)) + 500, seed=0)
+workers = partition.partition(x, y, counts, seed=0)
+test = (x[-500:], y[-500:])
+
+# 2. the task (convex case: 1-neuron two-layer net, MSE loss)
+task = linreg_model()
+
+# 3. run each policy over the same channel realization
+for policy in ("perfect", "inflota", "random"):
+    cfg = FLConfig(
+        rounds=ROUNDS,
+        lr=0.1,   # paper uses 0.01 with many more rounds; same fixed point
+        policy=policy,
+        case=Case.GD_CONVEX,
+        channel=ChannelConfig(sigma2=1e-4, p_max=10.0),   # SNR = 5 dB
+        constants=LearningConstants(sigma2=1e-4),
+        seed=0,
+    )
+    hist = FLTrainer(task, workers, cfg).run(
+        key=jax.random.PRNGKey(0), eval_data=test)
+    p = hist["params"]
+    slope = float(p["w1"][0] * p["w2"][0])
+    icept = float(p["b1"][0] * p["w2"][0])
+    print(f"{policy:8s}  final MSE {hist['mse'][-1]:.4f}   "
+          f"fit y = {slope:+.3f} x {icept:+.3f}   (target y = -2 x + 1)")

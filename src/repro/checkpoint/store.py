@@ -1,0 +1,127 @@
+"""Dependency-free pytree checkpointing (numpy .npz + JSON treedef).
+
+Layout:  <dir>/step_<n>/
+             arrays.npz      flat leaves, keyed by index
+             meta.json       treedef repr, leaf paths, dtypes, step, extra
+
+Works for params, optimizer states, and FL trainer state.  Sharded arrays
+are gathered to host before save (fine at the scales this container runs;
+a production TPU deployment would swap in tensorstore/orbax behind the
+same API).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _to_numpy_safe(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """npz cannot hold bf16/f8; view those as raw bytes + dtype tag."""
+    if arr.dtype.kind in "biufc":
+        return arr, str(arr.dtype)
+    return arr.view(np.uint8), str(arr.dtype)
+
+
+def _from_numpy_safe(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    try:
+        dt = np.dtype(dtype_str)
+    except TypeError:
+        dt = np.dtype(getattr(ml_dtypes, dtype_str))
+    if arr.dtype == dt:
+        return arr
+    return arr.view(dt)
+
+
+def _paths(tree) -> Tuple[list, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    return names, treedef
+
+
+def save(directory: str, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None,
+         keep: Optional[int] = None) -> str:
+    """Write a checkpoint; returns its path. Atomic via tmp-dir rename."""
+    names, _ = _paths(tree)
+    leaves = jax.tree.leaves(tree)
+    out = os.path.join(directory, f"step_{step}")
+    tmp = out + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a, dt = _to_numpy_safe(np.asarray(jax.device_get(x)))
+        arrays[f"a{i}"] = a
+        dtypes.append(dt)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {
+        "step": step,
+        "names": names,
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(out):
+        shutil.rmtree(out)
+    os.rename(tmp, out)
+    if keep is not None:
+        _gc(directory, keep)
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := _STEP_RE.search(d))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, tree_like: Any,
+            step: Optional[int] = None) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure (and shardings) of ``tree_like``.
+
+    Returns (tree, meta['extra']).  Leaves are device_put to the sharding
+    of the corresponding ``tree_like`` leaf when it has one.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names, treedef = _paths(tree_like)
+    if names != meta["names"]:
+        raise ValueError(
+            f"checkpoint structure mismatch: {set(meta['names']) ^ set(names)}")
+    like_leaves = jax.tree.leaves(tree_like)
+    out = []
+    for i, like in enumerate(like_leaves):
+        arr = _from_numpy_safe(data[f"a{i}"], meta["dtypes"][i])
+        sharding = getattr(like, "sharding", None)
+        if sharding is not None and hasattr(like, "shape"):
+            out.append(jax.device_put(arr.astype(like.dtype), sharding))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), meta.get("extra", {})
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(int(m.group(1)) for d in os.listdir(directory)
+                   if (m := _STEP_RE.search(d)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"),
+                      ignore_errors=True)

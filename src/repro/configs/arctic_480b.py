@@ -1,0 +1,24 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base] — dense-MoE hybrid.
+
+35 layers, d_model=7168, 56 heads (GQA kv=8), vocab=32000.  MoE with 128
+experts, top-2 routing, expert d_ff=4864, PLUS a parallel dense residual
+MLP on every layer (Arctic's "dense-MoE hybrid" design).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    head_dim=128,
+    layer_pattern=("g",),
+    n_experts=128,
+    top_k=2,
+    moe_dense_ff=4864,
+)

@@ -1,0 +1,21 @@
+"""codeqwen1.5-7b [hf:Qwen/CodeQwen1.5-7B] — dense, qwen1.5 architecture.
+
+32 layers, d_model=4096, 32 heads (kv=32, i.e. full multi-head),
+d_ff=13440, vocab=92416, QKV biases.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab_size=92416,
+    head_dim=128,
+    qkv_bias=True,
+    layer_pattern=("g",),
+)

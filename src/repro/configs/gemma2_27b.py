@@ -1,0 +1,31 @@
+"""gemma2-27b [arXiv:2408.00118] — dense, local/global alternating.
+
+46 layers alternating sliding-window(4096) and global attention,
+d_model=4608, 32 heads (GQA kv=16, head_dim=128), d_ff=36864 (GeGLU-style
+gated FFN), vocab=256000, attention logit softcap 50, final logit softcap
+30, sqrt(d) embedding scaling.
+
+``long_context_window``: for the `long_500k` serving shape we run the
+documented sliding-window-only variant (global layers fall back to a 4096
+window) — see DESIGN.md §Arch-applicability.  The flag is applied by the
+launcher only for that shape.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    d_ff=36864,
+    vocab_size=256000,
+    head_dim=128,
+    layer_pattern=("l", "g"),
+    window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    emb_scale=True,
+)

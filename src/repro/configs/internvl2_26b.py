@@ -1,0 +1,24 @@
+"""internvl2-26b [arXiv:2404.16821] — VLM: InternViT (stub) + InternLM2-20B.
+
+The language model: 48 layers, d_model=6144, 48 heads (GQA kv=8,
+head_dim=128), d_ff=16384, vocab=92553.  The InternViT-6B vision encoder
+is a stub per the brief: `patches` inputs are precomputed (B, 1024, 6144)
+patch embeddings; the (implemented) MLP projector maps them into the LM
+embedding space and they are prepended to the text tokens.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    head_dim=128,
+    layer_pattern=("g",),
+    prefix_tokens=1024,
+)

@@ -1,0 +1,21 @@
+"""qwen1.5-110b [hf:Qwen/Qwen1.5-0.5B arch family] — dense GQA + QKV bias.
+
+80 layers, d_model=8192, 64 heads (GQA kv=8, head_dim=128), d_ff=49152,
+vocab=152064, biases on Q/K/V projections (Qwen1.5 signature).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    layer_pattern=("g",),
+)

@@ -1,0 +1,22 @@
+"""qwen2-0.5b [arXiv:2407.10671] — small dense GQA with QKV bias.
+
+24 layers, d_model=896, 14 heads (GQA kv=2, head_dim=64), d_ff=4864,
+vocab=151936, tied embeddings.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    head_dim=64,
+    qkv_bias=True,
+    tie_embeddings=True,
+    layer_pattern=("g",),
+)

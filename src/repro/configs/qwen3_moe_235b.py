@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-30B-A3B family] — fine-grained MoE.
+
+94 layers, d_model=4096, 64 heads (GQA kv=4, head_dim=128), 128 experts
+with top-8 routing and small expert d_ff=1536 (fine-grained experts),
+vocab=151936.  No dense residual branch (pure MoE FFN on every layer).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151936,
+    head_dim=128,
+    layer_pattern=("g",),
+    n_experts=128,
+    top_k=8,
+)

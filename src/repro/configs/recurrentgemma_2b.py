@@ -1,0 +1,25 @@
+"""recurrentgemma-2b "Griffin" [arXiv:2402.19427] — hybrid RG-LRU + local attn.
+
+26 layers in the repeating pattern (recurrent, recurrent, local-attention)
+— 2:1 as in the Griffin paper — d_model=2560, 10 heads (MQA kv=1,
+head_dim=256), d_ff=7680, vocab=256000, local window 2048, sqrt(d)
+embedding scale.  26 = 8 full (r,r,l) groups + an (r,r) tail.
+Bounded window + O(1) recurrent state => `long_500k` runs.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256000,
+    head_dim=256,
+    layer_pattern=("r", "r", "l"),
+    window=2048,
+    emb_scale=True,
+)

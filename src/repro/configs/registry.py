@@ -1,0 +1,124 @@
+"""Architecture registry: lookup, reduced smoke-test variants, input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (arctic_480b, codeqwen15_7b, gemma2_27b,
+                           internvl2_26b, qwen2_05b, qwen3_moe_235b,
+                           qwen15_110b, recurrentgemma_2b, rwkv6_7b,
+                           whisper_base)
+from repro.models.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+ARCHS: Dict[str, ModelConfig] = {
+    "whisper-base": whisper_base.CONFIG,
+    "arctic-480b": arctic_480b.CONFIG,
+    "gemma2-27b": gemma2_27b.CONFIG,
+    "qwen1.5-110b": qwen15_110b.CONFIG,
+    "rwkv6-7b": rwkv6_7b.CONFIG,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b.CONFIG,
+    "codeqwen1.5-7b": codeqwen15_7b.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+    "qwen2-0.5b": qwen2_05b.CONFIG,
+    "internvl2-26b": internvl2_26b.CONFIG,
+}
+
+# (arch, shape) pairs skipped in serving, with the DESIGN.md reason.
+SKIPS = {
+    ("whisper-base", "long_500k"): "full decoder attention (quadratic-cache)",
+    ("arctic-480b", "long_500k"): "full attention",
+    ("qwen1.5-110b", "long_500k"): "full attention",
+    ("qwen3-moe-235b-a22b", "long_500k"): "full attention",
+    ("codeqwen1.5-7b", "long_500k"): "full attention",
+    ("qwen2-0.5b", "long_500k"): "full attention",
+    ("internvl2-26b", "long_500k"): "full attention",
+    # gemma2-27b long_500k RUNS via the sliding-window-only variant.
+}
+
+
+def get_config(name: str, shape: str | None = None) -> ModelConfig:
+    cfg = ARCHS[name]
+    if shape == "long_500k" and cfg.name == "gemma2-27b":
+        # documented variant: global layers fall back to SW-4096
+        cfg = dataclasses.replace(cfg, long_context_window=cfg.window)
+    return cfg
+
+
+def applicable(name: str, shape: str) -> bool:
+    if (name, shape) in SKIPS:
+        return False
+    return True
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant of the same family: 2 pattern-groups of layers,
+    d_model <= 512, <= 4 experts, tiny vocab/frontends."""
+    plen = len(cfg.layer_pattern)
+    d = 128
+    n_heads = max(2, min(4, cfg.n_heads))
+    if cfg.family == "ssm":
+        n_heads = 1
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=2 * plen + (1 if cfg.n_layers % plen else 0),
+        d_model=d,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=d // n_heads if cfg.family != "hybrid" else 64,
+        d_ff=256,
+        vocab_size=997,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        moe_dense_ff=128 if cfg.moe_dense_ff else 0,
+        window=16 if cfg.window else None,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_seq=24 if cfg.encoder_seq else 0,
+        prefix_tokens=8 if cfg.prefix_tokens else 0,
+        rwkv_head_dim=32,
+        long_context_window=16 if cfg.long_context_window else None,
+    )
+
+
+# ------------------------------------------------------------------ inputs
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """Logical input shapes for (arch, input-shape), as plain tuples."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        text = S - cfg.prefix_tokens if cfg.family == "vlm" else S
+        out["tokens"] = (B, text)
+        if shape.kind == "train":
+            out["labels"] = (B, text)
+        if cfg.family == "encdec":
+            out["frames"] = (B, cfg.encoder_seq, cfg.d_model)
+        if cfg.family == "vlm":
+            out["patches"] = (B, cfg.prefix_tokens, cfg.d_model)
+    else:  # decode
+        out["tokens"] = (B, 1)
+    return out
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None,
+               dtype=jnp.float32):
+    """Concrete random batch (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = batch_shapes(cfg, shape)
+    rng = np.random.default_rng(0)
+    batch = {}
+    for name, shp in shapes.items():
+        if name in ("tokens", "labels"):
+            batch[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, shp), jnp.int32)
+        else:
+            batch[name] = jnp.asarray(rng.normal(size=shp) * 0.1, dtype)
+    return batch

@@ -1,0 +1,22 @@
+"""rwkv6-7b "Finch" [arXiv:2404.05892] — attention-free SSM.
+
+32 layers, d_model=4096 (64 heads of 64 for the WKV state), channel-mix
+d_ff=14336, vocab=65536.  Data-dependent per-channel decay (the Finch
+hallmark) via a tanh LoRA on the shifted input.  O(1)-state decode makes
+the `long_500k` shape run with constant memory.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=1,            # attention-free; unused
+    n_kv_heads=1,
+    d_ff=14336,
+    vocab_size=65536,
+    layer_pattern=("s",),
+    rwkv_head_dim=64,
+)

@@ -1,0 +1,27 @@
+"""whisper-base [arXiv:2212.04356] — encoder-decoder, audio.
+
+6 encoder + 6 decoder layers, d_model=512, 8 heads (kv=8), d_ff=2048,
+vocab=51865.  The mel-spectrogram + conv frontend is a stub: `frames`
+inputs are precomputed (B, 1500, 512) frame embeddings (1500 = 30 s at
+50 Hz after the conv stride-2).  Whisper uses biases on attention projs.
+Adaptation note (DESIGN.md): rotary positions replace Whisper's learned
+absolute embeddings in the decoder; the encoder uses sinusoidal positions.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    head_dim=64,
+    qkv_bias=True,
+    layer_pattern=("g",),
+    encoder_layers=6,
+    encoder_seq=1500,
+)

@@ -1,0 +1,23 @@
+"""Core of the paper's contribution: analog-aggregation FL + INFLOTA.
+
+Public surface:
+  channel      — Rayleigh/AWGN channel model (paper Sec. VI setup)
+  power        — power policy (6), constraint (7), clipping (Alg. 1 l.5)
+  aggregation  — OTA MAC forward (8) + PS post-processing (9)
+  convergence  — Theorems 1-3, Lemmas 1-2, Propositions 1-2
+  objectives   — per-entry gap objectives R_t (35)-(37)
+  inflota      — Theorem-4 reduced search space + P4 line search
+  selection    — round policies (INFLOTA / Random / AllWorkers)
+"""
+
+from repro.core.channel import ChannelConfig, round_keys, sample_gains, sample_noise
+from repro.core.convergence import LearningConstants
+from repro.core.inflota import InflotaSolution, solve, solve_bucketed
+from repro.core.objectives import Case
+from repro.core.selection import AllWorkersPolicy, InflotaPolicy, RandomPolicy
+
+__all__ = [
+    "ChannelConfig", "round_keys", "sample_gains", "sample_noise",
+    "LearningConstants", "InflotaSolution", "solve", "solve_bucketed",
+    "Case", "AllWorkersPolicy", "InflotaPolicy", "RandomPolicy",
+]

@@ -1,0 +1,72 @@
+"""Analog (over-the-air) aggregation — paper eqs. (8), (9).
+
+Dense simulation:  all U workers' parameter vectors live in a (U, D) array;
+the MAC superposition is an explicit sum over the worker axis.  This is the
+paper-faithful path used for the Sec. VI experiments and as the oracle for
+the Pallas kernel and the distributed (psum-based) path.
+
+Receive model (8):   y = sum_i  tx_i * h_i + z,   tx_i = p_i ⊙ w_i (clipped)
+Post-process (9):    w_hat = y / (sum_i K_i beta_i b)
+
+Note on (8): with the ideal policy (6), tx_i * h_i = beta_i K_i b w_i exactly;
+with the Algorithm-1 clipping the product deviates for entries that hit the
+power limit — we model that faithfully by multiplying the *clipped* transmit
+signal by h.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import power as power_lib
+
+_EPS = 1e-12
+
+
+def denominator(beta, k_i, b):
+    """(sum_i K_i beta_i ⊙ b) per entry — the PS descaling factor."""
+    k_i = jnp.asarray(k_i)
+    if k_i.ndim == 1 and jnp.ndim(beta) == 2:
+        k_i = k_i[:, None]
+    return jnp.sum(k_i * beta, axis=0) * b
+
+
+def ota_aggregate(w, h, beta, b, k_i, p_max, noise,
+                  clip: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full OTA round: transmit (clipped), superpose, add AWGN, descale.
+
+    Args:
+      w:     (U, D) local parameter (or update) vectors.
+      h:     (U, D) channel gains for this round.
+      beta:  (U, D) or (U,) selection indicators in {0, 1}.
+      b:     (D,) or scalar power scaling factor.
+      k_i:   (U,) local dataset sizes.
+      p_max: (U,) or scalar per-worker power budgets.
+      noise: (D,) AWGN realization z_t (already scaled by sigma).
+      clip:  apply the Algorithm-1 bounding step (True) or assume the
+             unclipped policy (6) (False; used in analysis/tests).
+
+    Returns:
+      (w_hat, y): the PS estimate (D,) and the raw received signal (D,).
+    """
+    beta = jnp.broadcast_to(
+        beta[:, None] if jnp.ndim(beta) == 1 else beta, w.shape)
+    if clip:
+        tx = power_lib.tx_signal(w, beta, k_i, b, h, p_max)
+    else:
+        tx = power_lib.tx_signal_unclipped(w, beta, k_i, b, h)
+    y = jnp.sum(tx * h, axis=0) + noise
+    den = denominator(beta, k_i, b)
+    w_hat = y / jnp.maximum(den, _EPS)
+    # Entries with no selected worker carry no information; the PS keeps the
+    # previous value upstream (trainer responsibility).  Here flag with 0.
+    w_hat = jnp.where(den > _EPS, w_hat, 0.0)
+    return w_hat, y
+
+
+def fedavg(w, k_i):
+    """Error-free weighted average, eq. (5) — the 'Perfect aggregation' oracle."""
+    k_i = jnp.asarray(k_i, dtype=w.dtype)
+    return jnp.sum(k_i[:, None] * w, axis=0) / jnp.sum(k_i)

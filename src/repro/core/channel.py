@@ -1,0 +1,67 @@
+"""Wireless channel model for FL over the air.
+
+The paper (Sec. VI) generates the channel gain ``h_{i,t}`` between worker i
+and the PS from "an exponential distribution with unit mean" (the power gain
+of a Rayleigh-fading link) and assumes the CSI is perfectly known at the PS
+and constant within each round.  Receiver noise is AWGN with variance
+``sigma2``.
+
+We implement exactly that, plus an optional true Rayleigh-amplitude mode
+(``amplitude=True`` draws |h| Rayleigh-distributed with E[|h|^2]=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Static description of the wireless uplink ensemble.
+
+    Attributes:
+      sigma2:     AWGN variance at the PS receiver (paper: 1e-4 mW).
+      p_max:      per-worker maximum transmit power (paper: 10 mW, equal for
+                  all workers; per-worker vectors are supported downstream).
+      amplitude:  if True sample |h| from a Rayleigh amplitude distribution
+                  (E[h^2] = 1); if False (paper default) sample the gain h
+                  itself from Exp(1).
+      h_floor:    numerical floor on the channel gain to keep 1/h bounded.
+    """
+
+    sigma2: float = 1e-4
+    p_max: float = 10.0
+    amplitude: bool = False
+    h_floor: float = 1e-3
+
+
+def sample_gains(key: jax.Array, shape: Tuple[int, ...],
+                 cfg: ChannelConfig) -> jax.Array:
+    """Draw per-(worker, entry) channel gains h for one FL round."""
+    if cfg.amplitude:
+        # Rayleigh amplitude with unit mean-square: sqrt(Exp(1)).
+        g = jnp.sqrt(jax.random.exponential(key, shape))
+    else:
+        # Paper Sec. VI: h ~ Exp(1), unit mean.
+        g = jax.random.exponential(key, shape)
+    return jnp.maximum(g, cfg.h_floor)
+
+
+def sample_noise(key: jax.Array, shape: Tuple[int, ...],
+                 cfg: ChannelConfig) -> jax.Array:
+    """AWGN z_t at the PS receiver (real-valued analog baseband)."""
+    return jnp.sqrt(cfg.sigma2) * jax.random.normal(key, shape)
+
+
+def round_keys(key: jax.Array, t: jax.Array | int) -> Tuple[jax.Array, jax.Array]:
+    """Per-round (gain, noise) keys derived from a root key and round index.
+
+    Sharing the round index across data-parallel replicas keeps the channel
+    realization identical everywhere, which models the single physical MAC.
+    """
+    k = jax.random.fold_in(key, t)
+    return jax.random.split(k, 2)

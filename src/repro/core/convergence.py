@@ -1,0 +1,149 @@
+"""Closed-form convergence terms for FL over the air (Theorems 1-3).
+
+These expressions both (a) drive the joint optimization (via objectives.py)
+and (b) let tests/benchmarks check the theory against simulation.
+
+Notation (paper):
+  U        number of workers;  K_i local sample counts;  K = sum K_i
+  D        model dimension;    beta (U, D) selection;    b (D,) power scale
+  L, mu    smoothness / strong-convexity constants
+  rho1, rho2   bounded-gradient constants (Assumption 3)
+  sigma2   AWGN variance
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.aggregation import denominator
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class LearningConstants:
+    L: float = 1.0
+    mu: float = 0.5
+    rho1: float = 1.0
+    rho2: float = 0.01
+    sigma2: float = 1e-4
+
+
+def _sampling_ratio(beta, k_i):
+    """sum_d ( K / sum_i K_i beta_i^d  - 1 )  — the selection penalty."""
+    k_i = jnp.asarray(k_i)
+    K = jnp.sum(k_i)
+    per_d = jnp.sum(k_i[:, None] * beta, axis=0)
+    return jnp.sum(K / jnp.maximum(per_d, _EPS) - 1.0)
+
+
+def _noise_norm2(beta, k_i, b):
+    """|| (sum_i K_i beta_i ⊙ b)^{⊙-1} ||^2  over entries."""
+    den = denominator(beta, k_i, b)
+    return jnp.sum(1.0 / jnp.maximum(den, _EPS) ** 2)
+
+
+def A_t(beta, k_i, c: LearningConstants):
+    """Theorem 1, eq. (14): per-round contraction factor (GD, convex)."""
+    return 1.0 - c.mu / c.L + c.rho2 * _sampling_ratio(beta, k_i)
+
+
+def B_t(beta, b, k_i, c: LearningConstants):
+    """Theorem 1, eq. (15): per-round additive gap (GD)."""
+    return (c.rho1 / (2 * c.L) * _sampling_ratio(beta, k_i)
+            + _noise_norm2(beta, k_i, b) * c.L * c.sigma2 / 2)
+
+
+def gap_recursion(a_seq, b_seq, gap0):
+    """Lemma 1, eq. (16): cumulative expected gap after T rounds.
+
+    a_seq, b_seq: (T,) arrays of A_t, B_t for t = 1..T.  gap0 is
+    E[F(w_0) - F(w*)].  Returns the (T,) trajectory of upper bounds.
+    """
+    a_seq = jnp.asarray(a_seq)
+    b_seq = jnp.asarray(b_seq)
+
+    def step(carry, ab):
+        a, b = ab
+        nxt = b + a * carry
+        return nxt, nxt
+
+    import jax
+    _, traj = jax.lax.scan(step, jnp.asarray(gap0, dtype=jnp.result_type(
+        a_seq.dtype, b_seq.dtype)), (a_seq, b_seq))
+    return traj
+
+
+def ideal_rate(t, gap0, c: LearningConstants):
+    """Lemma 2, eq. (21): error-free bound (1 - mu/L)^t * gap0."""
+    return (1.0 - c.mu / c.L) ** t * gap0
+
+
+def rho2_limit_gd(k_i, D, c: LearningConstants):
+    """Proposition 1, eq. (18): sufficient rho2 < mu / ((K/K_min - 1) D L)."""
+    k_i = jnp.asarray(k_i, dtype=jnp.float32)
+    K = jnp.sum(k_i)
+    k_min = jnp.min(k_i)
+    return c.mu / ((K / k_min - 1.0) * D * c.L)
+
+
+def rho2_limit_sgd(U, K, K_b, D, c: LearningConstants):
+    """Proposition 2 — we use the proof's eq. (31) form, whose leading '1'
+    was dropped by a typo in the main-text eq. (29)."""
+    term = (1.0 - 2.0 * U * K_b / K + (U * K_b / K) ** 2
+            + D * U - 2.0 * D * U * K_b / K + D * (U * K_b / K) ** 2)
+    return c.mu / (term * c.L)
+
+
+# ---------------------------------------------------------------- SGD (Thm 3)
+
+def _sgd_sampling_ratio(beta, k_i, K_b):
+    """The bracketed sampling term shared by (26)/(27).
+
+    sum_d ( ((U Kb)^2 - 2 K (U Kb)) / K^2  +  (U Kb) / sum_i Kb beta_i^d )
+      + ( sum_i (K_i - Kb) )^2 / K^2
+    """
+    k_i = jnp.asarray(k_i)
+    U = k_i.shape[0]
+    K = jnp.sum(k_i)
+    ukb = U * K_b
+    per_d = jnp.sum(K_b * beta, axis=0)
+    D = beta.shape[1]
+    s = (D * (ukb**2 - 2.0 * K * ukb) / K**2
+         + jnp.sum(ukb / jnp.maximum(per_d, _EPS)))
+    s = s + (jnp.sum(k_i - K_b)) ** 2 / K**2
+    return s
+
+
+def A_t_sgd(beta, k_i, K_b, c: LearningConstants):
+    """Theorem 3, eq. (26)."""
+    return 1.0 - c.mu / c.L + c.rho2 * _sgd_sampling_ratio(beta, k_i, K_b)
+
+
+def B_t_sgd(beta, b, k_i, K_b, c: LearningConstants):
+    """Theorem 3, eq. (27).
+
+    Note: the main-text (27) and appendix (79) disagree on the power of the
+    (sum_i K_b) factor; we follow the appendix derivation (75), which is also
+    what makes Remark 1 (K_b = K_i  =>  Theorem 3 == Theorem 1) hold exactly.
+    The SGD transmit policy substitutes K_b for K_i (paper note under (38b)),
+    so the noise descale norm uses K_b as well, matching eq. (72).
+    """
+    k_b_vec = jnp.full((jnp.asarray(k_i).shape[0],), K_b,
+                       dtype=jnp.result_type(jnp.asarray(k_i).dtype, float))
+    return (c.rho1 / (2 * c.L) * _sgd_sampling_ratio(beta, k_i, K_b)
+            + _noise_norm2(beta, k_b_vec, b) * c.L * c.sigma2 / 2)
+
+
+# ---------------------------------------------------------- non-convex (Thm 2)
+
+def nonconvex_stationarity_bound(b_seq_sum, T, gap0, k_i, D,
+                                 c: LearningConstants):
+    """Theorem 2, eq. (22): bound on (1/T) sum_t ||grad F(w_{t-1})||^2."""
+    k_i = jnp.asarray(k_i, dtype=jnp.float32)
+    K = jnp.sum(k_i)
+    k_min = jnp.min(k_i)
+    denom = 1.0 - c.rho2 * D * (K / k_min - 1.0)
+    return (2 * c.L / (T * denom)) * gap0 + (2 * c.L * b_seq_sum) / (T * denom)

@@ -1,0 +1,122 @@
+"""INFLOTA joint worker-selection / power-scaling optimizer.
+
+Implements Theorem 4 + problem P4: for each parameter entry d, the optimal
+power scaling factor b_t lies in the U-point set
+
+    b^(k) = | sqrt(P_k^max) h_k / (K_k (|w_{t-1}| + eta)) |,  k = 1..U   (43)
+
+with the selection vector determined from b by feasibility (eq. 44):
+
+    beta_i(b) = H( P_i^max - | K_i b (|w_{t-1}| + eta) / h_i | )
+
+so P3 reduces to a discrete line search over U candidates per entry.
+
+Everything is vectorized over D entries: the search is an O(D U^2) batch of
+elementwise ops + reductions, jit-friendly, and the exact computation the
+Pallas kernel `repro.kernels.inflota_search` tiles over VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import power as power_lib
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case, case_numerator, r_t
+
+_EPS = 1e-12
+
+
+class InflotaSolution(NamedTuple):
+    b: jax.Array          # (D,) optimal power scaling per entry
+    beta: jax.Array       # (U, D) optimal selection per entry, {0,1}
+    r: jax.Array          # (D,) attained objective value
+
+
+def candidate_b(h, k_i, w_prev_abs, eta, p_max) -> jax.Array:
+    """Eq. (43): the (U, D) matrix of candidate scaling factors."""
+    return power_lib.b_max_per_worker(h, k_i, w_prev_abs, eta, p_max)
+
+
+def beta_of_b(b, h, k_i, w_prev_abs, eta, p_max) -> jax.Array:
+    """Eq. (44): selection implied by a given b.  b: (D,) -> beta: (U, D).
+
+    beta_i = 1  iff  P_i^max - | K_i b (|w|+eta) / h_i |  > 0.  Following the
+    derivation (81) this is equivalent to b <= b_i^max; we use the closed
+    feasibility test with a tolerant >= so the candidate worker k itself is
+    always selected under b = b_k^max (the paper's strict Heaviside excludes
+    the boundary only through floating-point accident).
+    """
+    bmax = candidate_b(h, k_i, w_prev_abs, eta, p_max)    # (U, D)
+    return (b[None, :] <= bmax * (1.0 + 1e-6)).astype(jnp.float32)
+
+
+def solve(h, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
+          case: Case = Case.GD_CONVEX, delta_prev: float = 0.0,
+          K_b: float | None = None) -> InflotaSolution:
+    """P4 line search, vectorized over entries.
+
+    Args:
+      h:           (U, D) channel gains this round.
+      k_i:         (U,) local dataset sizes.
+      w_prev_abs:  (D,) |w_{t-1}| at the PS.
+      eta:         scalar (or (D,)) bounded-update constant (Assumption 4).
+      p_max:       (U,) or scalar power budgets.
+      c:           learning constants (L, mu, rho1, rho2, sigma2).
+      case:        which R_t to minimize (eqs. 35-37).
+      delta_prev:  Delta_{t-1}, treated as a constant during round t.
+      K_b:         mini-batch size for the SGD case.
+
+    Returns InflotaSolution with per-entry optimal (b, beta, R).
+    """
+    h = jnp.asarray(h)
+    U, D = h.shape
+    dt = jnp.result_type(h.dtype, jnp.asarray(w_prev_abs).dtype, float)
+    numer = case_numerator(case, k_i, c, delta_prev, K_b)
+    cand = candidate_b(h, k_i, w_prev_abs, eta, p_max).astype(dt)  # (U, D)
+
+    def eval_candidate(k, best):
+        best_r, best_b, best_beta = best
+        b_k = cand[k]                                     # (D,)
+        beta_k = beta_of_b(b_k, h, k_i, w_prev_abs, eta, p_max).astype(dt)
+        r_k = r_t(beta_k, b_k, k_i, c, numer, K_b=K_b).astype(dt)  # (D,)
+        take = r_k < best_r
+        return (jnp.where(take, r_k, best_r),
+                jnp.where(take, b_k, best_b),
+                jnp.where(take[None, :], beta_k, best_beta))
+
+    init = (jnp.full((D,), jnp.inf, dt),
+            jnp.zeros((D,), dt),
+            jnp.zeros((U, D), dt))
+    best_r, best_b, best_beta = jax.lax.fori_loop(
+        0, U, eval_candidate, init)
+    return InflotaSolution(b=best_b, beta=best_beta, r=best_r)
+
+
+def solve_bucketed(h_workers, k_i, w_prev_abs, eta, p_max,
+                   c: LearningConstants, n_buckets: int,
+                   case: Case = Case.GD_CONVEX, delta_prev: float = 0.0,
+                   K_b: float | None = None) -> InflotaSolution:
+    """Beyond-paper granularity: share one (b, beta) across each bucket of
+    entries.  The per-bucket |w| statistic takes the max over the bucket
+    (conservative: keeps the power constraint (7) valid for every entry in
+    the bucket), and the per-bucket channel gain is the per-worker scalar
+    h_i (one coherent channel per worker per round, the common physical
+    reading).  Reduces the search from O(D U^2) to O(n_buckets U^2) and the
+    b/beta side-information from O(D) to O(n_buckets).
+
+    Args:
+      h_workers: (U,) per-worker channel gains (scalar channel per round).
+    Returns an InflotaSolution over buckets: b (n_buckets,),
+    beta (U, n_buckets).  Use `jnp.repeat` / reshape upstream to expand.
+    """
+    D = w_prev_abs.shape[0]
+    pad = (-D) % n_buckets
+    w_pad = jnp.pad(w_prev_abs, (0, pad))
+    w_stat = jnp.max(jnp.abs(w_pad).reshape(n_buckets, -1), axis=1)
+    h = jnp.broadcast_to(jnp.asarray(h_workers)[:, None],
+                         (h_workers.shape[0], n_buckets))
+    return solve(h, k_i, w_stat, eta, p_max, c, case, delta_prev, K_b)

@@ -1,0 +1,70 @@
+"""Per-entry optimization objectives R_t[d] — paper eqs. (35)-(37).
+
+All three cases share the structure
+
+    R_t[d] = L sigma^2 / (2 (sum_i beta_i K_i b)^2)  +  C / (2 L sum_i K_i beta_i)
+
+with a case-dependent numerator C:
+    GD convex      (35):  C = K rho1 + 2 K L rho2 Delta_{t-1}
+    GD non-convex  (36):  C = K rho1
+    SGD            (37):  C = U (rho1 + 2 L rho2 Delta_{t-1}),  K_i -> K_b
+
+Vectorized over entries: beta has shape (U, D) (or (U,) for one entry),
+b has shape (D,) (or scalar).
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+from repro.core.convergence import LearningConstants
+
+_EPS = 1e-12
+
+
+class Case(enum.Enum):
+    GD_CONVEX = "gd_convex"
+    GD_NONCONVEX = "gd_nonconvex"
+    SGD = "sgd"
+
+
+def case_numerator(case: Case, k_i, c: LearningConstants,
+                   delta_prev: float = 0.0, K_b: float | None = None):
+    """The case-dependent constant C in R_t[d] (same for every entry d)."""
+    k_i = jnp.asarray(k_i, dtype=jnp.float32)
+    K = jnp.sum(k_i)
+    U = k_i.shape[0]
+    if case == Case.GD_CONVEX:
+        return K * c.rho1 + 2.0 * K * c.L * c.rho2 * delta_prev
+    if case == Case.GD_NONCONVEX:
+        return K * c.rho1
+    if case == Case.SGD:
+        return U * (c.rho1 + 2.0 * c.L * c.rho2 * delta_prev)
+    raise ValueError(case)
+
+
+def r_t(beta, b, k_i, c: LearningConstants, numerator,
+        K_b: float | None = None):
+    """R_t per entry.  Returns shape (D,) (or scalar for 1-entry inputs).
+
+    k_eff is K_i for GD and K_b for SGD (paper note under (38b)).
+    """
+    k_i = jnp.asarray(k_i, dtype=jnp.float32)
+    if K_b is not None:
+        k_eff = jnp.full_like(k_i, K_b)
+    else:
+        k_eff = k_i
+    if jnp.ndim(beta) == 1:
+        beta = beta[:, None]
+        squeeze = True
+    else:
+        squeeze = False
+    den = jnp.sum(k_eff[:, None] * beta, axis=0)          # (D,)
+    noise_term = c.L * c.sigma2 / (2.0 * jnp.maximum(den * b, _EPS) ** 2)
+    sample_term = numerator / (2.0 * c.L * jnp.maximum(den, _EPS))
+    out = noise_term + sample_term
+    # An entry with no selected worker yields no update at all: infinite cost.
+    out = jnp.where(den > _EPS, out, jnp.inf)
+    return out[0] if squeeze else out

@@ -1,0 +1,71 @@
+"""Power control policy for analog aggregation (paper eqs. (6), (7)).
+
+Transmit-side policy for worker i, entry d, round t:
+
+    p^d_{i,t} = beta^d_{i,t} * K_i * b^d_t / h^d_{i,t}          (6)
+
+subject to the per-entry max-power constraint
+
+    | p^d_{i,t} * w^d_{i,t} |^2  <=  P_i^max                    (7)
+
+Algorithm 1 (line 5) enforces (7) at transmit time with the bounding step:
+the worker sends  sgn(w) * min(K_i b |w| / h, sqrt(P_max)).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def power_coeff(beta, k_i, b, h):
+    """Eq. (6): per-(worker, entry) power-control coefficient p.
+
+    Shapes broadcast: beta (U, D) or (U,) in {0,1}; k_i (U,) or (U,1);
+    b (D,) or scalar; h (U, D).
+    """
+    k_i = jnp.asarray(k_i)
+    if k_i.ndim == 1 and jnp.ndim(beta) == 2:
+        k_i = k_i[:, None]
+    return beta * k_i * b / h
+
+
+def tx_signal_unclipped(w, beta, k_i, b, h):
+    """What worker i would put on the air for entry d: p * w (pre-clipping)."""
+    return power_coeff(beta, k_i, b, h) * w
+
+
+def tx_signal(w, beta, k_i, b, h, p_max):
+    """Algorithm 1 line 5: sgn(w) * min(K_i b |w| / h, sqrt(P_max)), masked by beta.
+
+    This is the constraint-respecting transmit signal *before* channel gain;
+    the MAC then multiplies by h (see aggregation.py).  p_max broadcasts as
+    (U,) or (U, 1) against (U, D) signals.
+    """
+    p_max = jnp.asarray(p_max)
+    if p_max.ndim == 1 and jnp.ndim(w) == 2:
+        p_max = p_max[:, None]
+    amp = jnp.abs(tx_signal_unclipped(w, beta, k_i, b, h))
+    clipped = jnp.minimum(amp, jnp.sqrt(p_max))
+    return beta * jnp.sign(w) * clipped
+
+
+def power_violation(w, beta, k_i, b, h, p_max):
+    """Max over workers/entries of |p*w|^2 - P_max (<= 0 means feasible)."""
+    p_max = jnp.asarray(p_max)
+    if p_max.ndim == 1 and jnp.ndim(w) == 2:
+        p_max = p_max[:, None]
+    tx = tx_signal(w, beta, k_i, b, h, p_max)
+    return jnp.max(tx**2 - p_max)
+
+
+def b_max_per_worker(h, k_i, w_prev_abs, eta, p_max):
+    """Theorem 4 / eq. (81): largest b acceptable to worker i (per entry).
+
+        b_i^max = sqrt(P_i^max) * h_i / (K_i * (|w_{t-1}| + eta))
+
+    Shapes: h (U, D); k_i (U,); w_prev_abs (D,); eta scalar or (D,);
+    p_max (U,) or scalar.  Returns (U, D).
+    """
+    k_i = jnp.asarray(k_i)[:, None]
+    p_max = jnp.broadcast_to(jnp.asarray(p_max), (h.shape[0],))[:, None]
+    return jnp.abs(jnp.sqrt(p_max) * h / (k_i * (w_prev_abs[None, :] + eta)))

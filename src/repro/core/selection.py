@@ -1,0 +1,70 @@
+"""Round policies: how (b_t, beta_t) are chosen each FL round.
+
+Three policies, matching the paper's Sec. VI comparison:
+  * InflotaPolicy  — the paper's contribution (Algorithm 1).
+  * RandomPolicy   — benchmark: each worker selected w.p. 0.5, b ~ Exp(1).
+  * PerfectPolicy  — 'Perfect aggregation': error-free links, everyone
+                     participates; implemented as exact FedAvg upstream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import inflota
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case
+
+
+class Policy(Protocol):
+    def __call__(self, key: jax.Array, h: jax.Array, k_i: jax.Array,
+                 w_prev_abs: jax.Array, eta, p_max,
+                 delta_prev=0.0) -> Tuple[jax.Array, jax.Array]:
+        """Returns (b (D,), beta (U, D)) for the round."""
+
+
+@dataclasses.dataclass(frozen=True)
+class InflotaPolicy:
+    constants: LearningConstants
+    case: Case = Case.GD_CONVEX
+    K_b: float | None = None
+
+    def __call__(self, key, h, k_i, w_prev_abs, eta, p_max, delta_prev=0.0):
+        sol = inflota.solve(h, k_i, w_prev_abs, eta, p_max, self.constants,
+                            case=self.case, delta_prev=delta_prev,
+                            K_b=self.K_b)
+        return sol.b, sol.beta
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomPolicy:
+    """Paper Sec. VI benchmark: P(select)=0.5 per worker, b ~ Exp(1).
+
+    The same scalar b is used for all entries (the post-processing (9)
+    requires a common b across workers; the benchmark draws it at random).
+    """
+    select_prob: float = 0.5
+
+    def __call__(self, key, h, k_i, w_prev_abs, eta, p_max, delta_prev=0.0):
+        U, D = h.shape
+        kb, ksel = jax.random.split(key)
+        b = jnp.full((D,), jax.random.exponential(kb, ()))
+        beta = jax.random.bernoulli(
+            ksel, self.select_prob, (U,)).astype(jnp.float32)
+        beta = jnp.broadcast_to(beta[:, None], (U, D))
+        return b, beta
+
+
+@dataclasses.dataclass(frozen=True)
+class AllWorkersPolicy:
+    """Everyone selected, fixed b — used for ablations & noise-only studies."""
+    b_value: float = 1.0
+
+    def __call__(self, key, h, k_i, w_prev_abs, eta, p_max, delta_prev=0.0):
+        U, D = h.shape
+        return (jnp.full((D,), self.b_value),
+                jnp.ones((U, D), jnp.float32))

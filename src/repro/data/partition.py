@@ -1,0 +1,31 @@
+"""Federated data partitioning: split a dataset across U workers with
+per-worker sample counts K_i (paper Sec. VI uses K_i ~ round(U[K̄-5, K̄+5]))."""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def sample_counts(U: int, k_bar: int, spread: int = 5,
+                  seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.round(rng.uniform(k_bar - spread, k_bar + spread,
+                                size=U)).astype(int).clip(1)
+
+
+def partition(x: np.ndarray, y: np.ndarray, counts: Sequence[int],
+              seed: int = 0) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """IID partition with the given per-worker counts (with replacement if
+    the dataset is smaller than sum(counts))."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    total = int(np.sum(counts))
+    idx = rng.permutation(n) if total <= n else rng.integers(0, n, total)
+    out, ofs = [], 0
+    for k in counts:
+        sel = idx[ofs:ofs + k]
+        out.append((x[sel], y[sel]))
+        ofs += k
+    return out

@@ -1,0 +1,29 @@
+"""Worker-side computation: local model update (paper eq. (4)).
+
+Full-batch GD by default; mini-batch SGD when ``k_b`` is given (paper
+Sec. IV-C).  One gradient step per round, as in Algorithm 1 line 4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def local_update(task, params, x, y, lr: float, *, key=None,
+                 k_b: int | None = None, steps: int = 1):
+    """Returns the worker's updated local parameters w_i (pytree)."""
+    def one_step(p, k):
+        if k_b is not None:
+            idx = jax.random.choice(k, x.shape[0], (k_b,), replace=False)
+            xb, yb = x[idx], y[idx]
+        else:
+            xb, yb = x, y
+        g = jax.grad(task.loss)(p, xb, yb)
+        return jax.tree.map(lambda w, gg: w - lr * gg, p, g)
+
+    p = params
+    keys = jax.random.split(key, steps) if key is not None else [None] * steps
+    for s in range(steps):
+        p = one_step(p, keys[s])
+    return p

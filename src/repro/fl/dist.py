@@ -1,0 +1,423 @@
+"""Distributed OTA aggregation — the paper's technique on a TPU mesh.
+
+Each shard of the flattened ``('pod', 'data')`` mesh axes plays the role of
+one FL worker with its own fading coefficient.  The wireless-MAC
+superposition (eq. 8) is realized by ``jax.lax.psum`` over those axes; the
+transmit-side power policy (6) + Algorithm-1 clipping happen *before* the
+collective on each worker's own shard, and the PS post-processing (9)
+(descale + AWGN) happens *after* it, identically on every shard.
+
+Usage: ``ota_aggregate_tree`` must be called inside a shard_map region that
+is *manual* over the worker axes (and may stay auto over 'model', so tensor
+parallelism inside the loss is untouched):
+
+    def worker_fn(params, batch):
+        grads = jax.grad(loss)(params, batch)
+        agg, stats = ota_aggregate_tree(grads, key=key, t=step, cfg=ota_cfg,
+                                        axis_names=('pod', 'data'))
+        ...
+    jax.shard_map(worker_fn, mesh=mesh, in_specs=(P(), P(('pod','data'))),
+                  out_specs=..., axis_names={'pod', 'data'})
+
+Granularity (beyond-paper, DESIGN.md §2): the paper optimizes one (b, beta)
+per parameter entry d with per-entry channel gains.  At D ~ 1e9-1e11 that
+doubles aggregation traffic, so the distributed path uses one coherent
+channel gain per worker per round (the common physical reading) and shares
+(b, beta) across each *bucket* of entries ('tensor' = 1 bucket per leaf).
+The |w_{t-1}| + eta statistic of Assumption 4 is replaced by an *observable*
+pmax over workers of the per-bucket |value| maxima — on a TPU mesh this
+collective exists, unlike over a real MAC; recorded as a deviation.
+Set ``stat_mode='fixed'`` for the paper-faithful variant where the caller
+supplies the statistic (e.g. from the previous round).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as chan
+from repro.core import inflota
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class OTAConfig:
+    """Static configuration for the distributed OTA aggregator."""
+
+    channel: ChannelConfig = ChannelConfig()
+    constants: LearningConstants = LearningConstants()
+    policy: str = "inflota"          # inflota | random | perfect
+    granularity: str = "tensor"      # tensor (1 bucket/leaf) | bucket
+    n_buckets: int = 64              # buckets per leaf when granularity=bucket
+    case: Case = Case.GD_NONCONVEX
+    select_prob: float = 0.5         # random-policy selection probability
+    eta: float = 0.0                 # Assumption-4 additive slack
+    stat_mode: str = "pmax"          # pmax (observable) | fixed (caller-supplied)
+    k_i: float = 1.0                 # per-worker sample weight (equal shards)
+    compute_dtype: str = "float32"   # OTA transmit/sum dtype ("bfloat16"
+    #   halves the cross-worker collective payload; the analog channel is
+    #   itself noisy, so σ-scale quantization error is usually dominated —
+    #   beyond-paper, EXPERIMENTS §Perf)
+
+
+# ----------------------------------------------------------------- topology
+
+def n_workers(axis_names: Sequence[str]) -> int:
+    u = 1
+    for a in axis_names:
+        u *= jax.lax.psum(1, a)
+    return u
+
+
+def worker_index(axis_names: Sequence[str]):
+    """Flattened worker index over the (manual) worker axes, row-major."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _psum(x, axis_names: Sequence[str]):
+    return jax.lax.psum(x, tuple(axis_names)) if axis_names else x
+
+
+def _pmax(x, axis_names: Sequence[str]):
+    if not axis_names:
+        return x
+    return -jax.lax.pmin(-x, tuple(axis_names))
+
+
+# ------------------------------------------------------------------ buckets
+#
+# Buckets partition the LEADING dim of each leaf (layer-group / expert dim
+# for stacked weights).  Everything stays in the leaf's original shape:
+# flattening a (groups, experts, d, f) leaf to 1-D would destroy its
+# (model, data) sharding and force XLA to materialize the full tensor on
+# every device (observed: 625 GB replicated f32/u32 copies on arctic-480b).
+
+def _n_buckets(nb_req: int, shape) -> int:
+    return max(1, min(nb_req, shape[0] if len(shape) else 1))
+
+
+def _leaf_buckets(v_abs: jax.Array, nb: int) -> jax.Array:
+    """Per-bucket max |v| over leading-dim slices. v_abs: (*shape).
+
+    Only the leading dim is reshaped (sharding of trailing dims survives);
+    the reduction runs over the original trailing axes.
+    """
+    if v_abs.ndim == 0:
+        return v_abs[None]
+    L = v_abs.shape[0]
+    pad = (-L) % nb
+    vp = jnp.pad(v_abs, ((0, pad),) + ((0, 0),) * (v_abs.ndim - 1))
+    vp = vp.reshape(nb, -1, *v_abs.shape[1:])
+    return jnp.max(vp, axis=tuple(range(1, vp.ndim)))
+
+
+def _expand(per_bucket: jax.Array, nb: int, shape) -> jax.Array:
+    """Broadcast per-bucket values back over leading-dim slices.
+
+    Returns an array broadcastable against a (*shape) leaf (leading dim
+    expanded, trailing dims size-1).
+    """
+    if not shape:
+        return per_bucket[0]
+    L = shape[0]
+    chunk = (L + nb - 1) // nb
+    lead = jnp.repeat(per_bucket, chunk)[:L]
+    return lead.reshape((L,) + (1,) * (len(shape) - 1))
+
+
+# ------------------------------------------------ sharding-friendly noise
+
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+_PRIMES = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+           0x165667B1, 0xD3A2646C, 0xFD7046C5, 0xB55A4F09)
+
+
+def _mix(x):
+    x = (x ^ (x >> 15)) * _M1
+    x = (x ^ (x >> 13)) * _M2
+    return x ^ (x >> 16)
+
+
+def _iota_normal(key, shape):
+    """N(0,1) noise as a pure elementwise function of the global index.
+
+    ``jax.random.normal`` from a replicated key lowers to an unshardable
+    rng-bit-generator — on a 625 GB leaf that materializes the full tensor
+    on every device.  Hashing per-dim iotas keeps generation local to each
+    shard while staying identical for a given (key, global position), so
+    every device computes the same AWGN realization on its own shard.
+    """
+    kd = jnp.asarray(key).astype(jnp.uint32)
+    acc = jnp.full(shape, kd.reshape(-1)[0], jnp.uint32)
+    acc2 = jnp.full(shape, kd.reshape(-1)[-1] ^ jnp.uint32(0x2545F491),
+                    jnp.uint32)
+    for d in range(len(shape)):
+        i = jax.lax.broadcasted_iota(jnp.uint32, shape, d)
+        p = jnp.uint32(_PRIMES[d % len(_PRIMES)])
+        acc = _mix(acc ^ (i * p))
+        acc2 = _mix(acc2 ^ (i * p + jnp.uint32(0x632BE59B)))
+    u1 = (acc >> 8).astype(jnp.float32) * (1.0 / (1 << 24)) + 1e-7
+    u2 = (acc2 >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+
+
+def sample_noise_sharded(key, shape, cfg: ChannelConfig):
+    """AWGN z_t with per-element stateless generation (see _iota_normal)."""
+    if cfg.sigma2 == 0.0:
+        return jnp.zeros(shape, jnp.float32)
+    return jnp.sqrt(cfg.sigma2).astype(jnp.float32) * _iota_normal(
+        key, shape)
+
+
+# ------------------------------------------------------------------- policy
+
+def _solve_policy(cfg: OTAConfig, h_workers, w_stat, k_i, key,
+                  delta_prev) -> Tuple[jax.Array, jax.Array]:
+    """Replicated (b, beta) per bucket.  h_workers (U,), w_stat (nb,)."""
+    U = h_workers.shape[0]
+    nb = w_stat.shape[0]
+    if cfg.policy == "perfect":
+        return jnp.ones((nb,)), jnp.ones((U, nb))
+    if cfg.policy == "random":
+        kb, ks = jax.random.split(key)
+        b = jax.random.exponential(kb, ())
+        beta = (jax.random.uniform(ks, (U,)) < cfg.select_prob).astype(
+            jnp.float32)
+        return jnp.full((nb,), b), jnp.broadcast_to(beta[:, None], (U, nb))
+    if cfg.policy == "inflota":
+        h = jnp.broadcast_to(h_workers[:, None], (U, nb))
+        sol = inflota.solve(h, k_i, w_stat, cfg.eta, cfg.channel.p_max,
+                            cfg.constants, cfg.case, delta_prev)
+        return sol.b, sol.beta
+    raise ValueError(cfg.policy)
+
+
+# --------------------------------------------------------------- aggregation
+
+def _ota_leaf(v, *, h_workers, idx, b, beta, k_i, cfg: OTAConfig,
+              noise_key, axis_names) -> Tuple[jax.Array, jax.Array]:
+    """OTA-aggregate one leaf (original shape) given a per-bucket policy.
+
+    v (*shape) local values;  b (nb,), beta (U, nb) identical on all
+    shards; buckets partition the leading dim.  All ops are elementwise or
+    leading-dim broadcasts, so the leaf's sharding is preserved.
+    Returns (aggregated (*shape), per-bucket denominator (nb,)).
+    """
+    nb = b.shape[0]
+    b_e = _expand(b, nb, v.shape)
+    beta_mine = _expand(beta[idx], nb, v.shape)
+    k_mine = k_i[idx]
+    h_mine = h_workers[idx]
+    # transmit side: policy (6) + Algorithm-1 line-5 clipping, then channel
+    amp = k_mine * b_e * jnp.abs(v) / h_mine
+    tx = jnp.sign(v) * jnp.minimum(amp, jnp.sqrt(cfg.channel.p_max))
+    rx_contrib = beta_mine * tx * h_mine
+    # superposition (8) over the worker axes + AWGN at the PS
+    y = _psum(rx_contrib, axis_names)
+    y = y + sample_noise_sharded(noise_key, y.shape, cfg.channel)
+    # post-processing (9), identical on every shard
+    den_b = jnp.sum(k_i[:, None] * beta, axis=0) * b           # (nb,)
+    den = _expand(den_b, nb, v.shape)
+    out = jnp.where(den > _EPS, y / jnp.maximum(den, _EPS), 0.0)
+    return out, den_b
+
+
+def ota_aggregate_tree(tree, *, key, t, cfg: OTAConfig,
+                       axis_names: Sequence[str] = ("pod", "data"),
+                       k_i: Optional[jax.Array] = None,
+                       delta_prev: float = 0.0,
+                       stats_tree: Any = None) -> Tuple[Any, Dict[str, Any]]:
+    """OTA-aggregate a pytree of per-worker values (inside shard_map).
+
+    Args:
+      tree:       per-worker pytree (gradients or parameter updates).
+      key:        root PRNG key, identical on all shards.
+      t:          round index (int or traced scalar).
+      cfg:        OTAConfig.
+      axis_names: the manual mesh axes whose shards are FL workers.
+      k_i:        optional (U,) per-worker sample weights; equal by default.
+      delta_prev: Delta_{t-1} for the GD_CONVEX objective.
+      stats_tree: per-leaf (nb,) |w| statistics when cfg.stat_mode='fixed'.
+
+    Returns (aggregated tree, stats dict). Aggregated values are identical
+    on every shard (psum + replicated post-processing).  Buckets with no
+    selected worker come back as 0 (caller keeps the previous value).
+    """
+    axis_names = tuple(a for a in axis_names)
+    U = n_workers(axis_names) if axis_names else 1
+    idx = worker_index(axis_names) if axis_names else jnp.zeros((), jnp.int32)
+    if k_i is None:
+        k_i = jnp.full((U,), cfg.k_i, jnp.float32)
+
+    kg, kn = chan.round_keys(key, t)
+    h_workers = chan.sample_gains(kg, (U,), cfg.channel)
+
+    if cfg.policy == "perfect":
+        # error-free baseline: exact weighted FedAvg, no channel at all
+        agg = fedavg_tree(tree, axis_names=axis_names, k_i=k_i)
+        return agg, {"selected_frac": jnp.ones(()),
+                     "b_mean": jnp.ones(()),
+                     "h_min": jnp.ones(()), "h_max": jnp.ones(())}
+
+    leaves, treedef = jax.tree.flatten(tree)
+    stat_leaves = (jax.tree.flatten(stats_tree)[0]
+                   if stats_tree is not None else [None] * len(leaves))
+    out_leaves = []
+    sel_fracs, b_means = [], []
+    cdt = jnp.dtype(cfg.compute_dtype)
+    for i, leaf in enumerate(leaves):
+        v = leaf.astype(cdt)
+        nb = 1 if cfg.granularity == "tensor" else _n_buckets(
+            cfg.n_buckets, v.shape)
+        if cfg.stat_mode == "fixed" and stat_leaves[i] is not None:
+            w_stat = stat_leaves[i]
+        else:
+            w_stat = _pmax(_leaf_buckets(jnp.abs(v), nb), axis_names)
+        kp, kz = jax.random.split(jax.random.fold_in(kn, i))
+        b, beta = _solve_policy(cfg, h_workers, w_stat, k_i, kp, delta_prev)
+        agg, den_b = _ota_leaf(
+            v, h_workers=h_workers, idx=idx, b=b,
+            beta=beta, k_i=k_i, cfg=cfg, noise_key=kz,
+            axis_names=axis_names)
+        out_leaves.append(agg.astype(leaf.dtype))
+        sel_fracs.append(jnp.mean(beta))
+        b_means.append(jnp.mean(b))
+
+    stats = {
+        "selected_frac": jnp.mean(jnp.stack(sel_fracs)),
+        "b_mean": jnp.mean(jnp.stack(b_means)),
+        "h_min": jnp.min(h_workers),
+        "h_max": jnp.max(h_workers),
+    }
+    return jax.tree.unflatten(treedef, out_leaves), stats
+
+
+def fedavg_tree(tree, *, axis_names: Sequence[str] = ("pod", "data"),
+                k_i: Optional[jax.Array] = None):
+    """Error-free weighted FedAvg over the worker axes (eq. 5) — oracle."""
+    axis_names = tuple(a for a in axis_names)
+    if not axis_names:
+        return tree
+    U = n_workers(axis_names)
+    idx = worker_index(axis_names)
+    if k_i is None:
+        return jax.tree.map(
+            lambda x: jax.lax.pmean(x, axis_names), tree)
+    w = k_i[idx] / jnp.sum(k_i)
+    return jax.tree.map(
+        lambda x: jax.lax.psum(x * w, axis_names), tree)
+
+
+# ------------------------------------------------- stacked (pure-auto) path
+
+def ota_aggregate_stacked(tree_w, *, key, t, cfg: OTAConfig,
+                          k_i: Optional[jax.Array] = None,
+                          delta_prev: float = 0.0,
+                          worker_axes: Sequence[str] = ("pod", "data"),
+                          ) -> Tuple[Any, Dict[str, Any]]:
+    """OTA aggregation over a *stacked* worker dim (pure-auto pjit path).
+
+    Every leaf of ``tree_w`` has shape (W, *leaf): per-worker values stacked
+    on dim 0 (produced by a vmap over the worker-reshaped batch, with dim 0
+    sharded over the worker mesh axes).  The MAC superposition (8) is the
+    ``sum`` over dim 0 — XLA partitions it into the same reduce/all-reduce
+    collectives psum would emit, but the whole step stays in auto mode,
+    which also composes with FSDP weight sharding.
+
+    Returns (aggregated tree (leaf-shaped), stats).  Identical math to
+    ``ota_aggregate_tree``; tests assert equivalence.
+    """
+    from repro.sharding import specs  # local import to avoid cycles
+
+    leaves, treedef = jax.tree.flatten(tree_w)
+    W = leaves[0].shape[0]
+    if k_i is None:
+        k_i = jnp.full((W,), cfg.k_i, jnp.float32)
+
+    if cfg.policy == "perfect":
+        # error-free baseline: exact weighted FedAvg, no channel at all
+        agg = fedavg_stacked(tree_w, k_i=None if cfg.k_i == 1.0 else k_i)
+        return agg, {"selected_frac": jnp.ones(()),
+                     "b_mean": jnp.ones(()),
+                     "h_min": jnp.ones(()), "h_max": jnp.ones(())}
+
+    kg, kn = chan.round_keys(key, t)
+    h_workers = chan.sample_gains(kg, (W,), cfg.channel)
+
+    out_leaves, sel_fracs, b_means = [], [], []
+    cdt = jnp.dtype(cfg.compute_dtype)
+    for i, leaf in enumerate(leaves):
+        v = leaf.astype(cdt)                                 # (W, *shape)
+        v = specs.constrain(v, tuple(worker_axes),
+                            *([None] * (v.ndim - 1)))
+        shape = v.shape[1:]
+        nb = 1 if cfg.granularity == "tensor" else _n_buckets(
+            cfg.n_buckets, shape)
+        # per-bucket |v| statistic, max over workers (vmapped leading dim)
+        w_stat = jnp.max(jax.vmap(lambda x: _leaf_buckets(jnp.abs(x), nb)
+                                  )(v), axis=0)
+        kp, kz = jax.random.split(jax.random.fold_in(kn, i))
+        b, beta = _solve_policy(cfg, h_workers, w_stat, k_i, kp, delta_prev)
+        bc = (slice(None),) + (None,) * len(shape)           # (W, 1, 1, ...)
+        b_e = _expand(b, nb, shape)[None]                    # (1, L, 1...)
+        beta_e = jax.vmap(lambda row: _expand(row, nb, shape))(beta)
+        amp = k_i[bc] * b_e * jnp.abs(v) / h_workers[bc]
+        tx = jnp.sign(v) * jnp.minimum(amp, jnp.sqrt(cfg.channel.p_max))
+        y = jnp.sum(beta_e * tx * h_workers[bc], axis=0)
+        y = y + sample_noise_sharded(kz, y.shape, cfg.channel)
+        den_b = jnp.sum(k_i[:, None] * beta, axis=0) * b
+        den = _expand(den_b, nb, shape)
+        agg = jnp.where(den > _EPS, y / jnp.maximum(den, _EPS), 0.0)
+        out_leaves.append(agg.astype(leaf.dtype))
+        sel_fracs.append(jnp.mean(beta))
+        b_means.append(jnp.mean(b))
+
+    stats = {
+        "selected_frac": jnp.mean(jnp.stack(sel_fracs)),
+        "b_mean": jnp.mean(jnp.stack(b_means)),
+        "h_min": jnp.min(h_workers),
+        "h_max": jnp.max(h_workers),
+    }
+    return jax.tree.unflatten(treedef, out_leaves), stats
+
+
+def fedavg_stacked(tree_w, k_i: Optional[jax.Array] = None):
+    """Error-free weighted FedAvg over the stacked worker dim (eq. 5)."""
+    def one(leaf):
+        if k_i is None:
+            return jnp.mean(leaf, axis=0)
+        w = (k_i / jnp.sum(k_i)).astype(leaf.dtype)
+        return jnp.tensordot(w, leaf, axes=(0, 0))
+    return jax.tree.map(one, tree_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class OTAAggregator:
+    """The paper's technique as a first-class cross-replica aggregator.
+
+    Drop-in replacement for the implicit psum of data-parallel training:
+    construct once with the mesh's worker axes, call ``aggregate`` inside
+    the shard_map'd train step.
+    """
+
+    cfg: OTAConfig = OTAConfig()
+    axis_names: Tuple[str, ...] = ("pod", "data")
+
+    def aggregate(self, tree, key, t, k_i=None, delta_prev: float = 0.0):
+        if self.cfg.policy == "off":   # pure FedAvg escape hatch
+            return fedavg_tree(tree, axis_names=self.axis_names, k_i=k_i), {}
+        return ota_aggregate_tree(tree, key=key, t=t, cfg=self.cfg,
+                                  axis_names=self.axis_names, k_i=k_i,
+                                  delta_prev=delta_prev)

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a real TPU set ``interpret=False`` (or rely on the backend default); on
+CPU the interpreter executes the kernel body in Python for validation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import inflota_search as _search
+from repro.kernels import ota_transmit as _ota
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ota_aggregate(w, h, beta, b, noise, k_i, p_max,
+                  block_d: int = 1024, interpret: bool | None = None):
+    """Fused OTA transmit/aggregate/post-process (see kernels.ota_transmit)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ota.ota_transmit_aggregate(
+        w, h, beta, b, noise, k_i, p_max,
+        block_d=block_d, interpret=interpret)
+
+
+def inflota_search(h, w_abs, k_i, p_max, *, eta, numer, L, sigma2,
+                   block_d: int = 1024, interpret: bool | None = None):
+    """Fused Theorem-4 line search (see kernels.inflota_search)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _search.inflota_search(
+        h, w_abs, k_i, p_max, eta=float(eta), numer=float(numer),
+        L=float(L), sigma2=float(sigma2), block_d=block_d,
+        interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    blk_q: int = 128, blk_k: int = 256,
+                    interpret: bool | None = None):
+    """Fused causal GQA attention (see kernels.flash_attention)."""
+    from repro.kernels import flash_attention as _fa
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, blk_q=blk_q, blk_k=blk_k,
+                               interpret=interpret)

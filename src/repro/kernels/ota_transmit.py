@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused OTA transmit + superposition + PS post-process.
+
+This is the per-entry hot loop of analog aggregation (paper eqs. 6-9 +
+Algorithm 1 line 5) fused into one VMEM pass:
+
+  per entry d (lane) and worker i (sublane):
+      amp   = | K_i * b[d] / h[i,d] * w[i,d] |
+      tx    = beta[i,d] * sign(w) * min(amp, sqrt(Pmax_i))      (clip, Alg.1)
+      y[d]  = sum_i tx * h[i,d]  + z[d]                          (eq. 8)
+      den   = sum_i K_i * beta[i,d] * b[d]
+      w_hat = y / den   (0 where den == 0)                       (eq. 9)
+
+TPU mapping: D is tiled along lanes in blocks of `block_d` (multiple of 128);
+the worker axis U lives on sublanes and is reduced in-register — U is tens,
+so a (U, block_d) tile comfortably fits VMEM (U=32, block=2048, f32 ->
+256 KiB/operand).  Everything is VPU elementwise + a sublane reduction; the
+fusion saves 4 HBM round-trips versus the naive composition (tx, y, den,
+w_hat materialized separately).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _kernel(w_ref, h_ref, beta_ref, b_ref, z_ref, ki_ref, pmax_ref, out_ref):
+    w = w_ref[...]          # (U, blk)
+    h = h_ref[...]          # (U, blk)
+    beta = beta_ref[...]    # (U, blk)
+    b = b_ref[...]          # (1, blk)
+    z = z_ref[...]          # (1, blk)
+    k_i = ki_ref[...]       # (U, 1)
+    p_max = pmax_ref[...]   # (U, 1)
+
+    amp = jnp.abs(k_i * b * w / h)
+    tx = beta * jnp.sign(w) * jnp.minimum(amp, jnp.sqrt(p_max))
+    y = jnp.sum(tx * h, axis=0, keepdims=True) + z            # (1, blk)
+    den = jnp.sum(k_i * beta, axis=0, keepdims=True) * b      # (1, blk)
+    w_hat = jnp.where(den > _EPS, y / jnp.maximum(den, _EPS), 0.0)
+    out_ref[...] = w_hat
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
+                           *, block_d: int = 1024, interpret: bool = True):
+    """Fused OTA aggregation round.
+
+    Args:
+      w, h, beta: (U, D) float arrays.
+      b, noise:   (D,) float arrays.
+      k_i, p_max: (U,) float arrays.
+      block_d:    lane tile (multiple of 128 on real TPU).
+      interpret:  run the Pallas interpreter (CPU validation mode).
+
+    Returns: (D,) post-processed global parameter estimate w_hat.
+    """
+    U, D = w.shape
+    dt = jnp.result_type(w.dtype, h.dtype, jnp.float32)
+    pad = (-D) % block_d
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
+        beta = jnp.pad(beta, ((0, 0), (0, pad)))
+        b = jnp.pad(b, (0, pad), constant_values=1.0)
+        noise = jnp.pad(noise, (0, pad))
+    Dp = D + pad
+    grid = (Dp // block_d,)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((U, block_d), lambda i: (0, i)),   # w
+            pl.BlockSpec((U, block_d), lambda i: (0, i)),   # h
+            pl.BlockSpec((U, block_d), lambda i: (0, i)),   # beta
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),   # b
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),   # z
+            pl.BlockSpec((U, 1), lambda i: (0, 0)),         # k_i
+            pl.BlockSpec((U, 1), lambda i: (0, 0)),         # p_max
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Dp), dt),
+        interpret=interpret,
+    )(w.astype(dt), h.astype(dt), beta.astype(dt),
+      b.astype(dt)[None, :], noise.astype(dt)[None, :],
+      jnp.asarray(k_i, dt)[:, None], jnp.asarray(p_max, dt)[:, None])
+    return out[0, :D]

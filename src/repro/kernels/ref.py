@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the kernels
+must match bit-for-bit up to float tolerance)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+_TOL = 1e-6
+
+
+def ota_transmit_aggregate_ref(w, h, beta, b, noise, k_i, p_max):
+    """Oracle for kernels.ota_transmit — composed from repro.core pieces."""
+    k_col = jnp.asarray(k_i)[:, None]
+    p_col = jnp.asarray(p_max)[:, None]
+    amp = jnp.abs(k_col * b[None, :] * w / h)
+    tx = beta * jnp.sign(w) * jnp.minimum(amp, jnp.sqrt(p_col))
+    y = jnp.sum(tx * h, axis=0) + noise
+    den = jnp.sum(k_col * beta, axis=0) * b
+    return jnp.where(den > _EPS, y / jnp.maximum(den, _EPS), 0.0)
+
+
+def inflota_search_ref(h, w_abs, k_i, p_max, *, eta, numer, L, sigma2):
+    """Oracle for kernels.inflota_search (same argmin/tie-break order)."""
+    U, D = h.shape
+    k_col = jnp.asarray(k_i, h.dtype)[:, None]
+    p_col = jnp.asarray(p_max, h.dtype)[:, None]
+    cand = jnp.abs(jnp.sqrt(p_col) * h / (k_col * (w_abs[None, :] + eta)))
+
+    best_r = jnp.full((D,), jnp.inf, h.dtype)
+    best_b = jnp.zeros((D,), h.dtype)
+    best_beta = jnp.zeros((U, D), h.dtype)
+    for k in range(U):
+        b_k = cand[k]
+        beta_k = (b_k[None, :] <= cand * (1.0 + _TOL)).astype(h.dtype)
+        den = jnp.sum(k_col * beta_k, axis=0)
+        r_k = (L * sigma2 / (2.0 * jnp.maximum(den * b_k, _EPS) ** 2)
+               + numer / (2.0 * L * jnp.maximum(den, _EPS)))
+        take = r_k < best_r
+        best_r = jnp.where(take, r_k, best_r)
+        best_b = jnp.where(take, b_k, best_b)
+        best_beta = jnp.where(take[None, :], beta_k, best_beta)
+    return best_b, best_beta, best_r
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """Oracle for kernels.flash_attention — plain GQA softmax attention.
+
+    q: (B, T, nq, hd); k/v: (B, S, n_kv, hd) -> (B, T, nq, hd), f32 math.
+    """
+    import jax
+    B, T, nq, hd = q.shape
+    S, n_kv = k.shape[1], k.shape[2]
+    grp = nq // n_kv
+    qg = q.reshape(B, T, n_kv, grp, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, kf) / jnp.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", p, vf)
+    return o.reshape(B, T, nq, hd).astype(q.dtype)

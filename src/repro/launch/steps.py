@@ -1,0 +1,272 @@
+"""Step builders: train / prefill / decode for every (arch, shape, mesh).
+
+The train step integrates the paper's technique as a first-class feature:
+per-worker gradients are computed inside a shard_map region that is manual
+over the FL-worker axes and auto over 'model' (tensor parallelism inside a
+worker is untouched), then aggregated over the air (``repro.fl.dist``).
+
+Worker-axis policy (see DESIGN.md §5): an FL worker must hold its own full
+(model-sharded) gradient, so architectures whose per-model-shard parameter
+footprint exceeds ``WORKER_BYTES_LIMIT`` use pod-level workers with ZeRO-3
+FSDP over 'data' inside each worker; smaller architectures use every
+('pod','data') shard as a worker (U = 16/32, the paper's U = 20 regime).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.fl.dist import (OTAConfig, fedavg_stacked, fedavg_tree,
+                           ota_aggregate_stacked, ota_aggregate_tree)
+from repro.models.api import Model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import optimizers
+from repro.sharding import params as psh
+from repro.sharding import specs
+
+# Max bytes of bf16 parameters per model shard for a "full-model worker".
+WORKER_BYTES_LIMIT = 8e9
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """How (arch, mesh) maps onto FL workers and sharding axes."""
+
+    worker_axes: Tuple[str, ...]   # manual axes whose shards are FL workers
+    fsdp_axes: Tuple[str, ...]     # batch axes used for ZeRO-3 weight sharding
+    batch_axes: Tuple[str, ...]    # all batch axes (activation sharding)
+
+    @property
+    def n_workers_static(self) -> int:
+        return 0  # resolved from the mesh at trace time
+
+
+def plan_for(cfg: ModelConfig, mesh, *, force_fsdp: Optional[bool] = None,
+             force_worker_axes: Optional[Sequence[str]] = None) -> MeshPlan:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    nm = mesh.shape.get("model", 1)
+    big = cfg.param_count() * 2 / nm > WORKER_BYTES_LIMIT
+    if force_worker_axes is not None:
+        waxes = tuple(force_worker_axes)
+    elif big:
+        waxes = tuple(a for a in batch_axes if a == "pod")
+    else:
+        waxes = batch_axes
+    fsdp = tuple(a for a in batch_axes if a not in waxes)
+    if force_fsdp is True and not fsdp:
+        fsdp = batch_axes  # explicit FSDP request: shard over all batch axes
+        waxes = ()
+    if force_fsdp is False:
+        fsdp = ()
+    return MeshPlan(worker_axes=waxes, fsdp_axes=fsdp, batch_axes=batch_axes)
+
+
+# ------------------------------------------------------------------- train
+
+def make_train_step(model: Model, mesh, plan: MeshPlan,
+                    opt: optimizers.Optimizer,
+                    ota_cfg: Optional[OTAConfig] = None,
+                    remat: bool = True, dist_mode: str = "vmap"):
+    """Returns train_step(params, opt_state, batch, key, step) -> (...).
+
+    ota_cfg=None means exact aggregation ('Perfect aggregation' baseline —
+    the implicit psum of standard data-parallel training).
+
+    dist_mode:
+      'vmap'       per-worker grads via a vmap over the worker-reshaped
+                   batch; stacked dim 0 shards over the worker axes, the
+                   OTA sum over dim 0 becomes the cross-worker collective.
+                   Pure-auto pjit: composes with FSDP and keeps bf16.
+      'shard_map'  manual region over the worker axes (auto over 'model');
+                   the textbook 'each shard is a worker' mapping.  XLA:CPU
+                   miscompiles bf16 backward + collective in mixed
+                   manual/auto mode ('Invalid binary instruction opcode
+                   copy'), so this path is exercised in f32 tests and kept
+                   for real-TPU use.
+    """
+    waxes = plan.worker_axes
+    n_w = 1
+    for a in waxes:
+        n_w *= mesh.shape[a]
+
+    def grads_and_loss(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch, remat)
+        return loss, aux, grads
+
+    # ---------------------------------------------------------- vmap path
+    def step_vmap(params, opt_state, batch, key, step):
+        wspec = P(waxes if len(waxes) > 1 else waxes[0])
+
+        def reshape_w(x):
+            x = x.reshape(n_w, x.shape[0] // n_w, *x.shape[1:])
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*wspec, *([None] * (x.ndim - 1)))))
+
+        batch_w = jax.tree.map(reshape_w, batch)
+        with specs.suspended():
+            loss_w, aux_w, grads_w = jax.vmap(
+                lambda b: grads_and_loss(params, b))(batch_w)
+        if ota_cfg is not None:
+            grads, stats = ota_aggregate_stacked(
+                grads_w, key=key, t=step, cfg=ota_cfg, worker_axes=waxes)
+        else:
+            grads = fedavg_stacked(grads_w)
+            stats = {}
+        loss = jnp.mean(loss_w)
+        aux = {k: jnp.mean(v) for k, v in aux_w.items()}
+        return loss, aux, grads, stats
+
+    # ------------------------------------------------------ shard_map path
+    def worker_fn(params, batch, key, step):
+        loss, aux, grads = grads_and_loss(params, batch)
+        if ota_cfg is not None:
+            grads, stats = ota_aggregate_tree(
+                grads, key=key, t=step, cfg=ota_cfg, axis_names=waxes)
+        else:
+            grads = fedavg_tree(grads, axis_names=waxes)
+            stats = {}
+        if waxes:
+            loss = jax.lax.pmean(loss, tuple(waxes))
+            aux = {k: jax.lax.pmean(v, tuple(waxes)) for k, v in aux.items()}
+        return loss, aux, grads, stats
+
+    def step_shmap(params, opt_state, batch, key, step):
+        bspec = jax.tree.map(
+            lambda _: P(waxes if len(waxes) > 1 else waxes[0]), batch)
+        fn = jax.shard_map(
+            worker_fn, mesh=mesh,
+            in_specs=(P(), bspec, P(), P()),
+            out_specs=(P(), P(), P(), P()),
+            axis_names=set(waxes))
+        return fn(params, batch, key, step)
+
+    def train_step(params, opt_state, batch, key, step):
+        if not waxes:
+            loss, aux, grads, stats = worker_fn(params, batch, key, step)
+        elif dist_mode == "vmap":
+            loss, aux, grads, stats = step_vmap(params, opt_state, batch,
+                                                key, step)
+        else:
+            loss, aux, grads, stats = step_shmap(params, opt_state, batch,
+                                                 key, step)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        metrics = {"loss": loss, **aux, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------- serving
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+    return decode_step
+
+
+# ------------------------------------------------------------ abstract I/O
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(shape_dtype, sharding):
+    return jax.ShapeDtypeStruct(shape_dtype.shape, shape_dtype.dtype,
+                                sharding=sharding)
+
+
+def _attach(sds_tree, sharding_tree):
+    return jax.tree.map(_sds, sds_tree, sharding_tree)
+
+
+def abstract_params(model: Model, mesh, plan: MeshPlan, dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        functools.partial(model.init, dtype=dtype), jax.random.key(0))
+    specs = psh.param_specs(shapes, fsdp_axes=plan.fsdp_axes)
+    specs = psh.filter_divisible(specs, shapes, mesh)
+    return _attach(shapes, _named(specs, mesh)), specs
+
+
+def abstract_opt_state(opt: optimizers.Optimizer, params_sds, mesh,
+                       param_spec_tree):
+    shapes = jax.eval_shape(opt.init, params_sds)
+
+    def spec_like(leaf):
+        # match optimizer-state leaves to param specs by shape
+        return None
+    # m/v mirror the params tree; scalars replicated.
+    by_path = {}
+
+    def walk(path, leaf):
+        key = tuple(str(p) for p in path)
+        return key
+
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params_sds)
+    spec_flat = jax.tree.leaves(param_spec_tree,
+                                is_leaf=lambda x: isinstance(x, P))
+    shape_to_spec = {}
+    for (pth, leaf), sp in zip(flat_p, spec_flat):
+        shape_to_spec.setdefault((leaf.shape, leaf.dtype), sp)
+
+    def leaf_spec(leaf):
+        sp = shape_to_spec.get((leaf.shape, leaf.dtype))
+        if sp is None:
+            sp = shape_to_spec.get((leaf.shape, jnp.dtype(jnp.float32)))
+        if sp is None:
+            # fall back on shape alone (opt states are f32 copies)
+            for (shp, _dt), s in shape_to_spec.items():
+                if shp == leaf.shape:
+                    sp = s
+                    break
+        return _sds(leaf, NamedSharding(mesh, sp if sp is not None else P()))
+
+    return jax.tree.map(leaf_spec, shapes)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   plan: MeshPlan, dtype=jnp.bfloat16):
+    shapes = registry.batch_shapes(cfg, shape)
+    ax = plan.batch_axes if len(plan.batch_axes) > 1 else (
+        plan.batch_axes[0] if plan.batch_axes else None)
+    out = {}
+    for name, shp in shapes.items():
+        dt = jnp.int32 if name in ("tokens", "labels") else dtype
+        nb = 1
+        for a in plan.batch_axes:
+            nb *= mesh.shape[a]
+        spec = P(ax) if shp[0] % max(nb, 1) == 0 and shp[0] >= nb else P()
+        out[name] = jax.ShapeDtypeStruct(shp, dt,
+                                         sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def abstract_caches(model: Model, shape: ShapeConfig, mesh, plan: MeshPlan,
+                    dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        lambda: model.init_decode_caches(shape.global_batch, shape.seq_len,
+                                         dtype=dtype))
+    specs = psh.cache_specs(shapes, mesh, batch_axes=plan.batch_axes)
+    return _attach(shapes, _named(specs, mesh))
+
+
+def abstract_scalars(mesh):
+    rep = NamedSharding(mesh, P())
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    return key, step

@@ -1,0 +1,97 @@
+"""Top-level model API: init / loss / prefill / decode_step for every family.
+
+Batch dict keys (ShapeDtypeStructs in the dry-run, arrays otherwise):
+  tokens  (B, T) int32            — always (decoder tokens)
+  labels  (B, T) int32            — train only
+  frames  (B, enc_seq, d) float   — encdec stub frontend output
+  patches (B, prefix, d) float    — vlm stub frontend output
+Decode additionally takes `caches` and scalar `pos`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import (_init, chunked_unembed_ce,
+                                 softmax_cross_entropy)
+from repro.sharding import specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key, dtype=jnp.float32) -> Dict[str, Any]:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = transformer.init_params(
+            k1, cfg, dtype=dtype, cross=cfg.family == "encdec")
+        if cfg.family == "encdec":
+            params["encoder"] = encdec.init_encoder(k2, cfg, dtype=dtype)
+        if cfg.family == "vlm":
+            params["projector"] = {
+                "w": _init(k3, (cfg.d_model, cfg.d_model), dtype=dtype),
+                "b": jnp.zeros((cfg.d_model,), dtype)}
+        return params
+
+    # ------------------------------------------------------------ helpers
+    def _prefix(self, params, batch):
+        if self.cfg.family != "vlm" or "patches" not in batch:
+            return None
+        pp = params["projector"]
+        return batch["patches"] @ pp["w"] + pp["b"]
+
+    def _enc(self, params, batch):
+        if self.cfg.family != "encdec" or "frames" not in batch:
+            return None
+        hidden = encdec.encode(params["encoder"], self.cfg, batch["frames"])
+        return (hidden, jnp.arange(hidden.shape[1]))
+
+    # -------------------------------------------------------------- train
+    def loss(self, params, batch, remat: bool = True):
+        cfg = self.cfg
+        hidden, _, aux = transformer.forward_tokens(
+            params, cfg, batch["tokens"], mode="train",
+            enc_out=self._enc(params, batch),
+            prefix_embeds=self._prefix(params, batch), remat=remat,
+            skip_unembed=True)
+        P = cfg.prefix_tokens if cfg.family == "vlm" else 0
+        text_hidden = hidden[:, P:, :] if P else hidden
+        # fused, token-chunked unembed+CE: the full (B,T,V) logits tensor
+        # is never materialized (see layers.chunked_unembed_ce)
+        ce = chunked_unembed_ce(text_hidden[:, :-1, :],
+                                batch["labels"][:, 1:], params["embed"],
+                                cfg)
+        total = ce + 0.01 * aux if cfg.is_moe else ce
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params, batch):
+        """Full-sequence forward that also returns caches for decode."""
+        cfg = self.cfg
+        logits, caches, _ = transformer.forward_tokens(
+            params, cfg, batch["tokens"], mode="prefill",
+            enc_out=self._enc(params, batch),
+            prefix_embeds=self._prefix(params, batch), remat=False)
+        return logits[:, -1, :], caches
+
+    def init_decode_caches(self, batch: int, seq: int, dtype=jnp.float32):
+        cfg = self.cfg
+        return transformer.init_caches(
+            cfg, batch, seq, dtype,
+            enc_seq=cfg.encoder_seq if cfg.family == "encdec" else 0)
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One token: tokens (B, 1), pos scalar. Returns (logits, caches)."""
+        cfg = self.cfg
+        logits, new_caches, _ = transformer.forward_tokens(
+            params, cfg, tokens, mode="decode", caches=caches, pos=pos,
+            remat=False)
+        return logits[:, -1, :], new_caches

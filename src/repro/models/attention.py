@@ -1,0 +1,208 @@
+"""Grouped-query attention with RoPE, sliding windows, logit soft-capping,
+and KV-cache decode — the attention used by every attention-bearing arch in
+the zoo (whisper enc/dec, gemma2, qwen*, arctic, internvl, recurrentgemma
+local layers).
+
+Sharding: heads on 'model' during train/prefill; during decode the KV cache
+is sharded (batch -> 'data', seq -> 'model') and the softmax reductions over
+the sharded seq axis are left to the SPMD partitioner (flash-decoding style
+split-K).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+from repro.sharding import specs
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S, n_kv, hd)
+    v: jax.Array   # (B, S, n_kv, hd)
+
+
+def time_sharded(cfg: ModelConfig, T: int) -> bool:
+    """Prefer sequence(-chunk) sharding of the attention scores.
+
+    When n_kv_heads doesn't fill the 'model' axis (GQA with 1-8 kv heads on
+    a 16-way axis), head-sharding leaves GSPMD no choice but to shard the
+    head_dim *contraction* — every layer's scores tensor comes back as a
+    partial sum that must be all-reduced (observed: f32[B,1,S,chunk,grp]
+    all-reduce per chunk per layer, the dominant collective of the whole
+    step).  Sharding the query-time dim keeps QK^T and PV fully local.
+    """
+    nm = specs.model_axis_size()
+    return nm > 1 and cfg.n_kv_heads % nm != 0 and T % nm == 0 and T >= nm
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32,
+                   cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, nq * hd), dtype=dtype),
+        "wk": _init(ks[1], (d, nkv * hd), dtype=dtype),
+        "wv": _init(ks[2], (d, nkv * hd), dtype=dtype),
+        "wo": _init(ks[3], (nq * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., T, H, hd); positions: (T,) or (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., T, half)
+    ang = ang[..., None, :]                                     # (..., T, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _proj_qkv(x, p, cfg: ModelConfig):
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, T = x.shape[0], x.shape[1]
+    q = q.reshape(B, T, nq, hd)
+    k = k.reshape(B, T, nkv, hd)
+    v = v.reshape(B, T, nkv, hd)
+    return q, k, v
+
+
+def _gqa_scores(q, k, softcap):
+    """q: (B,T,nq,hd), k: (B,S,nkv,hd) -> scores (B,nkv,grp,T,S)."""
+    B, T, nq, hd = q.shape
+    nkv = k.shape[2]
+    grp = nq // nkv
+    qg = q.reshape(B, T, nkv, grp, hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _gqa_out(probs, v, wo, B, T):
+    """probs: (B,nkv,grp,T,S), v: (B,S,nkv,hd) -> (B,T,nq*hd) @ wo."""
+    o = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    o = o.reshape(B, T, -1)
+    return o @ wo
+
+
+def project_kv(enc_x, p, cfg: ModelConfig):
+    """Project encoder hiddens into this layer's cross-attn K/V (no RoPE)."""
+    B, S, _ = enc_x.shape
+    nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (enc_x @ p["wk"]).reshape(B, S, nkv, hd)
+    v = (enc_x @ p["wv"]).reshape(B, S, nkv, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(nkv, hd)
+        v = v + p["bv"].reshape(nkv, hd)
+    return KVCache(k=k, v=v)
+
+
+def attend(x, p, cfg: ModelConfig, positions, *, causal: bool = True,
+           window: Optional[int] = None, kv: Optional[tuple] = None):
+    """Full (or banded) attention for train/prefill.
+
+    x: (B, T, d); positions: (T,) absolute positions.
+    kv: optional externally provided (k, v, kv_positions) for cross-attn.
+    Returns (out, KVCache-of-this-segment).
+    """
+    B, T, _ = x.shape
+    q, k_new, v_new = _proj_qkv(x, p, cfg)
+    if kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k_new, positions, cfg.rope_theta)
+        v = v_new
+        kv_pos = positions
+    else:
+        k, v, kv_pos = kv
+    if time_sharded(cfg, T):
+        # query-time over 'model': QK^T and PV stay local (see time_sharded)
+        q = specs.constrain(q, specs.BATCH_AXES, specs.MODEL_AXIS, None,
+                            None)
+        k = specs.constrain(k, specs.BATCH_AXES, None, None, None)
+    else:
+        q = specs.constrain(q, specs.BATCH_AXES, None, specs.MODEL_AXIS,
+                            None)
+        k = specs.constrain(k, specs.BATCH_AXES, None, specs.MODEL_AXIS,
+                            None)
+
+    scores = _gqa_scores(q, k, cfg.attn_softcap)      # (B,nkv,grp,T,S)
+    mask = None
+    if causal:
+        mask = positions[:, None] >= kv_pos[None, :]
+    if window is not None:
+        wmask = positions[:, None] - kv_pos[None, :] < window
+        mask = wmask if mask is None else (mask & wmask)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, p["wo"], B, T)
+    out = specs.constrain(out, specs.BATCH_AXES, None, None)
+    return out, KVCache(k=k, v=v)
+
+
+def decode_attend(x, p, cfg: ModelConfig, cache: KVCache, pos,
+                  *, window: Optional[int] = None, cross: bool = False):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); cache.k/v: (B, S, n_kv, hd); pos: scalar current position.
+    For windowed layers the cache is a ring buffer of size `window` and pos
+    indexes modulo the window.  Returns (out, updated cache).
+    """
+    B, T, _ = x.shape
+    S = cache.k.shape[1]
+    q, k_new, v_new = _proj_qkv(x, p, cfg)
+    if not cross:
+        q = rope(q, jnp.full((T,), pos), cfg.rope_theta)
+        k_new = rope(k_new, jnp.full((T,), pos), cfg.rope_theta)
+        slot = pos % S if window is not None else pos
+        k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+        cache = KVCache(k=k, v=v)
+    else:
+        k, v = cache.k, cache.v
+    k = specs.constrain(k, specs.BATCH_AXES, specs.MODEL_AXIS, None, None)
+    v = specs.constrain(v, specs.BATCH_AXES, specs.MODEL_AXIS, None, None)
+
+    scores = _gqa_scores(q, k, cfg.attn_softcap)      # (B,nkv,grp,1,S)
+    if not cross:
+        idx = jnp.arange(S)
+        if window is not None:
+            # Ring buffer: every slot holds one of the most recent S tokens
+            # once warm (pos >= S); before that only slots <= pos are live.
+            valid = jnp.where(pos >= S, jnp.ones((S,), bool), idx <= pos)
+        else:
+            valid = idx <= pos
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, p["wo"], B, T)
+    return out, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               window: Optional[int] = None, dtype=jnp.float32) -> KVCache:
+    S = min(seq, window) if window is not None else seq
+    nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KVCache(k=jnp.zeros((batch, S, nkv, hd), dtype),
+                   v=jnp.zeros((batch, S, nkv, hd), dtype))

@@ -1,0 +1,124 @@
+"""Model and input-shape configuration for the architecture zoo."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description.
+
+    ``layer_pattern`` is the repeating per-layer block pattern scanned over:
+        'g' global (full causal) attention + FFN/MoE
+        'l' local (sliding-window) attention + FFN/MoE
+        'r' RG-LRU recurrent block + FFN
+        's' RWKV6 block (time-mix + channel-mix)
+    ``n_layers`` need not be a multiple of ``len(layer_pattern)``: full
+    pattern groups are scanned, the remainder is unrolled as a tail.
+    """
+
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention flavour
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None     # gemma2: 50.0
+    final_softcap: Optional[float] = None    # gemma2: 30.0
+    window: Optional[int] = None             # sliding-window width for 'l'
+    layer_pattern: Tuple[str, ...] = ("g",)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_ff: int = 0                    # arctic: parallel dense residual
+    capacity_factor: float = 1.25
+    # encoder-decoder / multimodal stub frontends
+    encoder_layers: int = 0
+    encoder_seq: int = 0                     # whisper: 1500 mel frames
+    prefix_tokens: int = 0                   # internvl: 1024 patch embeddings
+    # rwkv
+    rwkv_head_dim: int = 64
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    emb_scale: bool = False                  # gemma-style sqrt(d) embed scale
+    # long-context serving: force sliding-window attention on 'g' layers
+    long_context_window: Optional[int] = None
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(p == "s" for p in self.layer_pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if serving memory/compute is bounded in sequence length."""
+        return all(p in ("s", "r", "l") for p in self.layer_pattern) or \
+            self.long_context_window is not None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        emb = self.vocab_size * d
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        per_layer = {}
+        attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        if self.qkv_bias:
+            attn += (nq + 2 * nkv) * hd
+        ffn = 3 * d * f                    # SwiGLU
+        per_layer["g"] = per_layer["l"] = attn + ffn
+        if self.is_moe:
+            moe = self.n_experts * 3 * d * f + d * self.n_experts
+            if self.moe_dense_ff:
+                moe += 3 * d * self.moe_dense_ff
+            per_layer["g"] = per_layer["l"] = attn + moe
+        # RG-LRU recurrent block (projs + conv + gates) + FFN
+        per_layer["r"] = (2 * d * d + 4 * d + 3 * d * d) + ffn
+        # RWKV6: time-mix (r,k,v,g,o + decay lora) + channel-mix
+        per_layer["s"] = 5 * d * d + 2 * d * 64 + 2 * d * f
+        total = emb + head
+        for i in range(self.n_layers):
+            total += per_layer[self.layer_pattern[i % len(self.layer_pattern)]]
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + ffn + d * nq * hd * 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        inactive = self.n_layers * (self.n_experts - self.top_k) * 3 * d * f
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,56 @@
+"""Encoder stack for encoder-decoder models (whisper).
+
+The conv/mel frontend is a stub per the brief: the encoder consumes
+precomputed frame embeddings (B, enc_seq, d_model).  The encoder itself is
+fully implemented: sinusoidal positions + bidirectional attention blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import init_mlp, init_rms_norm, mlp, rms_norm
+from repro.sharding import specs
+
+
+def sinusoidal(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def init_encoder(key, cfg: ModelConfig, dtype=jnp.float32):
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": init_rms_norm(cfg.d_model),
+            "attn": attn.init_attention(k1, cfg, dtype=dtype),
+            "ln2": init_rms_norm(cfg.d_model),
+            "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+        }
+    keys = jax.random.split(key, cfg.encoder_layers)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[one(k) for k in keys])
+    return {"layers": stacked, "final_norm": init_rms_norm(cfg.d_model)}
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d) stub frontend output -> encoder hiddens."""
+    B, S, d = frames.shape
+    x = frames + sinusoidal(S, d, frames.dtype)[None]
+    x = specs.constrain(x, specs.BATCH_AXES, None, None)
+    positions = jnp.arange(S)
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln1"]["gamma"], cfg.norm_eps)
+        o, _ = attn.attend(h, lp["attn"], cfg, positions, causal=False)
+        xx = xx + o
+        h2 = rms_norm(xx, lp["ln2"]["gamma"], cfg.norm_eps)
+        return xx + mlp(h2, lp["ffn"]), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"]["gamma"], cfg.norm_eps)

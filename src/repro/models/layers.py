@@ -1,0 +1,133 @@
+"""Shared building blocks: norms, MLPs, embeddings, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))
+            ).astype(dt)
+
+
+def init_rms_norm(d):
+    return {"gamma": jnp.zeros((d,), jnp.float32)}
+
+
+# ------------------------------------------------------------------- MLP
+
+def init_mlp(key, d, f, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d, f), dtype=dtype),
+        "w_up": _init(k2, (d, f), dtype=dtype),
+        "w_down": _init(k3, (f, d), dtype=dtype),
+    }
+
+
+def mlp(x, p):
+    """SwiGLU feed-forward (the zoo's default FFN)."""
+    g = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    return (g * u) @ p["w_down"]
+
+
+# ------------------------------------------------------------- embeddings
+
+def round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def init_embedding(key, cfg: ModelConfig, dtype=jnp.float32):
+    vpad = round_up(cfg.vocab_size, 256)   # shardable over 16-way model axis
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _init(k1, (vpad, cfg.d_model), dtype=dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _init(k2, (cfg.d_model, vpad), dtype=dtype)
+    return p
+
+
+def embed(tokens, p, cfg: ModelConfig):
+    x = p["tok"][tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(x, p, cfg: ModelConfig):
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    logits = x @ w
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softmax_cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE over tokens; logits may be vocab-padded (labels < vocab_size)."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad != vocab_size:
+        neg = jnp.full((vpad,), -1e30, jnp.float32)
+        mask = jnp.arange(vpad) < vocab_size
+        logits = jnp.where(mask, logits, neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+CE_CHUNK = 2048  # tokens per unembed+CE chunk (see chunked_unembed_ce)
+
+
+def chunked_unembed_ce(hidden, labels, emb_params, cfg: ModelConfig,
+                       chunk: int = CE_CHUNK):
+    """Fused unembed + cross-entropy, chunked over tokens.
+
+    Materializing the full (B, T, V) logits (f32, V up to 256k) dominates
+    training's live memory and HBM traffic.  Scanning token chunks with
+    ``jax.checkpoint`` keeps only one (chunk, V) logits tile live; the
+    backward recomputes each tile instead of storing it — the classic
+    memory/compute trade on the unembedding (beyond-paper; EXPERIMENTS
+    §Perf).  Numerically identical to ``softmax_cross_entropy`` (both
+    reduce in f32).
+    """
+    B, T, d = hidden.shape
+    n = B * T
+    h = hidden.reshape(n, d)
+    y = labels.reshape(n)
+    pad = (-n) % chunk
+    if pad:
+        h = jnp.concatenate([h, jnp.zeros((pad, d), h.dtype)], axis=0)
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)], axis=0)
+    valid = jnp.arange(h.shape[0]) < n
+    hc = h.reshape(-1, chunk, d)
+    yc = y.reshape(-1, chunk)
+    vc = valid.reshape(-1, chunk)
+
+    @jax.checkpoint
+    def one(carry, xs):
+        h_i, y_i, v_i = xs
+        logits = unembed(h_i[None], emb_params, cfg)[0]      # (chunk, Vpad)
+        logits = logits.astype(jnp.float32)
+        vpad = logits.shape[-1]
+        if vpad != cfg.vocab_size:
+            vmask = jnp.arange(vpad) < cfg.vocab_size
+            logits = jnp.where(vmask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_i[:, None], axis=-1)[:, 0]
+        return carry + jnp.sum((logz - gold) * v_i), None
+
+    total, _ = jax.lax.scan(one, jnp.zeros((), jnp.float32), (hc, yc, vc))
+    return total / n

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch.
+
+Design (TPU adaptation): experts are sharded over the `model` axis while
+activations entering the FFN are replicated over `model` (standard
+Megatron-style layout).  Each model shard therefore *locally selects* the
+tokens routed to its own experts — no all-to-all is required at all; the
+only collective is the final psum over `model` that merges per-shard expert
+outputs (the same reduction a TP FFN needs anyway).  Compute and expert
+weights both scale 1/|model|, and FLOPs scale with top_k (dropped-token
+capacity model, GShard-style), so roofline terms reflect *active* params.
+
+Two entry points:
+  * `moe_ffn_local`  — single-shard reference (E_local = E), used by smoke
+    tests and as the correctness oracle.
+  * `moe_ffn`        — shard_map island (manual over 'model') for meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _init, mlp
+from repro.sharding import specs
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, E), dtype=jnp.float32),
+        "w_gate": _init(ks[1], (E, d, f), dtype=dtype),
+        "w_up": _init(ks[2], (E, d, f), dtype=dtype),
+        "w_down": _init(ks[3], (E, f, d), dtype=dtype),
+    }
+    if cfg.moe_dense_ff:
+        from repro.models.layers import init_mlp
+        p["dense"] = init_mlp(ks[4], d, cfg.moe_dense_ff, dtype=dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def _route(xf, router_w, cfg: ModelConfig):
+    """Router: top-k gates + aux load-balance loss (Switch-style)."""
+    logits = xf.astype(jnp.float32) @ router_w           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, cfg.top_k)        # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balance aux: E * sum_e f_e * p_e
+    T = xf.shape[0]
+    counts = jnp.zeros((cfg.n_experts,), jnp.float32).at[
+        eids.reshape(-1)].add(1.0) / (T * cfg.top_k)
+    imp = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(counts * imp)
+    return gates, eids, aux
+
+
+def _dispatch_compute(xf, gates, eids, w_gate, w_up, w_down,
+                      e_offset, e_local: int, capacity: int,
+                      cfg: ModelConfig):
+    """Scatter tokens of my experts into (E_local, C, d), run the expert
+    SwiGLU, gather back weighted by gates.  Differentiable throughout."""
+    T, d = xf.shape
+    k = cfg.top_k
+    flat_e = eids.reshape(-1) - e_offset                     # (T*k,)
+    mine = (flat_e >= 0) & (flat_e < e_local)
+    safe_e = jnp.where(mine, flat_e, 0)
+    onehot = jax.nn.one_hot(safe_e, e_local, dtype=jnp.int32) * \
+        mine[:, None].astype(jnp.int32)                      # (T*k, E_l)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                # position within expert
+    pos_flat = jnp.sum(pos * onehot, axis=1)                 # (T*k,)
+    keep = mine & (pos_flat < capacity)
+    slot = jnp.where(keep, safe_e * capacity + pos_flat, e_local * capacity)
+
+    xr = jnp.repeat(xf, k, axis=0)                           # (T*k, d)
+    buf = jnp.zeros((e_local * capacity + 1, d), xf.dtype).at[slot].add(xr)
+    buf = buf[:-1].reshape(e_local, capacity, d)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    out = jnp.einsum("ecf,efd->ecd", g * u, w_down)
+    out = out.reshape(e_local * capacity, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+
+    y = out[slot] * keep[:, None].astype(out.dtype)          # (T*k, d)
+    y = y * gates.reshape(-1, 1).astype(out.dtype)
+    return jnp.sum(y.reshape(T, k, d), axis=1)
+
+
+def moe_ffn_local(x, p, cfg: ModelConfig):
+    """Single-shard MoE (reference path). x: (B, S, d)."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, eids, aux = _route(xf, p["router"], cfg)
+    cap = _capacity(xf.shape[0], cfg)
+    y = _dispatch_compute(xf, gates, eids, p["w_gate"], p["w_up"],
+                          p["w_down"], 0, cfg.n_experts, cap, cfg)
+    if cfg.moe_dense_ff:
+        y = y + mlp(xf, p["dense"])
+    return y.reshape(B, S, d), aux
+
+
+def moe_ffn(x, p, cfg: ModelConfig, mesh=None):
+    """Expert-parallel MoE over the 'model' mesh axis (shard_map island).
+
+    x: (B, S, d) with batch sharded over ('pod','data'), replicated over
+    'model'.  Expert weights sharded E -> 'model'.  Router weights
+    replicated (router computed redundantly per shard — it is tiny).
+    """
+    m = mesh or specs._active_mesh()
+    if m is None or "model" not in m.axis_names or cfg.n_experts == 0:
+        return moe_ffn_local(x, p, cfg)
+    n_model = m.shape["model"]
+    if cfg.n_experts % n_model != 0:
+        return moe_ffn_local(x, p, cfg)
+    e_local = cfg.n_experts // n_model
+    B, S, d = x.shape
+    cap_local = _capacity(B * S // _batch_shards(m), cfg)
+
+    def local_fn(x_l, router_w, w_gate, w_up, w_down):
+        Bl, Sl, _ = x_l.shape
+        xf = x_l.reshape(-1, d)
+        gates, eids, aux = _route(xf, router_w, cfg)
+        my0 = jax.lax.axis_index("model") * e_local
+        y = _dispatch_compute(xf, gates, eids, w_gate, w_up, w_down,
+                              my0, e_local, cap_local, cfg)
+        y = jax.lax.psum(y, "model")
+        aux = aux  # identical on every model shard (replicated router input)
+        return y.reshape(Bl, Sl, d), aux
+
+    batch_ax = specs.batch_axes(m)
+    in_specs = (P(batch_ax if batch_ax else None, None, None),
+                P(None, None),
+                P("model", None, None), P("model", None, None),
+                P("model", None, None))
+    out_specs = (P(batch_ax if batch_ax else None, None, None), P())
+    manual = {"model"} | set(batch_ax)
+    y, aux = jax.shard_map(
+        local_fn, mesh=m, in_specs=in_specs, out_specs=out_specs,
+        axis_names=manual, check_vma=False)(
+            x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.moe_dense_ff:
+        B_, S_, _ = x.shape
+        y = y + mlp(x.reshape(-1, d), p["dense"]).reshape(B_, S_, d)
+    return y, aux
+
+
+def _batch_shards(m) -> int:
+    n = 1
+    for a in specs.batch_axes(m):
+        n *= m.shape[a]
+    return n

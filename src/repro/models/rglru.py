@@ -1,0 +1,125 @@
+"""RecurrentGemma building blocks: RG-LRU recurrence + the recurrent block
+(linear proj -> short causal conv -> RG-LRU, gated) from arXiv:2402.19427.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(x_t W_r + b_r)            recurrence gate
+    i_t = sigmoid(x_t W_i + b_i)            input gate
+    a_t = exp(c * r_t * log sigmoid(Lambda))  in (0,1),  c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+The elementwise-linear recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly; compose
+(a2,b2)∘(a1,b1) = (a1 a2, a2 b1 + b2)), and with an O(1) step for decode —
+this is why ``long_500k`` runs for recurrentgemma with constant memory.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+from repro.sharding import specs
+
+_C = 8.0
+CONV_WIDTH = 4
+
+
+class RgState(NamedTuple):
+    h: jax.Array       # (B, d) recurrence state
+    conv: jax.Array    # (B, CONV_WIDTH - 1, d) trailing conv inputs
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": _init(ks[0], (d, d), dtype=dtype),      # input branch proj
+        "w_gate": _init(ks[1], (d, d), dtype=dtype),   # multiplicative branch
+        "w_out": _init(ks[2], (d, d), dtype=dtype),
+        "conv_w": _init(ks[3], (CONV_WIDTH, d), scale=0.1, dtype=dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_r": _init(ks[4], (d, d), dtype=dtype),
+        "b_r": jnp.zeros((d,), jnp.float32),
+        "w_i": _init(ks[5], (d, d), dtype=dtype),
+        "b_i": jnp.zeros((d,), jnp.float32),
+        "lam": jnp.full((d,), 3.0, jnp.float32),       # Lambda param
+    }
+
+
+def _gates(x, p):
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])      # (B,T,d) <= 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i \
+        * x.astype(jnp.float32)
+    return a, gated_in
+
+
+def rg_lru(x, p, h0):
+    """x: (B, T, d); h0: (B, d). Returns (y (B,T,d), h_T)."""
+    a, u = _gates(x, p)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_scan, b_scan = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = a_scan * h0[:, None, :].astype(jnp.float32) + b_scan
+    return y.astype(x.dtype), y[:, -1, :]
+
+
+def rg_lru_step(x, p, h0):
+    """Single-token decode. x: (B, d); h0: (B, d)."""
+    a, u = _gates(x[:, None, :], p)
+    h = a[:, 0] * h0.astype(jnp.float32) + u[:, 0]
+    return h.astype(x.dtype), h
+
+
+def _causal_conv(x, w, b, tail):
+    """Depthwise causal conv, width CONV_WIDTH. x: (B,T,d); tail: (B,W-1,d)."""
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+    out = jnp.zeros_like(x)
+    for j in range(CONV_WIDTH):
+        out = out + xp[:, j:j + T, :] * w[CONV_WIDTH - 1 - j]
+    return out + b
+
+
+def recurrent_block(x, p, cfg: ModelConfig, state: RgState):
+    """The RecurrentGemma recurrent block. x: (B,T,d) -> (out, new state)."""
+    ux = x @ p["w_x"]
+    u = _causal_conv(ux, p["conv_w"], p["conv_b"], state.conv)
+    y, h_fin = rg_lru(u, p, state.h)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    out = (y * gate) @ p["w_out"]
+    out = specs.constrain(out, specs.BATCH_AXES, None, None)
+    new_tail = jnp.concatenate(
+        [state.conv.astype(x.dtype), ux], axis=1)[:, -(CONV_WIDTH - 1):, :]
+    return out, RgState(h=h_fin.astype(state.h.dtype), conv=new_tail)
+
+
+def recurrent_block_step(x, p, cfg: ModelConfig, state: RgState):
+    """Decode step. x: (B, 1, d)."""
+    u1 = (x @ p["w_x"])[:, 0, :]                       # (B, d)
+    window = jnp.concatenate(
+        [state.conv.astype(x.dtype), u1[:, None, :]], axis=1)  # (B, W, d)
+    # window is time-ordered [u_{t-W+1} .. u_t]; conv_w[m] weights u_{t-m}
+    u = jnp.einsum("bwd,wd->bd", window, p["conv_w"][::-1]) + p["conv_b"]
+    h, h_new = rg_lru_step(u, p, state.h)
+    gate = jax.nn.gelu(x[:, 0, :] @ p["w_gate"])
+    out = ((h * gate) @ p["w_out"])[:, None, :]
+    new_state = RgState(h=h_new.astype(state.h.dtype),
+                        conv=window[:, 1:, :].astype(state.conv.dtype))
+    return out, new_state
+
+
+def init_rg_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RgState:
+    d = cfg.d_model
+    return RgState(h=jnp.zeros((batch, d), dtype),
+                   conv=jnp.zeros((batch, CONV_WIDTH - 1, d), dtype))

@@ -1,0 +1,193 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent per-channel decay +
+channel-mix (arXiv:2404.05892), implemented with a *chunked* linear
+recurrence.
+
+Recurrence per head (head dim n):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            (S: n x n state)
+    o_t = r_t S_{t-1} + (r_t ⊙ u ⊙ k_t) v_t        (u: current-token bonus)
+
+Chunked evaluation (chunk length c): within a chunk with cumulative decay
+P_t = prod_{s<=t} w_s,
+
+    o_t   = (r_t ⊙ P_{t-1}) S_0                          (inter-chunk)
+          + sum_{s<t} [(r_t ⊙ P_{t-1}/P_s) · k_s] v_s    (intra, strictly past)
+          + [(r_t ⊙ u) · k_t] v_t                        (current-token bonus)
+    S_c   = diag(P_c) S_0 + sum_s diag(P_c / P_s) k_s^T v_s
+
+All ratios P_a/P_b with a >= b are products of w in (0,1] so they never
+overflow; computation is f32.  The chunk dimension maps naturally onto an
+MXU tile (c = 64), which is also how a Pallas WKV kernel would block it —
+on TPU this formulation turns a length-T scan into T/c (c x c) matmuls.
+
+Serving: decode_step updates S with the O(1) recurrence — this is why
+`long_500k` runs for rwkv6 with constant state memory.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+from repro.sharding import specs
+
+CHUNK = 64
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # (B, H, n, n) wkv state
+    x_tm: jax.Array     # (B, d) previous token input (time-mix shift)
+    x_cm: jax.Array     # (B, d) previous token input (channel-mix shift)
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    n = cfg.rwkv_head_dim
+    H = d // n
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 64)
+    return {
+        "w_r": _init(ks[0], (d, d), dtype=dtype),
+        "w_k": _init(ks[1], (d, d), dtype=dtype),
+        "w_v": _init(ks[2], (d, d), dtype=dtype),
+        "w_g": _init(ks[3], (d, d), dtype=dtype),
+        "w_o": _init(ks[4], (d, d), dtype=dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(decay0 + tanh(x A) B))
+        "decay0": jnp.full((d,), -1.0, jnp.float32),
+        "decay_A": _init(ks[5], (d, lora), dtype=dtype),
+        "decay_B": _init(ks[6], (lora, d), dtype=dtype),
+        "bonus_u": _init(ks[7], (d,), scale=0.5, dtype=jnp.float32),
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        # channel-mix
+        "cm_wk": _init(ks[8], (d, f), dtype=dtype),
+        "cm_wv": _init(ks[9], (f, d), dtype=dtype),
+        "cm_mix": jnp.full((d,), 0.5, jnp.float32),
+    }
+
+
+def _token_shift(x, x_prev, mix):
+    """lerp(x_{t-1}, x_t, mix): x (B,T,d), x_prev (B,d) -> shifted (B,T,d)."""
+    prev = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return x + (prev - x) * (1.0 - mix)
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """One chunk of the WKV recurrence.
+
+    r,k,v,w: (B, H, c, n) f32 (w = per-step decay in (0,1]); u: (H, n) or (n,)
+    s0: (B, H, n, n).  Returns (o (B,H,c,n), s_c).
+    """
+    if u.ndim == 2:
+        u = u[:, None, :]                                    # (H,1,n)
+    logw = jnp.log(jnp.maximum(w, 1e-12))
+    P = jnp.exp(jnp.cumsum(logw, axis=2))                    # (B,H,c,n)
+    P_prev = P / w                                           # decay to t-1
+    # inter-chunk: (r ⊙ P_prev) @ S0
+    o_inter = jnp.einsum("bhtn,bhnm->bhtm", r * P_prev, s0)
+    # intra-chunk, strictly lower triangular
+    kd = k / P                                               # k_s / P_s
+    scores = jnp.einsum("bhtn,bhsn->bhts", r * P_prev, kd)   # (B,H,c,c)
+    c = r.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    scores = jnp.where(tri[None, None], scores, 0.0)
+    # current-token bonus on the diagonal
+    diag = jnp.einsum("bhtn,bhtn->bht", r * u, k)
+    o_intra = jnp.einsum("bhts,bhsn->bhtn", scores, v) + diag[..., None] * v
+    # state update
+    P_c = P[:, :, -1:, :]                                    # (B,H,1,n)
+    s_new = (P_c[:, :, 0, :, None] * s0
+             + jnp.einsum("bhsn,bhsm->bhnm", k * (P_c / P), v))
+    return o_inter + o_intra, s_new
+
+
+def _wkv(r, k, v, w, u, s0):
+    """Full-sequence WKV via scan over chunks. Inputs (B,H,T,n)."""
+    B, H, T, n = r.shape
+    c = min(CHUNK, T)
+    pad = (-T) % c
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+    nc = (T + pad) // c
+    rc = r.reshape(B, H, nc, c, n).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, c, n).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, c, n).transpose(2, 0, 1, 3, 4)
+    wc = w.reshape(B, H, nc, c, n).transpose(2, 0, 1, 3, 4)
+
+    def step(s, xs):
+        rr, kk, vv, ww = xs
+        o, s2 = _wkv_chunk(rr, kk, vv, ww, u, s)
+        return s2, o
+
+    s_fin, oc = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * c, n)
+    return o[:, :, :T, :], s_fin
+
+
+def _wkv_step(r, k, v, w, u, s0):
+    """Single-token decode: r,k,v,w (B,H,n); s0 (B,H,n,n)."""
+    o = jnp.einsum("bhn,bhnm->bhm", r, s0) + \
+        jnp.einsum("bhn,bhn->bh", r * u, k)[..., None] * v
+    s = w[..., :, None] * s0 + k[..., :, None] * v[..., None, :]
+    return o, s
+
+
+def _project(x, p, cfg: ModelConfig, x_prev):
+    """Token-shift + projections shared by train and decode paths.
+
+    x: (B, T, d). Returns r,k,v,w (B,H,T,n), gate g (B,T,d).
+    """
+    B, T, d = x.shape
+    n = cfg.rwkv_head_dim
+    H = d // n
+    xr = _token_shift(x, x_prev, p["mix_r"].astype(x.dtype))
+    xk = _token_shift(x, x_prev, p["mix_k"].astype(x.dtype))
+    xv = _token_shift(x, x_prev, p["mix_v"].astype(x.dtype))
+    r = (xr @ p["w_r"]).reshape(B, T, H, n).transpose(0, 2, 1, 3)
+    k = (xk @ p["w_k"]).reshape(B, T, H, n).transpose(0, 2, 1, 3)
+    v = (xv @ p["w_v"]).reshape(B, T, H, n).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(x @ p["w_g"])
+    # Finch: data-dependent decay
+    dd = jnp.tanh(xk @ p["decay_A"]) @ p["decay_B"]
+    w = jnp.exp(-jnp.exp(p["decay0"].astype(jnp.float32)
+                         + dd.astype(jnp.float32)))           # (B,T,d) in (0,1)
+    w = w.reshape(B, T, H, n).transpose(0, 2, 1, 3)
+    return r, k, v, w, g
+
+
+def time_mix(x, p, cfg: ModelConfig, state: RwkvState):
+    """RWKV6 attention-replacement. x: (B,T,d) -> (out, new state pieces)."""
+    B, T, d = x.shape
+    n = cfg.rwkv_head_dim
+    H = d // n
+    r, k, v, w, g = _project(x, p, cfg, state.x_tm)
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, n)
+    o, s_fin = _wkv(r.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), w, u,
+                    state.s.astype(jnp.float32))
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, d).astype(x.dtype)
+    out = (o * g) @ p["w_o"]
+    out = specs.constrain(out, specs.BATCH_AXES, None, None)
+    return out, s_fin.astype(state.s.dtype), x[:, -1, :]
+
+
+def channel_mix(x, p, cfg: ModelConfig, x_prev):
+    xk = _token_shift(x, x_prev, p["cm_mix"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return h @ p["cm_wv"], x[:, -1, :]
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RwkvState:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    H = d // n
+    return RwkvState(s=jnp.zeros((batch, H, n, n), dtype),
+                     x_tm=jnp.zeros((batch, d), dtype),
+                     x_cm=jnp.zeros((batch, d), dtype))

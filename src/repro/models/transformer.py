@@ -1,0 +1,344 @@
+"""Unified decoder stack covering every assigned architecture.
+
+A model is a repeating ``layer_pattern`` of blocks ('g' global attention,
+'l' local attention, 'r' RG-LRU recurrent, 's' RWKV6), scanned over groups
+with stacked parameters (keeps HLO size O(pattern) instead of O(layers) for
+the 35-94 layer configs), plus an unrolled tail for non-divisible depths.
+
+Modes:
+  train   — full-sequence forward, loss over labels; recurrent state zeros.
+  prefill — full-sequence forward returning logits + caches/states.
+  decode  — one token against caches (KV ring-buffers for 'l', O(1) states
+            for 'r'/'s').
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru
+from repro.models import rwkv6
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed, init_embedding, init_mlp,
+                                 init_rms_norm, mlp, rms_norm,
+                                 softmax_cross_entropy, unembed)
+from repro.sharding import specs
+
+ATTN_CHUNK = 1024  # query-chunked attention above this sequence length
+
+
+# --------------------------------------------------------------------- init
+
+def init_layer(key, cfg: ModelConfig, kind: str, dtype=jnp.float32,
+               cross: bool = False) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": init_rms_norm(cfg.d_model),
+                         "ln2": init_rms_norm(cfg.d_model)}
+    if kind in ("g", "l"):
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype=dtype)
+        if cfg.is_moe:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype=dtype)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype)
+        if cross:
+            p["ln_x"] = init_rms_norm(cfg.d_model)
+            p["xattn"] = attn.init_attention(ks[2], cfg, dtype=dtype)
+    elif kind == "r":
+        p["rg"] = rglru.init_rglru(ks[0], cfg, dtype=dtype)
+        p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype)
+    elif kind == "s":
+        p["rwkv"] = rwkv6.init_rwkv(ks[0], cfg, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def n_groups_tail(cfg: ModelConfig) -> Tuple[int, int]:
+    plen = len(cfg.layer_pattern)
+    return cfg.n_layers // plen, cfg.n_layers % plen
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32,
+                cross: bool = False) -> Dict[str, Any]:
+    """Parameters for the decoder stack (+ embeddings + final norm)."""
+    n_groups, tail = n_groups_tail(cfg)
+    keys = jax.random.split(key, 3 + tail)
+    p: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg, dtype=dtype),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if n_groups:
+        def one_group(k):
+            kk = jax.random.split(k, len(cfg.layer_pattern))
+            return [init_layer(kk[j], cfg, kind, dtype, cross)
+                    for j, kind in enumerate(cfg.layer_pattern)]
+        group_keys = jax.random.split(keys[1], n_groups)
+        groups = [one_group(k) for k in group_keys]
+        # stack over groups: list-of-list-of-dicts -> list-of-stacked-dicts
+        p["groups"] = [
+            jax.tree.map(lambda *xs: jnp.stack(xs), *[g[j] for g in groups])
+            for j in range(len(cfg.layer_pattern))
+        ]
+    p["tail"] = [init_layer(keys[3 + i], cfg,
+                            cfg.layer_pattern[i % len(cfg.layer_pattern)],
+                            dtype, cross)
+                 for i in range(tail)]
+    return p
+
+
+# ------------------------------------------------------------------- caches
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                     dtype=jnp.float32, enc_seq: int = 0):
+    if kind in ("g", "l"):
+        window = cfg.window if kind == "l" else cfg.long_context_window
+        c = {"kv": attn.init_cache(cfg, batch, seq, window, dtype)}
+        if enc_seq:
+            c["xkv"] = attn.init_cache(cfg, batch, enc_seq, None, dtype)
+        return c
+    if kind == "r":
+        return {"rg": rglru.init_rg_state(cfg, batch, dtype)}
+    if kind == "s":
+        return {"rwkv": rwkv6.init_state(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.float32,
+                enc_seq: int = 0):
+    """Zero caches: (stacked-per-slot list, tail list)."""
+    n_groups, tail = n_groups_tail(cfg)
+    mk = lambda kind: init_layer_cache(cfg, kind, batch, seq, dtype, enc_seq)
+    grp = []
+    if n_groups:
+        for kind in cfg.layer_pattern:
+            one = mk(kind)
+            grp.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one))
+    tl = [mk(cfg.layer_pattern[i % len(cfg.layer_pattern)])
+          for i in range(tail)]
+    return {"groups": grp, "tail": tl}
+
+
+# ------------------------------------------------------------------- layers
+
+def _ffn_or_moe(x, lp, cfg: ModelConfig):
+    if cfg.is_moe and "moe" in lp:
+        y, aux = moe_lib.moe_ffn(x, lp["moe"], cfg)
+        return y, aux
+    return mlp(x, lp["ffn"]), 0.0
+
+
+def apply_layer(x, lp, cfg: ModelConfig, kind: str, *, mode: str,
+                positions=None, cache=None, pos=None, enc_out=None):
+    """One block. Returns (x, new_cache, aux)."""
+    aux = 0.0
+    window = cfg.window if kind == "l" else cfg.long_context_window
+    h = rms_norm(x, lp["ln1"]["gamma"], cfg.norm_eps)
+
+    if kind in ("g", "l"):
+        if mode == "decode":
+            o, new_kv = attn.decode_attend(h, lp["attn"], cfg, cache["kv"],
+                                           pos, window=window)
+        else:
+            o, new_kv = _attend_maybe_chunked(h, lp["attn"], cfg, positions,
+                                              window=window)
+        x = x + o
+        xkv = None
+        if "xattn" in lp and (enc_out is not None or cache is not None):
+            hx = rms_norm(x, lp["ln_x"]["gamma"], cfg.norm_eps)
+            if mode == "decode":
+                xkv = cache["xkv"]
+                ox, _ = attn.decode_attend(hx, lp["xattn"], cfg,
+                                           xkv, pos, cross=True)
+            else:
+                enc_hidden, enc_pos = enc_out
+                xkv = attn.project_kv(enc_hidden, lp["xattn"], cfg)
+                ox, _ = attn.attend(hx, lp["xattn"], cfg, positions,
+                                    causal=False, kv=(xkv.k, xkv.v, enc_pos))
+            x = x + ox
+        h2 = rms_norm(x, lp["ln2"]["gamma"], cfg.norm_eps)
+        f, aux = _ffn_or_moe(h2, lp, cfg)
+        x = x + f
+        new_cache = None
+        if mode != "train":
+            new_cache = {"kv": new_kv}
+            if "xattn" in lp and xkv is not None:
+                new_cache["xkv"] = xkv
+    elif kind == "r":
+        st = cache["rg"]
+        if mode == "decode":
+            o, new_st = rglru.recurrent_block_step(h, lp["rg"], cfg, st)
+        else:
+            o, new_st = rglru.recurrent_block(h, lp["rg"], cfg, st)
+        x = x + o
+        h2 = rms_norm(x, lp["ln2"]["gamma"], cfg.norm_eps)
+        x = x + mlp(h2, lp["ffn"])
+        new_cache = {"rg": new_st}
+    elif kind == "s":
+        st = cache["rwkv"]
+        if mode == "decode":
+            o, s_new, x_tm = _rwkv_decode(h, lp["rwkv"], cfg, st)
+        else:
+            o, s_new, x_tm = rwkv6.time_mix(h, lp["rwkv"], cfg, st)
+        x = x + o
+        h2 = rms_norm(x, lp["ln2"]["gamma"], cfg.norm_eps)
+        cm, x_cm = rwkv6.channel_mix(h2, lp["rwkv"], cfg, st.x_cm)
+        x = x + cm
+        new_cache = {"rwkv": rwkv6.RwkvState(s=s_new, x_tm=x_tm, x_cm=x_cm)}
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _rwkv_decode(h, p, cfg, st):
+    B, T, d = h.shape  # T == 1
+    n = cfg.rwkv_head_dim
+    H = d // n
+    r, k, v, w, g = rwkv6._project(h, p, cfg, st.x_tm)
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, n)
+    o, s_new = rwkv6._wkv_step(
+        r[:, :, 0].astype(jnp.float32), k[:, :, 0].astype(jnp.float32),
+        v[:, :, 0].astype(jnp.float32), w[:, :, 0], u,
+        st.s.astype(jnp.float32))
+    o = o.reshape(B, 1, d).astype(h.dtype)
+    out = (o * g) @ p["w_o"]
+    return out, s_new.astype(st.s.dtype), h[:, -1, :]
+
+
+def _attend_maybe_chunked(h, p, cfg: ModelConfig, positions, *, window):
+    """Query-chunked attention for long sequences (bounds score memory)."""
+    B, T, _ = h.shape
+    if T <= ATTN_CHUNK:
+        return attn.attend(h, p, cfg, positions, causal=True, window=window)
+    nchunk = T // ATTN_CHUNK
+    assert T % ATTN_CHUNK == 0, "seq must be a multiple of the attn chunk"
+    q, k, v = attn._proj_qkv(h, p, cfg)
+    q = attn.rope(q, positions, cfg.rope_theta)
+    k = attn.rope(k, positions, cfg.rope_theta)
+    tsh = attn.time_sharded(cfg, ATTN_CHUNK)
+    if tsh:
+        # shard each query chunk's time dim over 'model' (see
+        # attention.time_sharded) — scores/probs/PV are then fully local
+        q = specs.constrain(q, specs.BATCH_AXES, None, None, None)
+        k = specs.constrain(k, specs.BATCH_AXES, None, None, None)
+    else:
+        q = specs.constrain(q, specs.BATCH_AXES, None, specs.MODEL_AXIS,
+                            None)
+        k = specs.constrain(k, specs.BATCH_AXES, None, specs.MODEL_AXIS,
+                            None)
+    qc = q.reshape(B, nchunk, ATTN_CHUNK, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(nchunk, ATTN_CHUNK)
+
+    def one_chunk(_, xs):
+        qq, pp = xs
+        if tsh:
+            qq = specs.constrain(qq, specs.BATCH_AXES, specs.MODEL_AXIS,
+                                 None, None)
+        scores = attn._gqa_scores(qq, k, cfg.attn_softcap)
+        if tsh:
+            scores = specs.constrain(scores, specs.BATCH_AXES, None, None,
+                                     specs.MODEL_AXIS, None)
+        mask = pp[:, None] >= positions[None, :]
+        if window is not None:
+            mask &= pp[:, None] - positions[None, :] < window
+        scores = jnp.where(mask[None, None, None], scores, attn.NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(h.dtype)
+        o = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+        if tsh:
+            o = specs.constrain(o, specs.BATCH_AXES, specs.MODEL_AXIS,
+                                None, None, None)
+        return None, o.reshape(qq.shape[0], qq.shape[1], -1)
+
+    _, oc = jax.lax.scan(one_chunk, None, (qc, pc))
+    o = oc.transpose(1, 0, 2, 3).reshape(B, T, -1)
+    out = o @ p["wo"]
+    out = specs.constrain(out, specs.BATCH_AXES, None, None)
+    return out, attn.KVCache(k=k, v=v)
+
+
+# -------------------------------------------------------------------- stack
+
+def run_stack(x, params, cfg: ModelConfig, *, mode: str, positions=None,
+              caches=None, pos=None, enc_out=None, remat: bool = True):
+    """Run all layers. Returns (x, new_caches, aux_sum)."""
+    n_groups, tail = n_groups_tail(cfg)
+    new_caches = {"groups": [], "tail": []}
+    aux_total = 0.0
+
+    if n_groups:
+        def group_body(carry, xs):
+            xx, aux = carry
+            gp = xs["p"]
+            gc = xs.get("c")
+            ncs = []
+            for j, kind in enumerate(cfg.layer_pattern):
+                cache_j = gc[j] if gc is not None else None
+                xx, nc, a = apply_layer(xx, gp[j], cfg, kind, mode=mode,
+                                        positions=positions, cache=cache_j,
+                                        pos=pos, enc_out=enc_out)
+                ncs.append(nc)
+            return (xx, aux + a), ncs
+
+        body = group_body
+        if remat and mode == "train":
+            body = jax.checkpoint(group_body)
+        xs = {"p": params["groups"]}
+        if caches is not None:
+            xs["c"] = caches["groups"]
+        elif any(k in ("r", "s") for k in cfg.layer_pattern):
+            # training of recurrent archs: zero initial state per group
+            xs["c"] = init_caches(cfg, x.shape[0], 1, x.dtype)["groups"]
+        (x, aux_total), ncs = jax.lax.scan(body, (x, 0.0), xs)
+        new_caches["groups"] = ncs
+
+    for i in range(tail):
+        kind = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+        cache_i = caches["tail"][i] if caches is not None else (
+            init_layer_cache(cfg, kind, x.shape[0], 1, x.dtype)
+            if kind in ("r", "s") else None)
+        x, nc, a = apply_layer(x, params["tail"][i], cfg, kind, mode=mode,
+                               positions=positions, cache=cache_i, pos=pos,
+                               enc_out=enc_out)
+        new_caches["tail"].append(nc)
+        aux_total = aux_total + a
+
+    x = rms_norm(x, params["final_norm"]["gamma"], cfg.norm_eps)
+    return x, new_caches, aux_total
+
+
+# ----------------------------------------------------------------- frontend
+
+def forward_tokens(params, cfg: ModelConfig, tokens, *, mode: str,
+                   caches=None, pos=None, enc_out=None,
+                   prefix_embeds=None, remat: bool = True,
+                   skip_unembed: bool = False):
+    """Token-level forward. prefix_embeds (B, P, d) are prepended (VLM).
+
+    skip_unembed=True returns the final-norm hidden states instead of
+    logits (the training loss fuses unembed+CE in token chunks).
+    """
+    x = embed(tokens, params["embed"], cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = specs.constrain(x, specs.BATCH_AXES, None, None)
+    T = x.shape[1]
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.arange(T)
+    x, new_caches, aux = run_stack(x, params, cfg, mode=mode,
+                                   positions=positions, caches=caches,
+                                   pos=pos, enc_out=enc_out, remat=remat)
+    if skip_unembed:
+        return x, new_caches, aux
+    logits = unembed(x, params["embed"], cfg)
+    logits = specs.constrain(logits, specs.BATCH_AXES, None,
+                             specs.MODEL_AXIS)
+    return logits, new_caches, aux

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, adamw, apply_updates, global_norm, sgd
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "global_norm", "sgd",
+           "constant", "cosine", "warmup_cosine"]

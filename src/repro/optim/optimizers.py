@@ -1,0 +1,90 @@
+"""Minimal optimizer library (no external deps): SGD + AdamW.
+
+API mirrors the usual (init, update) pair:
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr=1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], grads)
+            upd = jax.tree.map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree.map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr=1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          grad_clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(
+            jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["v"], grads)
+        t = step.astype(jnp.float32)
+        mhat = jax.tree.map(lambda mm: mm / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda vv: vv / (1 - b2 ** t), v)
+        lr_t = _lr_at(lr, step)
+        upd = jax.tree.map(
+            lambda mm, vv: -lr_t * mm / (jnp.sqrt(vv) + eps), mhat, vhat)
+        if weight_decay:
+            upd = jax.tree.map(lambda u, p: u - lr_t * weight_decay
+                               * p.astype(jnp.float32), upd, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init=init, update=update)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,186 @@
+"""Parameter / cache / batch PartitionSpec rules for the zoo.
+
+Megatron-style tensor parallelism over 'model':
+  attention: head dim of Q/K/V projections, output proj input dim
+  FFN:       d_ff columns of gate/up, rows of down
+  MoE:       experts over 'model' (expert parallelism, see models/moe.py)
+  embeddings: vocab rows; unembed columns
+  RWKV / RG-LRU: channel (d) columns — the recurrent state is channel-
+  sharded, so the scan parallelizes across 'model' with no collectives.
+
+Batch dims shard over ('pod','data'); decode KV caches shard sequence over
+'model' (flash-decoding style split-K) because small GQA kv-head counts
+(1-16) cannot fill a 16-way axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+M = "model"
+
+# rules keyed by parameter leaf name -> spec of the *trailing* dims;
+# leading (stacked-group) dims are padded with None automatically.
+_RULES = {
+    # embeddings
+    "tok": (M, None),
+    "unembed": (None, M),
+    # attention
+    "wq": (None, M), "wk": (None, M), "wv": (None, M), "wo": (M, None),
+    "bq": (M,), "bk": (M,), "bv": (M,),
+    # dense / expert FFN (ndim decides)
+    "w_gate": (None, M), "w_up": (None, M), "w_down": (M, None),
+    # MoE (3D expert tensors override above by ndim)
+    "router": (None, None),
+    # rwkv time-mix
+    "w_r": (None, M), "w_k": (None, M), "w_v": (None, M), "w_g": (None, M),
+    "w_o": (M, None),
+    "decay0": (M,), "decay_A": (None, None), "decay_B": (None, M),
+    "bonus_u": (M,),
+    "mix_r": (None,), "mix_k": (None,), "mix_v": (None,),
+    "cm_wk": (None, M), "cm_wv": (M, None), "cm_mix": (None,),
+    # rg-lru
+    "w_x": (None, M), "w_i": (None, M), "w_out": (M, None),
+    "conv_w": (None, M), "conv_b": (M,), "b_r": (M,), "b_i": (M,),
+    "lam": (M,),
+    # norms / misc
+    "gamma": (None,),
+    "w": (None, None), "b": (None,),      # vlm projector (small)
+}
+
+_MOE_3D = {"w_gate": (M, None, None), "w_up": (M, None, None),
+           "w_down": (M, None, None)}
+
+
+def _spec_for(name: str, ndim: int, fsdp_axes=(), in_moe: bool = False) -> P:
+    if name in _MOE_3D and in_moe and ndim >= 3:
+        rule = _MOE_3D[name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    else:
+        rule = ()
+    rule = list(rule)
+    if fsdp_axes and len(rule) >= 2:
+        # ZeRO-3 / FSDP: shard one replicated dim of every matrix over the
+        # given batch axes; GSPMD inserts per-use all-gathers.  Beyond-paper
+        # optimization (the paper's FL workers each hold the full model).
+        for i, r in enumerate(rule):
+            if r is None:
+                rule[i] = tuple(fsdp_axes)
+                break
+    pad = ndim - len(rule)
+    return P(*((None,) * pad + tuple(rule)))
+
+
+def param_specs(params, fsdp_axes=()) -> Any:
+    """PartitionSpec pytree mirroring a params pytree.
+
+    fsdp_axes: extra mesh axes to shard large weights over (ZeRO-3 style).
+    """
+    def walk(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        in_moe = any(getattr(p, "key", None) == "moe" for p in path)
+        return _spec_for(name or "", jax.tree.leaves(leaf)[0].ndim
+                         if not hasattr(leaf, "ndim") else leaf.ndim,
+                         fsdp_axes, in_moe)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def _dim_ok(size: int, mesh, axis) -> bool:
+    return axis in mesh.shape and size % mesh.shape[axis] == 0 and size > 1
+
+
+def filter_divisible(spec_tree, shape_tree, mesh) -> Any:
+    """Drop spec entries whose mesh-axis product does not divide the dim.
+
+    Input shardings (NamedSharding on jit arguments) must tile evenly;
+    odd vocab sizes (whisper 51865, internvl 92553) fall back to
+    replicated on the offending dim.
+    """
+    def fix(spec, leaf):
+        shape = leaf.shape
+        ents = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, ent in zip(shape, ents):
+            if ent is None:
+                out.append(None)
+                continue
+            axes = ent if isinstance(ent, tuple) else (ent,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape.get(a, 1)
+            out.append(ent if n and dim % n == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(caches, mesh, batch_axes=("pod", "data")) -> Any:
+    """Specs for decode caches: batch -> data axes, long seq dims -> model.
+
+    Heuristic over leaf shapes (caches are anonymous pytrees):
+      KV caches   (G, B, S, kv, hd) / (B, S, kv, hd): B->batch, S->model
+      rwkv state  (G, B, H, n, n): B->batch, H->model
+      rg state h  (G, B, d): B->batch, d->model
+      conv tail   (G, B, w, d): B->batch, d->model
+    """
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    nm = mesh.shape.get(M, 1)
+
+    def leaf_spec(leaf):
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        # find batch dim: first dim whose size % nb == 0 after optional
+        # leading group dim; we mark dim 1 if ndim >= 3 else dim 0.
+        bdim = 1 if len(shp) >= 3 else 0
+        if baxes and shp[bdim] % nb == 0 and shp[bdim] > 1:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        # model axis: the largest remaining dim divisible by nm
+        cand = [(s, i) for i, s in enumerate(shp)
+                if i != bdim and i != 0 and s % nm == 0 and s >= nm]
+        if len(shp) <= 2 and shp[-1] % nm == 0 and shp[-1] >= nm:
+            cand.append((shp[-1], len(shp) - 1))
+        if cand and nm > 1:
+            _, i = max(cand)
+            if spec[i] is None:
+                spec[i] = M
+        return P(*spec)
+
+    return jax.tree.map(leaf_spec, caches)
+
+
+def batch_specs(batch, batch_axes=("pod", "data"), mesh=None) -> Any:
+    baxes = tuple(a for a in batch_axes if mesh is None or a in mesh.shape)
+    ax = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def leaf_spec(leaf):
+        shp = leaf.shape
+        if shp and shp[0] > 1 and (mesh is None or _divides(shp[0], mesh, baxes)):
+            return P(*((ax,) + (None,) * (len(shp) - 1)))
+        return P(*((None,) * len(shp)))
+
+    return jax.tree.map(leaf_spec, batch)
+
+
+def _divides(size, mesh, axes) -> bool:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return size % n == 0
+
+
+def to_named(spec_tree, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,110 @@
+"""Mesh axis conventions + sharding helpers.
+
+Axes:
+  'pod'   — inter-pod data parallelism (also an FL-worker axis)
+  'data'  — intra-pod data parallelism (FL-worker axis)
+  'model' — tensor parallelism (heads / d_ff / vocab / experts / cache-seq)
+
+`constrain` is a no-op outside a mesh context so that model code runs
+unchanged in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")   # logical batch axis (flattened FL workers)
+MODEL_AXIS = "model"
+
+_SUSPENDED = False
+
+
+@contextlib.contextmanager
+def suspended():
+    """Drop *batch-axis* constraint entries (trace-time flag).
+
+    Used by the per-worker vmap in ``launch.steps``: inside the worker vmap
+    the activation dim-0 is the *per-worker* batch, so the model's
+    batch-axis constraints would fight the stacked worker-dim sharding.
+    Model-axis entries are kept — vmap's batching rule inserts the mapped
+    dim into the spec, so they stay positionally correct.
+    """
+    global _SUSPENDED
+    prev = _SUSPENDED
+    _SUSPENDED = True
+    try:
+        yield
+    finally:
+        _SUSPENDED = prev
+
+
+def model_axis_size() -> int:
+    """Size of the 'model' mesh axis on the active mesh (1 if absent)."""
+    m = _active_mesh()
+    if m is None:
+        return 1
+    return dict(m.shape).get(MODEL_AXIS, 1)
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.axis_names:
+        return None
+    return m
+
+
+def batch_axes(mesh=None) -> tuple:
+    """The subset of BATCH_AXES present on the active mesh."""
+    m = mesh or _active_mesh()
+    if m is None:
+        return ()
+    return tuple(a for a in BATCH_AXES if a in m.axis_names)
+
+
+def spec(*axes) -> P:
+    """Build a PartitionSpec, filtering axes absent from the active mesh.
+
+    Each arg is None, an axis name, or a tuple of axis names.
+    """
+    m = _active_mesh()
+    names = set(m.axis_names) if m is not None else set()
+
+    def fix(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(x for x in a if x in names)
+            return kept if kept else None
+        return a if a in names else None
+
+    return P(*[fix(a) for a in axes])
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint that degrades to identity with no mesh."""
+    if _active_mesh() is None:
+        return x
+    if _SUSPENDED:
+        axes = tuple(
+            None if a in BATCH_AXES or (
+                isinstance(a, (tuple, list))
+                and all(x_ in BATCH_AXES for x_ in a)) else a
+            for a in axes)
+    s = spec(*axes)
+    if all(a is None for a in s):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, s)
+    except ValueError:
+        return x
+
+
+def batch(x, *rest):
+    """Constrain dim 0 to the batch axes, remaining dims per `rest`."""
+    return constrain(x, BATCH_AXES, *rest)

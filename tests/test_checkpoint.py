@@ -1,0 +1,56 @@
+"""Checkpoint store: round-trip, latest-step resolution, GC, mismatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def _tree():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros((), jnp.int32)]}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), 3, t, extra={"step": 3, "note": "hi"})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    out, extra = store.restore(str(tmp_path), like)
+    assert extra == {"step": 3, "note": "hi"}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 5, 9, 12):
+        store.save(str(tmp_path), s, t, keep=2)
+    assert store.latest_step(str(tmp_path)) == 12
+    # keep=2 → only 9 and 12 remain
+    assert store.latest_step(str(tmp_path)) == 12
+    with pytest.raises(FileNotFoundError):
+        store.restore(str(tmp_path) + "/nope", t)
+    out, _ = store.restore(str(tmp_path), t, step=9)
+    assert jax.tree.structure(out) == jax.tree.structure(t)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    bad = {"w": jnp.zeros((2, 3)), "other": jnp.zeros((1,))}
+    with pytest.raises(ValueError, match="mismatch"):
+        store.restore(str(tmp_path), bad)
+
+
+def test_restore_respects_sharding(tmp_path):
+    t = {"w": jnp.arange(8, dtype=jnp.float32)}
+    store.save(str(tmp_path), 2, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    like = {"w": jax.ShapeDtypeStruct((8,), jnp.float32, sharding=sh)}
+    out, _ = store.restore(str(tmp_path), like)
+    assert out["w"].sharding == sh

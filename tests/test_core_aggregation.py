@@ -1,0 +1,110 @@
+"""OTA aggregation (eqs. 8-9) + power policy (6-7) behaviour tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import power as power_lib
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(seed, U=6, D=9):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(U, D)))
+    h = jnp.asarray(rng.exponential(size=(U, D)) + 1e-2)
+    k_i = jnp.asarray(rng.integers(5, 20, U), jnp.float64)
+    return w, h, k_i
+
+
+def test_noise_free_all_selected_equals_fedavg():
+    """With beta=1, any common b, no noise and no clipping, (9) == (5)."""
+    w, h, k_i = _rand(0)
+    U, D = w.shape
+    beta = jnp.ones((U, D))
+    b = jnp.full((D,), 1.7)
+    what, _ = agg.ota_aggregate(w, h, beta, b, k_i,
+                                p_max=jnp.inf, noise=jnp.zeros(D), clip=False)
+    np.testing.assert_allclose(np.asarray(what),
+                               np.asarray(agg.fedavg(w, k_i)), rtol=1e-10)
+
+
+def test_noise_free_subset_equals_weighted_subset_average():
+    w, h, k_i = _rand(1)
+    U, D = w.shape
+    beta = jnp.zeros((U, D)).at[jnp.array([0, 2, 3])].set(1.0)
+    b = jnp.full((D,), 0.9)
+    what, _ = agg.ota_aggregate(w, h, beta, b, k_i, p_max=jnp.inf,
+                                noise=jnp.zeros(D), clip=False)
+    sel = np.array([0, 2, 3])
+    ref = (np.asarray(k_i)[sel, None] * np.asarray(w)[sel]).sum(0) \
+        / np.asarray(k_i)[sel].sum()
+    np.testing.assert_allclose(np.asarray(what), ref, rtol=1e-10)
+
+
+def test_clipping_never_violates_power_budget():
+    w, h, k_i = _rand(2)
+    U, D = w.shape
+    beta = jnp.ones((U, D))
+    b = jnp.full((D,), 50.0)  # aggressive scaling to force clipping
+    p_max = jnp.asarray(np.random.default_rng(3).uniform(0.1, 2.0, U))
+    viol = power_lib.power_violation(w, beta, k_i, b, h, p_max)
+    assert float(viol) <= 1e-9
+
+
+def test_tx_signal_matches_policy_when_within_budget():
+    """Below the power limit the clipped signal equals p*w exactly (eq. 6)."""
+    w, h, k_i = _rand(4)
+    U, D = w.shape
+    beta = jnp.ones((U, D))
+    b = jnp.full((D,), 1e-3)  # tiny b => never clipped
+    tx = power_lib.tx_signal(w, beta, k_i, b, h, p_max=1e6)
+    ref = power_lib.tx_signal_unclipped(w, beta, k_i, b, h)
+    np.testing.assert_allclose(np.asarray(tx), np.asarray(ref), rtol=1e-9)
+
+
+def test_unselected_entries_flagged_zero():
+    w, h, k_i = _rand(5)
+    U, D = w.shape
+    beta = jnp.zeros((U, D))
+    what, _ = agg.ota_aggregate(w, h, beta, jnp.ones(D), k_i,
+                                p_max=1.0, noise=jnp.zeros(D))
+    assert np.all(np.asarray(what) == 0.0)
+
+
+def test_noise_enters_inversely_scaled_by_denominator():
+    """w_hat - fedavg == z / (sum K_i beta b): doubling b halves noise error."""
+    w, h, k_i = _rand(6)
+    U, D = w.shape
+    beta = jnp.ones((U, D))
+    z = jnp.asarray(np.random.default_rng(7).normal(size=D))
+    e1, _ = agg.ota_aggregate(w, h, beta, jnp.full((D,), 1.0), k_i,
+                              p_max=jnp.inf, noise=z, clip=False)
+    e2, _ = agg.ota_aggregate(w, h, beta, jnp.full((D,), 2.0), k_i,
+                              p_max=jnp.inf, noise=z, clip=False)
+    fa = agg.fedavg(w, k_i)
+    np.testing.assert_allclose(np.asarray(e1 - fa),
+                               2.0 * np.asarray(e2 - fa), rtol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 16), st.integers(0, 10_000))
+def test_property_ota_linear_in_workers(U, D, seed):
+    """Superposition is linear: aggregating w and w' then summing equals
+    aggregating (w + w') — with common (beta, b, h, no clip, no noise)."""
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.normal(size=(U, D)))
+    w2 = jnp.asarray(rng.normal(size=(U, D)))
+    h = jnp.asarray(rng.exponential(size=(U, D)) + 1e-2)
+    k_i = jnp.asarray(rng.integers(1, 9, U), jnp.float64)
+    beta = jnp.ones((U, D))
+    b = jnp.full((D,), float(rng.uniform(0.5, 2.0)))
+    z = jnp.zeros(D)
+    a1, _ = agg.ota_aggregate(w1, h, beta, b, k_i, jnp.inf, z, clip=False)
+    a2, _ = agg.ota_aggregate(w2, h, beta, b, k_i, jnp.inf, z, clip=False)
+    a12, _ = agg.ota_aggregate(w1 + w2, h, beta, b, k_i, jnp.inf, z,
+                               clip=False)
+    np.testing.assert_allclose(np.asarray(a1 + a2), np.asarray(a12),
+                               rtol=1e-8, atol=1e-10)

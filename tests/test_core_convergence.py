@@ -1,0 +1,127 @@
+"""Unit tests for the closed-form convergence terms (Theorems 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import convergence as cv
+from repro.core.convergence import LearningConstants
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _setup(U=5, D=7, seed=0):
+    rng = np.random.default_rng(seed)
+    k_i = jnp.asarray(rng.integers(20, 40, size=U), jnp.float64)
+    beta = jnp.asarray(rng.integers(0, 2, size=(U, D)), jnp.float64)
+    # guarantee at least one selected worker per entry
+    beta = beta.at[0].set(1.0)
+    b = jnp.asarray(rng.uniform(0.5, 2.0, size=D))
+    return k_i, beta, b
+
+
+def test_theorem1_reduces_to_lemma2_when_ideal():
+    """All workers selected + no noise  =>  A = 1 - mu/L, B = 0 (Lemma 2)."""
+    c = LearningConstants(L=2.0, mu=1.0, rho1=0.3, rho2=0.01, sigma2=0.0)
+    U, D = 6, 11
+    k_i = jnp.full((U,), 10.0)
+    beta = jnp.ones((U, D))
+    b = jnp.ones((D,))
+    assert np.isclose(float(cv.A_t(beta, k_i, c)), 1 - c.mu / c.L)
+    assert np.isclose(float(cv.B_t(beta, b, k_i, c)), 0.0)
+
+
+def test_A_t_increases_when_fewer_workers():
+    c = LearningConstants()
+    k_i, beta, b = _setup()
+    a_full = cv.A_t(jnp.ones_like(beta), k_i, c)
+    a_part = cv.A_t(beta, k_i, c)
+    assert float(a_part) >= float(a_full)
+
+
+def test_B_t_decreases_with_power_scale():
+    c = LearningConstants(sigma2=1e-2)
+    k_i, beta, b = _setup()
+    b_small = cv.B_t(beta, 0.5 * b, k_i, c)
+    b_large = cv.B_t(beta, 2.0 * b, k_i, c)
+    assert float(b_large) < float(b_small)
+
+
+def test_gap_recursion_matches_manual_unroll():
+    c = LearningConstants()
+    T = 9
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(0.5, 0.9, T))
+    bb = jnp.asarray(rng.uniform(0.0, 0.1, T))
+    traj = cv.gap_recursion(a, bb, gap0=3.0)
+    ref = 3.0
+    for t in range(T):
+        ref = float(bb[t]) + float(a[t]) * ref
+        assert np.isclose(float(traj[t]), ref, rtol=1e-10)
+
+
+def test_ideal_rate_geometric():
+    c = LearningConstants(L=4.0, mu=1.0)
+    assert np.isclose(float(cv.ideal_rate(3, 8.0, c)), (0.75) ** 3 * 8.0)
+
+
+def test_remark1_sgd_equals_gd_when_kb_is_ki():
+    """Theorem 3 with K_b = K_i (uniform) must equal Theorem 1."""
+    c = LearningConstants(L=2.0, mu=0.7, rho1=0.2, rho2=0.005, sigma2=1e-3)
+    U, D = 4, 6
+    kb = 25.0
+    k_i = jnp.full((U,), kb)
+    rng = np.random.default_rng(2)
+    beta = jnp.asarray(rng.integers(0, 2, (U, D)), jnp.float64).at[1].set(1.0)
+    b = jnp.asarray(rng.uniform(0.5, 1.5, D))
+    np.testing.assert_allclose(float(cv.A_t_sgd(beta, k_i, kb, c)),
+                               float(cv.A_t(beta, k_i, c)), rtol=1e-9)
+    np.testing.assert_allclose(float(cv.B_t_sgd(beta, b, k_i, kb, c)),
+                               float(cv.B_t(beta, b, k_i, c)), rtol=1e-9)
+
+
+def test_sgd_gap_terms_decrease_with_kb():
+    """Remark 1: larger mini-batch K_b  =>  smaller A_t^SGD and B_t^SGD."""
+    c = LearningConstants(L=2.0, mu=0.7, rho1=0.2, rho2=0.005, sigma2=1e-3)
+    U, D = 5, 4
+    k_i = jnp.full((U,), 40.0)
+    beta = jnp.ones((U, D))
+    b = jnp.ones((D,))
+    a_small = float(cv.A_t_sgd(beta, k_i, 5.0, c))
+    a_big = float(cv.A_t_sgd(beta, k_i, 30.0, c))
+    assert a_big <= a_small + 1e-12
+    bs = float(cv.B_t_sgd(beta, b, k_i, 5.0, c))
+    bl = float(cv.B_t_sgd(beta, b, k_i, 30.0, c))
+    assert bl <= bs + 1e-12
+
+
+def test_proposition1_condition_makes_At_contractive():
+    c0 = LearningConstants(L=2.0, mu=1.0, rho1=0.1, rho2=0.0, sigma2=0.0)
+    U, D = 6, 8
+    rng = np.random.default_rng(3)
+    k_i = jnp.asarray(rng.integers(10, 30, U), jnp.float64)
+    lim = float(cv.rho2_limit_gd(k_i, D, c0))
+    c = LearningConstants(L=c0.L, mu=c0.mu, rho1=c0.rho1,
+                          rho2=0.99 * lim, sigma2=0.0)
+    # worst-case selection: a single worker (the smallest) per entry
+    i_min = int(jnp.argmin(k_i))
+    beta = jnp.zeros((U, D)).at[i_min].set(1.0)
+    assert float(cv.A_t(beta, k_i, c)) < 1.0
+
+
+def test_rho2_limit_sgd_positive_and_tighter_for_small_kb():
+    c = LearningConstants(L=2.0, mu=1.0)
+    U, K, D = 10, 400, 6
+    lim_small = float(cv.rho2_limit_sgd(U, K, 4, D, c))
+    lim_big = float(cv.rho2_limit_sgd(U, K, 40, D, c))
+    assert lim_small > 0 and lim_big > 0
+    assert lim_small <= lim_big  # bigger batches tolerate larger rho2
+
+
+def test_nonconvex_bound_decays_in_T():
+    c = LearningConstants(L=2.0, mu=1.0, rho1=0.1, rho2=1e-4)
+    k_i = jnp.full((5,), 20.0)
+    v_small = float(cv.nonconvex_stationarity_bound(0.5, 10, 4.0, k_i, 3, c))
+    v_big = float(cv.nonconvex_stationarity_bound(0.5, 1000, 4.0, k_i, 3, c))
+    assert v_big < v_small

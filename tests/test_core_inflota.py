@@ -1,0 +1,147 @@
+"""INFLOTA (Theorem 4) optimality tests: the U-point search equals an
+exhaustive mixed-integer enumeration, and basic structural properties."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import inflota
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case, case_numerator, r_t
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _brute_force(h, k_i, w_abs, eta, p_max, c, numer):
+    """Exhaustive optimum of P3 for a single entry.
+
+    For any fixed selection S, R is decreasing in b (noise term only), so
+    the best feasible b is min_{i in S} b_i^max; enumerate all non-empty S.
+    This is the MIP P3 ground truth (up to the continuous-b argument, which
+    Theorem 4's proof establishes).
+    """
+    U = h.shape[0]
+    bmax = np.abs(np.sqrt(p_max) * h / (k_i * (w_abs + eta)))
+    best = np.inf
+    best_sol = None
+    for bits in itertools.product([0, 1], repeat=U):
+        if not any(bits):
+            continue
+        sel = np.asarray(bits, dtype=np.float64)
+        b = min(bmax[i] for i in range(U) if bits[i])
+        r = float(r_t(jnp.asarray(sel), jnp.asarray(b),
+                      jnp.asarray(k_i), c, numer))
+        if r < best - 1e-15:
+            best = r
+            best_sol = (b, sel)
+    return best, best_sol
+
+
+def _rand_instance(rng, U):
+    h = rng.exponential(size=U) + 1e-2
+    k_i = rng.integers(5, 30, U).astype(np.float64)
+    w_abs = float(rng.uniform(0.01, 2.0))
+    eta = float(rng.uniform(0.01, 1.0))
+    p_max = rng.uniform(0.5, 20.0, U)
+    return h, k_i, w_abs, eta, p_max
+
+
+def test_search_matches_brute_force_fixed_seed():
+    c = LearningConstants(L=2.0, mu=1.0, rho1=0.4, rho2=0.003, sigma2=1e-3)
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        U = int(rng.integers(2, 8))
+        h, k_i, w_abs, eta, p_max = _rand_instance(rng, U)
+        numer = float(case_numerator(Case.GD_CONVEX, jnp.asarray(k_i), c, 0.1))
+        ref, _ = _brute_force(h, k_i, w_abs, eta, p_max, c, numer)
+        sol = inflota.solve(jnp.asarray(h)[:, None], jnp.asarray(k_i),
+                            jnp.asarray([w_abs]), eta, jnp.asarray(p_max),
+                            c, Case.GD_CONVEX, delta_prev=0.1)
+        assert np.isclose(float(sol.r[0]), ref, rtol=1e-6), (
+            trial, float(sol.r[0]), ref)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000),
+       st.sampled_from([Case.GD_CONVEX, Case.GD_NONCONVEX]))
+def test_property_search_is_optimal(U, seed, case):
+    c = LearningConstants(L=1.5, mu=0.6, rho1=0.2, rho2=0.01, sigma2=1e-2)
+    rng = np.random.default_rng(seed)
+    h, k_i, w_abs, eta, p_max = _rand_instance(rng, U)
+    numer = float(case_numerator(case, jnp.asarray(k_i), c, 0.05))
+    ref, _ = _brute_force(h, k_i, w_abs, eta, p_max, c, numer)
+    sol = inflota.solve(jnp.asarray(h)[:, None], jnp.asarray(k_i),
+                        jnp.asarray([w_abs]), eta, jnp.asarray(p_max),
+                        c, case, delta_prev=0.05)
+    assert float(sol.r[0]) <= ref * (1 + 1e-6)
+
+
+def test_solution_feasible_power():
+    """The returned (b, beta) satisfies the conservative constraint (41b)."""
+    c = LearningConstants()
+    rng = np.random.default_rng(1)
+    U, D = 7, 13
+    h = jnp.asarray(rng.exponential(size=(U, D)) + 1e-2)
+    k_i = jnp.asarray(rng.integers(5, 30, U), jnp.float64)
+    w_abs = jnp.asarray(rng.uniform(0.01, 1.0, D))
+    eta = 0.2
+    p_max = jnp.asarray(rng.uniform(0.5, 5.0, U))
+    sol = inflota.solve(h, k_i, w_abs, eta, p_max, c)
+    lhs = (sol.beta * k_i[:, None] * sol.b[None, :] / h) ** 2 \
+        * (w_abs[None, :] + eta) ** 2
+    assert float(jnp.max(lhs - p_max[:, None])) <= 1e-6
+
+
+def test_selected_set_monotone_in_b():
+    """beta(b) from eq. (44) only shrinks as b grows."""
+    c = LearningConstants()
+    rng = np.random.default_rng(2)
+    U, D = 6, 1
+    h = jnp.asarray(rng.exponential(size=(U, D)) + 1e-2)
+    k_i = jnp.asarray(rng.integers(5, 30, U), jnp.float64)
+    w_abs = jnp.asarray([0.5])
+    p_max = jnp.asarray(rng.uniform(0.5, 5.0, U))
+    betas = []
+    for b in [0.01, 0.1, 1.0, 10.0]:
+        betas.append(np.asarray(inflota.beta_of_b(
+            jnp.asarray([b]), h, k_i, w_abs, 0.1, p_max))[:, 0])
+    for lo, hi in zip(betas, betas[1:]):
+        assert np.all(hi <= lo)  # selection set shrinks
+
+
+def test_each_candidate_selects_its_own_worker():
+    """Under b = b_k^max, worker k itself must be feasible (boundary case)."""
+    c = LearningConstants()
+    rng = np.random.default_rng(3)
+    U = 9
+    h, k_i, w_abs, eta, p_max = _rand_instance(rng, U)
+    cand = inflota.candidate_b(jnp.asarray(h)[:, None], jnp.asarray(k_i),
+                               jnp.asarray([w_abs]), eta, jnp.asarray(p_max))
+    for k in range(U):
+        beta = inflota.beta_of_b(cand[k], jnp.asarray(h)[:, None],
+                                 jnp.asarray(k_i), jnp.asarray([w_abs]),
+                                 eta, jnp.asarray(p_max))
+        assert float(beta[k, 0]) == 1.0
+
+
+def test_bucketed_matches_entrywise_when_bucket_is_constant():
+    """If |w| is constant within each bucket and per-worker h is scalar,
+    bucketed solve == entrywise solve on the representative entries."""
+    c = LearningConstants()
+    rng = np.random.default_rng(4)
+    U, nb, per = 5, 4, 8
+    h_w = jnp.asarray(rng.exponential(size=U) + 1e-2)
+    k_i = jnp.asarray(rng.integers(5, 30, U), jnp.float64)
+    w_vals = rng.uniform(0.1, 1.0, nb)
+    w_abs = jnp.asarray(np.repeat(w_vals, per))
+    p_max = jnp.asarray(rng.uniform(0.5, 5.0, U))
+    sol_b = inflota.solve_bucketed(h_w, k_i, w_abs, 0.1, p_max, c, nb)
+    sol_e = inflota.solve(jnp.broadcast_to(h_w[:, None], (U, nb)), k_i,
+                          jnp.asarray(w_vals), 0.1, p_max, c)
+    np.testing.assert_allclose(np.asarray(sol_b.b), np.asarray(sol_e.b),
+                               rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(sol_b.beta),
+                               np.asarray(sol_e.beta))

@@ -1,0 +1,145 @@
+"""Distributed OTA aggregation == dense (paper-faithful) oracle.
+
+The stacked (pure-auto) path is a plain function over (W, N) arrays, so it
+is checked directly against ``repro.core.aggregation``.  The shard_map
+(manual-axes) path needs multiple devices: it runs in a subprocess with
+``--xla_force_host_platform_device_count=8``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import channel as chan
+from repro.core import inflota
+from repro.fl.dist import (OTAConfig, fedavg_stacked, ota_aggregate_stacked,
+                           sample_noise_sharded)
+from repro.core.objectives import Case
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _dense_reference(vals, key, t, cfg, nb):
+    """Re-derive the exact policy + OTA result the stacked path must hit."""
+    U, N = vals.shape
+    kg, kn = chan.round_keys(key, t)
+    h_workers = chan.sample_gains(kg, (U,), cfg.channel)
+    pad = (-N) % nb
+    vp = jnp.pad(jnp.abs(vals), ((0, 0), (0, pad)))
+    w_stat = jnp.max(jnp.max(vp.reshape(U, nb, -1), axis=2), axis=0)
+    k_i = jnp.full((U,), cfg.k_i)
+    kp, kz = jax.random.split(jax.random.fold_in(kn, 0))
+    sol = inflota.solve(jnp.broadcast_to(h_workers[:, None], (U, nb)), k_i,
+                        w_stat, cfg.eta, cfg.channel.p_max, cfg.constants,
+                        cfg.case, 0.0)
+    chunk = (N + nb - 1) // nb
+    b_e = jnp.repeat(sol.b, chunk)[:N]
+    beta_e = jnp.repeat(sol.beta, chunk, axis=1)[:, :N]
+    noise = sample_noise_sharded(kz, (N,), cfg.channel)
+    h_e = jnp.broadcast_to(h_workers[:, None], (U, N))
+    want, _ = agg.ota_aggregate(vals, h_e, beta_e, b_e, k_i,
+                                cfg.channel.p_max, noise)
+    return want
+
+
+@pytest.mark.parametrize("nb,N", [(1, 17), (4, 64), (8, 100)])
+def test_stacked_matches_dense_oracle(nb, N):
+    U = 6
+    cfg = OTAConfig(granularity="bucket" if nb > 1 else "tensor",
+                    n_buckets=nb, case=Case.GD_NONCONVEX)
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(U, N)), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    got, stats = ota_aggregate_stacked({"g": vals.reshape(U, N)},
+                                       key=key, t=5, cfg=cfg)
+    want = _dense_reference(vals, key, 5, cfg, nb)
+    np.testing.assert_allclose(np.asarray(got["g"]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert 0.0 < float(stats["selected_frac"]) <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(U=st.integers(2, 8), N=st.integers(1, 50),
+       t=st.integers(0, 100), scale=st.floats(0.01, 100.0))
+def test_property_stacked_matches_dense(U, N, t, scale):
+    cfg = OTAConfig(granularity="tensor", case=Case.GD_NONCONVEX)
+    rng = np.random.default_rng(U * 1000 + N)
+    vals = jnp.asarray(rng.normal(size=(U, N)) * scale, jnp.float32)
+    key = jax.random.PRNGKey(t)
+    got, _ = ota_aggregate_stacked({"g": vals}, key=key, t=t, cfg=cfg)
+    want = _dense_reference(vals, key, t, cfg, 1)
+    np.testing.assert_allclose(np.asarray(got["g"]), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_multileaf_trees_and_shapes():
+    cfg = OTAConfig(granularity="bucket", n_buckets=4)
+    rng = np.random.default_rng(1)
+    tree = {"a": jnp.asarray(rng.normal(size=(4, 3, 5)), jnp.float32),
+            "b": [jnp.asarray(rng.normal(size=(4, 7)), jnp.float32)]}
+    out, _ = ota_aggregate_stacked(tree, key=jax.random.PRNGKey(0), t=0,
+                                   cfg=cfg)
+    assert out["a"].shape == (3, 5)
+    assert out["b"][0].shape == (7,)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(out))
+
+
+def test_fedavg_stacked_weighted():
+    vals = jnp.asarray([[1.0, 2.0], [3.0, 6.0]])
+    k_i = jnp.asarray([1.0, 3.0])
+    out = fedavg_stacked({"x": vals}, k_i=k_i)
+    np.testing.assert_allclose(np.asarray(out["x"]), [2.5, 5.0])
+
+
+def test_perfect_policy_equals_weighted_mean():
+    cfg = OTAConfig(policy="perfect", channel=chan.ChannelConfig(sigma2=0.0))
+    rng = np.random.default_rng(2)
+    vals = jnp.asarray(rng.normal(size=(5, 11)), jnp.float32)
+    out, _ = ota_aggregate_stacked({"x": vals}, key=jax.random.PRNGKey(0),
+                                   t=0, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(out["x"]),
+                               np.asarray(jnp.mean(vals, axis=0)),
+                               rtol=1e-5, atol=1e-6)
+
+
+_SHMAP_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.fl.dist import OTAConfig, ota_aggregate_tree, \\
+        ota_aggregate_stacked
+    mesh = jax.make_mesh((8,), ("data",))
+    cfg = OTAConfig(granularity="bucket", n_buckets=4)
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(8, 23)), jnp.float32)
+    key = jax.random.PRNGKey(7)
+    def worker(v):
+        out, _ = ota_aggregate_tree({"g": v[0]}, key=key, t=3, cfg=cfg,
+                                    axis_names=("data",))
+        return out["g"]
+    got = jax.jit(jax.shard_map(worker, mesh=mesh, in_specs=(P("data"),),
+                                out_specs=P(), axis_names={"data"}))(vals)
+    want, _ = ota_aggregate_stacked({"g": vals}, key=key, t=3, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want["g"]),
+                               rtol=1e-5, atol=1e-6)
+    print("SHMAP_OK")
+""")
+
+
+def test_shard_map_path_matches_stacked_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SHMAP_PROG], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert "SHMAP_OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,30 @@
+"""CI guard for the multi-pod dry-run path (subprocess: 512 host devices).
+
+One cheap pair per step kind so regressions in launch/steps/dryrun are
+caught without paying the full 66-compile sweep.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CASES = [
+    ("qwen2-0.5b", "decode_32k", []),                    # decode path
+    ("whisper-base", "prefill_32k", []),                 # enc-dec prefill
+    ("qwen2-0.5b", "train_4k", ["--multi-pod"]),         # train + pod axis
+]
+
+
+@pytest.mark.parametrize("arch,shape,extra", _CASES)
+def test_dryrun_pair_compiles(arch, shape, extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, *extra],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    assert "1 OK, 0 FAIL" in r.stdout

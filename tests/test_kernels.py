@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+plus cross-checks against the repro.core reference implementations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg_core
+from repro.core import inflota as inflota_core
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case, case_numerator
+from repro.kernels import ops, ref
+
+
+def _ota_inputs(rng, U, D, dtype):
+    w = jnp.asarray(rng.normal(size=(U, D)), dtype)
+    h = jnp.asarray(rng.exponential(size=(U, D)) + 1e-2, dtype)
+    beta = jnp.asarray(rng.integers(0, 2, (U, D)), dtype)
+    b = jnp.asarray(rng.uniform(0.5, 2.0, D), dtype)
+    z = jnp.asarray(rng.normal(size=D) * 1e-2, dtype)
+    k_i = jnp.asarray(rng.integers(5, 20, U), dtype)
+    p_max = jnp.asarray(rng.uniform(0.5, 10.0, U), dtype)
+    return w, h, beta, b, z, k_i, p_max
+
+
+@pytest.mark.parametrize("U,D,block", [
+    (2, 128, 128), (4, 1024, 256), (20, 50890, 1024),
+    (7, 333, 128), (32, 4096, 2048), (1, 129, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ota_kernel_shapes(U, D, block, dtype):
+    rng = np.random.default_rng(U * 1000 + D)
+    args = _ota_inputs(rng, U, D, dtype)
+    out = ops.ota_aggregate(*args, block_d=block, interpret=True)
+    want = ref.ota_transmit_aggregate_ref(*args)
+    assert out.shape == (D,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_ota_kernel_bf16():
+    rng = np.random.default_rng(0)
+    args = _ota_inputs(rng, 8, 512, jnp.bfloat16)
+    out = ops.ota_aggregate(*args, block_d=256, interpret=True)
+    want = ref.ota_transmit_aggregate_ref(
+        *[a.astype(jnp.float32) for a in args])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_ota_kernel_matches_core_aggregation():
+    """Kernel == repro.core.aggregation.ota_aggregate (the paper path)."""
+    rng = np.random.default_rng(42)
+    U, D = 20, 2048
+    w, h, beta, b, z, k_i, p_max = _ota_inputs(rng, U, D, jnp.float32)
+    out = ops.ota_aggregate(w, h, beta, b, z, k_i, p_max, interpret=True)
+    want, _ = agg_core.ota_aggregate(w, h, beta, b, k_i, p_max, z, clip=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+def _search_inputs(rng, U, D, dtype=jnp.float32):
+    h = jnp.asarray(rng.exponential(size=(U, D)) + 1e-2, dtype)
+    w_abs = jnp.asarray(rng.uniform(0.01, 2.0, D), dtype)
+    k_i = jnp.asarray(rng.integers(5, 30, U), dtype)
+    p_max = jnp.asarray(rng.uniform(0.5, 10.0, U), dtype)
+    return h, w_abs, k_i, p_max
+
+
+@pytest.mark.parametrize("U,D,block", [
+    (2, 128, 128), (5, 777, 256), (20, 50890, 2048), (32, 1024, 512),
+])
+def test_search_kernel_vs_oracle(U, D, block):
+    rng = np.random.default_rng(U + D)
+    h, w_abs, k_i, p_max = _search_inputs(rng, U, D)
+    kw = dict(eta=0.3, numer=7.5, L=2.0, sigma2=1e-3)
+    b, beta, r = ops.inflota_search(h, w_abs, k_i, p_max,
+                                    block_d=block, interpret=True, **kw)
+    b0, beta0, r0 = ref.inflota_search_ref(h, w_abs, k_i, p_max, **kw)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(b0), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r0), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(beta), np.asarray(beta0))
+
+
+def test_search_kernel_matches_core_solver():
+    """Kernel attains the same optimum as repro.core.inflota.solve."""
+    rng = np.random.default_rng(7)
+    U, D = 12, 513
+    h, w_abs, k_i, p_max = _search_inputs(rng, U, D)
+    c = LearningConstants(L=2.0, mu=1.0, rho1=0.4, rho2=0.003, sigma2=1e-3)
+    numer = float(case_numerator(Case.GD_CONVEX, k_i, c, 0.2))
+    b, beta, r = ops.inflota_search(
+        h, w_abs, k_i, p_max, eta=0.25, numer=numer, L=c.L,
+        sigma2=c.sigma2, block_d=256, interpret=True)
+    sol = inflota_core.solve(h, k_i, w_abs, 0.25, p_max, c,
+                             Case.GD_CONVEX, delta_prev=0.2)
+    # Optima must agree in value; (b, beta) may differ only on exact ties.
+    np.testing.assert_allclose(np.asarray(r), np.asarray(sol.r),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(sol.b), rtol=1e-5)
+
+
+def test_search_kernel_selects_nonempty_sets():
+    rng = np.random.default_rng(9)
+    h, w_abs, k_i, p_max = _search_inputs(rng, 16, 384)
+    _, beta, _ = ops.inflota_search(h, w_abs, k_i, p_max, eta=0.1,
+                                    numer=3.0, L=1.0, sigma2=1e-4,
+                                    block_d=128, interpret=True)
+    assert float(jnp.min(jnp.sum(beta, axis=0))) >= 1.0
