@@ -41,13 +41,15 @@ def mlp_workers(U: int = 20, k_bar: int = 40, seed: int = 0,
 def run_policy(task, workers, test, policy: str, rounds: int,
                lr: float, case: Case, sigma2: float | None = None,
                k_b: int | None = None, seed: int = 0,
-               constants: LearningConstants | None = None) -> Dict:
+               constants: LearningConstants | None = None,
+               backend: str = "auto", scan: bool = False) -> Dict:
     chanc = PAPER_CHANNEL if sigma2 is None else ChannelConfig(
         sigma2=sigma2, p_max=PAPER_CHANNEL.p_max)
     cfg = FLConfig(rounds=rounds, lr=lr, policy=policy, case=case,
                    k_b=k_b, channel=chanc,
                    constants=constants or LearningConstants(
                        sigma2=chanc.sigma2),
+                   backend=backend, scan=scan,
                    seed=seed)
     tr = FLTrainer(task, workers, cfg)
     t0 = time.time()

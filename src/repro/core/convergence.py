@@ -34,15 +34,22 @@ class LearningConstants:
 def _sampling_ratio(beta, k_i):
     """sum_d ( K / sum_i K_i beta_i^d  - 1 )  — the selection penalty."""
     k_i = jnp.asarray(k_i)
-    K = jnp.sum(k_i)
     per_d = jnp.sum(k_i[:, None] * beta, axis=0)
-    return jnp.sum(K / jnp.maximum(per_d, _EPS) - 1.0)
+    return sampling_ratio_from_den(per_d, k_i)
 
 
 def _noise_norm2(beta, k_i, b):
     """|| (sum_i K_i beta_i ⊙ b)^{⊙-1} ||^2  over entries."""
     den = denominator(beta, k_i, b)
     return jnp.sum(1.0 / jnp.maximum(den, _EPS) ** 2)
+
+
+def sampling_ratio_from_den(den_ki, k_i):
+    """The selection penalty from the per-entry reduction
+    ``den_ki = sum_i K_i beta_i^d`` — lets callers (the fused Pallas round
+    kernel) evaluate A_t/B_t without ever materializing beta (U, D)."""
+    K = jnp.sum(jnp.asarray(k_i))
+    return jnp.sum(K / jnp.maximum(den_ki, _EPS) - 1.0)
 
 
 def A_t(beta, k_i, c: LearningConstants):
@@ -54,6 +61,20 @@ def B_t(beta, b, k_i, c: LearningConstants):
     """Theorem 1, eq. (15): per-round additive gap (GD)."""
     return (c.rho1 / (2 * c.L) * _sampling_ratio(beta, k_i)
             + _noise_norm2(beta, k_i, b) * c.L * c.sigma2 / 2)
+
+
+def A_t_from_den(den_ki, k_i, c: LearningConstants):
+    """A_t from the (D,) reduction sum_i K_i beta_i^d (beta-free form)."""
+    return 1.0 - c.mu / c.L + c.rho2 * sampling_ratio_from_den(den_ki, k_i)
+
+
+def B_t_from_den(den_ki, b, k_i, c: LearningConstants):
+    """B_t from the (D,) reductions: den_ki = sum_i K_i beta_i^d and the
+    per-entry scaling b (so the descale denominator is den_ki * b)."""
+    noise_norm2 = jnp.sum(
+        1.0 / jnp.maximum(den_ki * b, _EPS) ** 2)
+    return (c.rho1 / (2 * c.L) * sampling_ratio_from_den(den_ki, k_i)
+            + noise_norm2 * c.L * c.sigma2 / 2)
 
 
 def gap_recursion(a_seq, b_seq, gap0):

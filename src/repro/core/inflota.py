@@ -60,7 +60,10 @@ def solve(h, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
     """P4 line search, vectorized over entries.
 
     Args:
-      h:           (U, D) channel gains this round.
+      h:           (U, D) channel gains this round, or (U, 1) / (U,) for
+                   the rank-1 scalar-per-worker draw (broadcast against
+                   the D entries of ``w_prev_abs`` without materializing
+                   the dense matrix at this call site).
       k_i:         (U,) local dataset sizes.
       w_prev_abs:  (D,) |w_{t-1}| at the PS.
       eta:         scalar (or (D,)) bounded-update constant (Assumption 4).
@@ -73,9 +76,16 @@ def solve(h, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
     Returns InflotaSolution with per-entry optimal (b, beta, R).
     """
     h = jnp.asarray(h)
-    U, D = h.shape
-    dt = jnp.result_type(h.dtype, jnp.asarray(w_prev_abs).dtype, float)
+    if h.ndim == 1:
+        h = h[:, None]
+    U = h.shape[0]
+    w_prev_abs = jnp.asarray(w_prev_abs)
+    D = w_prev_abs.shape[0]
+    dt = jnp.result_type(h.dtype, w_prev_abs.dtype, float)
     numer = case_numerator(case, k_i, c, delta_prev, K_b)
+    if h.shape[1] == 1:
+        return _solve_rank1(h[:, 0], k_i, w_prev_abs, eta, p_max, c,
+                            numer, dt, K_b)
     cand = candidate_b(h, k_i, w_prev_abs, eta, p_max).astype(dt)  # (U, D)
 
     def eval_candidate(k, best):
@@ -94,6 +104,48 @@ def solve(h, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
     best_r, best_b, best_beta = jax.lax.fori_loop(
         0, U, eval_candidate, init)
     return InflotaSolution(b=best_b, beta=best_beta, r=best_r)
+
+
+def _solve_rank1(h_w, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
+                 numer, dt, K_b: float | None = None) -> InflotaSolution:
+    """Rank-1 channel fast path: O(U^2 + U D) instead of O(U^2 D).
+
+    With one coherent gain per worker, the candidate matrix (43)
+    factorizes as ``cand[i, d] = c_i * s_d`` with ``c_i = sqrt(P_i) h_i /
+    K_i`` and ``s_d = 1 / (|w_d| + eta_d) > 0``.  The feasibility test
+    (44) then loses its entry dependence —
+
+        beta_k[i, d] = (c_k s_d <= c_i s_d (1+tol)) = (c_k <= c_i (1+tol))
+
+    — so each candidate's selected set, and with it the denominator
+    ``den_k = sum_i K_i beta_k[i]``, is a PER-WORKER SCALAR.  R_t[d]
+    becomes a family of U curves ``A_k / s_d^2 + B_k`` over the single
+    statistic s_d, and the per-entry search is one argmin over their
+    lower envelope: U^2 scalar work + one O(U D) evaluation, versus the
+    generic path's U full (U, D) mask builds.  This is the jnp twin of
+    the Pallas kernels' rank-1 fast path (which additionally saves the
+    h reads); the generic entry-wise search remains for dense h.
+    """
+    U = h_w.shape[0]
+    k_arr = jnp.asarray(k_i, dt)
+    # R_t's denominator uses K_b in the SGD case (paper note under (38b)),
+    # exactly as r_t() does on the generic path; candidates (43) keep k_i
+    k_eff = jnp.full_like(k_arr, K_b) if K_b is not None else k_arr
+    p_arr = jnp.broadcast_to(jnp.asarray(p_max, dt), (U,))
+    cw = jnp.abs(jnp.sqrt(p_arr) * h_w.astype(dt) / k_arr)        # (U,)
+    s = (1.0 / (w_prev_abs + eta)).astype(dt)                     # (D,)
+    # feas[i, k] = worker i accepts candidate k's scaling (eq. 44)
+    feas = cw[None, :] <= cw[:, None] * (1.0 + 1e-6)              # (U, U)
+    den = jnp.sum(k_eff[:, None] * feas, axis=0)                  # (U,)
+    bmat = cw[:, None] * s[None, :]                               # (U, D)
+    r_all = (c.L * c.sigma2
+             / (2.0 * jnp.maximum(den[:, None] * bmat, _EPS) ** 2)
+             + (numer / (2.0 * c.L * jnp.maximum(den, _EPS)))[:, None])
+    kstar = jnp.argmin(r_all, axis=0)            # first-min tie-break, as
+    b = jnp.take(cw, kstar) * s                  # the sequential search
+    r = jnp.take_along_axis(r_all, kstar[None, :], axis=0)[0]
+    beta = (b[None, :] <= bmat * (1.0 + 1e-6)).astype(dt)
+    return InflotaSolution(b=b, beta=beta, r=r)
 
 
 def solve_bucketed(h_workers, k_i, w_prev_abs, eta, p_max,
@@ -117,6 +169,6 @@ def solve_bucketed(h_workers, k_i, w_prev_abs, eta, p_max,
     pad = (-D) % n_buckets
     w_pad = jnp.pad(w_prev_abs, (0, pad))
     w_stat = jnp.max(jnp.abs(w_pad).reshape(n_buckets, -1), axis=1)
-    h = jnp.broadcast_to(jnp.asarray(h_workers)[:, None],
-                         (h_workers.shape[0], n_buckets))
-    return solve(h, k_i, w_stat, eta, p_max, c, case, delta_prev, K_b)
+    # rank-1: solve broadcasts the per-worker scalar gain internally
+    return solve(jnp.asarray(h_workers)[:, None], k_i, w_stat, eta, p_max,
+                 c, case, delta_prev, K_b)

@@ -27,3 +27,42 @@ def local_update(task, params, x, y, lr: float, *, key=None,
     for s in range(steps):
         p = one_step(p, keys[s])
     return p
+
+
+def local_update_masked(task, params, x, y, mask, lr: float, *, key,
+                        k_b: int | None = None, steps: int = 1):
+    """Masked local update over a K_max-padded sample block (one worker).
+
+    Uniform shapes across workers are what make the round engine
+    vmap-batchable: every worker's data is padded to the fleet-wide K_max
+    along axis 0 and ``mask`` (K_max,) flags the real samples.  The
+    gradient of the mask-weighted mean loss over the padded block equals
+    the plain mean-loss gradient over the worker's true K_i samples, so
+    this is a drop-in for ``local_update`` under ``jax.vmap``.
+
+    ``task.loss`` is only assumed to be a mean of per-sample losses (true
+    for every TaskModel here); it is re-weighted by evaluating it per
+    sample under an inner vmap.
+    """
+    def masked_loss(p, xb, yb, mb):
+        per = jax.vmap(lambda xi, yi: task.loss(p, xi[None], yi[None]))(
+            xb, yb)
+        return jnp.sum(per * mb) / jnp.maximum(jnp.sum(mb), 1.0)
+
+    def one_step(p, k):
+        if k_b is not None:
+            # uniform over the worker's real samples only
+            idx = jax.random.choice(k, x.shape[0], (k_b,), replace=False,
+                                    p=mask / jnp.sum(mask))
+            xb, yb = x[idx], y[idx]
+            mb = jnp.ones((k_b,), mask.dtype)
+        else:
+            xb, yb, mb = x, y, mask
+        g = jax.grad(masked_loss)(p, xb, yb, mb)
+        return jax.tree.map(lambda w, gg: w - lr * gg, p, g)
+
+    p = params
+    keys = jax.random.split(key, steps)
+    for s in range(steps):
+        p = one_step(p, keys[s])
+    return p

@@ -197,9 +197,10 @@ def _solve_policy(cfg: OTAConfig, h_workers, w_stat, k_i, key,
             jnp.float32)
         return jnp.full((nb,), b), jnp.broadcast_to(beta[:, None], (U, nb))
     if cfg.policy == "inflota":
-        h = jnp.broadcast_to(h_workers[:, None], (U, nb))
-        sol = inflota.solve(h, k_i, w_stat, cfg.eta, cfg.channel.p_max,
-                            cfg.constants, cfg.case, delta_prev)
+        # rank-1: solve broadcasts the per-worker scalar gain internally
+        sol = inflota.solve(h_workers[:, None], k_i, w_stat, cfg.eta,
+                            cfg.channel.p_max, cfg.constants, cfg.case,
+                            delta_prev)
         return sol.b, sol.beta
     raise ValueError(cfg.policy)
 

@@ -1,0 +1,221 @@
+"""Fused single-pass OTA round engine — jit/scan-compatible Algorithm 1.
+
+One pure functional ``round_step(state, _) -> (state, stats)`` replaces the
+trainer's former three divergent per-round code paths (perfect / kernels /
+jnp).  Design points:
+
+  * Local updates are vmap-batched: worker datasets are padded to a
+    uniform K_max with sample masks (``client.local_update_masked``), so
+    one dispatch covers all U workers instead of U serial jitted calls.
+  * The channel is drawn as the trainer's actual scalar-per-worker gain
+    and kept RANK-1 (``(U, 1)``) end to end — neither backend ever
+    materializes the broadcast (U, D) matrix in HBM.
+  * ``Backend.PALLAS`` routes the policy + aggregation through the fused
+    ``kernels.ota_round`` single-VMEM-pass kernel; ``Backend.JNP`` is the
+    pure-jnp reference.  Both take traced ``eta`` / ``numer`` / ``t``, so
+    the whole step compiles once — no per-round recompiles or host syncs.
+  * A_t / B_t bookkeeping consumes the per-entry reductions
+    (sum_i K_i beta, b) instead of beta itself, matching the kernel's
+    beta-free outputs (``convergence.A_t_from_den`` / ``B_t_from_den``).
+  * The step is a valid ``jax.lax.scan`` body: ``FLTrainer.run`` uses a
+    scan for small-D workloads and a Python loop (same jitted step) when
+    per-round host-side eval is wanted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import aggregation as agg
+from repro.core import channel as chan
+from repro.core import convergence as conv
+from repro.core import inflota
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case, case_numerator
+from repro.fl.client import local_update_masked
+from repro.kernels import ops as kops
+
+_EPS = 1e-12
+
+
+class Backend(enum.Enum):
+    """Which implementation computes the OTA policy + aggregation."""
+    AUTO = "auto"        # pallas iff cfg.use_kernels (legacy switch)
+    JNP = "jnp"          # pure-jnp reference path
+    PALLAS = "pallas"    # fused single-pass kernels.ota_round
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    rounds: int = 100
+    lr: float = 0.01
+    policy: str = "inflota"           # inflota | random | perfect
+    case: Case = Case.GD_CONVEX
+    k_b: Optional[int] = None         # mini-batch size (SGD); None = full GD
+    channel: ChannelConfig = ChannelConfig()
+    constants: LearningConstants = LearningConstants()
+    select_prob: float = 0.5          # random policy
+    use_kernels: bool = False         # legacy alias for backend=PALLAS
+    backend: Backend | str = Backend.AUTO
+    scan: bool = False                # run() via one jax.lax.scan
+    eval_every: int = 1
+    seed: int = 0
+
+    def resolved_backend(self) -> Backend:
+        b = Backend(self.backend) if not isinstance(self.backend, Backend) \
+            else self.backend
+        if b is Backend.AUTO:
+            return Backend.PALLAS if self.use_kernels else Backend.JNP
+        return b
+
+
+class RoundState(NamedTuple):
+    """Scan carry: everything Algorithm 1 threads between rounds."""
+    flat: jax.Array      # (D,) current global parameters, flattened
+    w_prev2: jax.Array   # (D,) previous round's parameters (for eta)
+    delta: jax.Array     # Delta_{t-1} (Lemma-1 recursion), f32 scalar
+    t: jax.Array         # round index, i32 scalar
+    key: jax.Array       # PRNG key for this and later rounds
+
+
+class RoundStats(NamedTuple):
+    selected: jax.Array  # mean over entries of sum_i beta_i
+    b_mean: jax.Array    # mean over entries of b
+
+
+def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int
+                    ) -> Callable[..., Any]:
+    """Policy + aggregation + convergence bookkeeping as one pure function.
+
+    Returns ``stage(W, w_prev, w_prev2, delta_prev, kchan, kpol, t) ->
+    (new_flat, delta, selected, b_mean)`` — the post-local-update part of
+    a round, shared by all policies and both backends (and benchmarked
+    head-to-head in ``benchmarks/kernels_micro.py``).
+    """
+    U = k_i.shape[0]
+    backend = cfg.resolved_backend()
+    k_eff = (jnp.full((U,), float(cfg.k_b), jnp.float32)
+             if cfg.k_b is not None else k_i)
+    p_max = jnp.full((U,), cfg.channel.p_max, jnp.float32)
+    c = cfg.constants
+
+    def stage(W, w_prev, w_prev2, delta_prev, kchan, kpol, t):
+        if cfg.policy == "perfect":
+            new_flat = agg.fedavg(W, k_i)
+            return (new_flat, delta_prev, jnp.float32(U), jnp.float32(0.0))
+
+        kg, kn = chan.round_keys(kchan, t)
+        h_workers = chan.sample_gains(kg, (U,), cfg.channel)   # (U,) rank-1
+        noise = chan.sample_noise(kn, (D,), cfg.channel)
+        eta = jnp.abs(w_prev - w_prev2) + 1e-8   # paper footnote 4
+
+        if cfg.policy == "inflota":
+            numer = case_numerator(cfg.case, k_i, c, delta_prev, cfg.k_b)
+            if backend is Backend.PALLAS:
+                w_hat, b, den_keff, den_ki, sel = kops.ota_round(
+                    W, h_workers, jnp.abs(w_prev), eta, noise,
+                    k_eff, k_i, p_max, numer, L=c.L, sigma2=c.sigma2)
+            else:
+                sol = inflota.solve(h_workers[:, None], k_eff,
+                                    jnp.abs(w_prev), eta, p_max, c,
+                                    cfg.case, delta_prev, cfg.k_b)
+                b, beta = sol.b, sol.beta
+                w_hat, _ = agg.ota_aggregate(W, h_workers[:, None], beta,
+                                             b, k_eff, p_max, noise)
+                den_keff = agg.denominator(beta, k_eff, b)
+                den_ki = jnp.sum(k_i[:, None] * beta, axis=0)
+                sel = jnp.sum(beta, axis=0)
+        elif cfg.policy == "random":
+            kb_, ksel = jax.random.split(kpol)
+            b = jnp.full((D,), jax.random.exponential(kb_, ()))
+            beta_w = jax.random.bernoulli(
+                ksel, cfg.select_prob, (U,)).astype(jnp.float32)
+            if backend is Backend.PALLAS:
+                w_hat = kops.ota_aggregate(W, h_workers[:, None],
+                                           beta_w[:, None], b, noise,
+                                           k_eff, p_max)
+            else:
+                w_hat, _ = agg.ota_aggregate(W, h_workers[:, None],
+                                             beta_w[:, None], b, k_eff,
+                                             p_max, noise)
+            den_keff = jnp.sum(k_eff * beta_w) * b
+            den_ki = jnp.full((D,), jnp.sum(k_i * beta_w))
+            sel = jnp.full((D,), jnp.sum(beta_w))
+        else:
+            raise ValueError(cfg.policy)
+
+        # entries with no selected worker keep the previous value
+        new_flat = jnp.where(den_keff > _EPS, w_hat, w_prev)
+        a_t = conv.A_t_from_den(den_ki, k_i, c)
+        b_t = conv.B_t_from_den(den_ki, b, k_i, c)
+        delta = b_t + a_t * delta_prev
+        return new_flat, delta, jnp.mean(sel), jnp.mean(b)
+
+    return stage
+
+
+class Engine(NamedTuple):
+    step: Callable[[RoundState, Any], tuple]
+    unravel: Callable[[jax.Array], Any]
+    D: int
+
+
+def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
+    """Assemble the full jit/scan-compatible round step.
+
+    Args:
+      task:    TaskModel (init/loss/metrics pure functions).
+      X, Y:    (U, K_max, ...) worker datasets padded to a uniform K_max.
+      mask:    (U, K_max) 1.0 for real samples, 0.0 for padding.
+      k_i:     (U,) true per-worker sample counts.
+      params0: parameter pytree template (defines flatten/unflatten).
+    """
+    flat0, unravel = ravel_pytree(params0)
+    D = flat0.shape[0]
+    U = k_i.shape[0]
+    if cfg.k_b is not None:
+        # padded no-replacement sampling cannot raise per worker inside the
+        # traced step (the old per-worker path did); validate up front so a
+        # too-large minibatch fails loudly instead of drawing zero-padding
+        min_k = int(jnp.min(jnp.sum(mask, axis=1)))
+        if cfg.k_b > min_k:
+            raise ValueError(
+                f"k_b={cfg.k_b} exceeds the smallest worker's sample "
+                f"count ({min_k}); minibatch sampling would draw padding")
+    ota_stage = build_ota_stage(cfg, k_i, D)
+
+    def local_stage(flat, klocal):
+        """All workers' updates in one vmap-batched dispatch -> (U, D)."""
+        params = unravel(flat)
+        keys = jax.random.split(klocal, U)
+        return jax.vmap(
+            lambda x, y, m, k: ravel_pytree(local_update_masked(
+                task, params, x, y, m, cfg.lr, key=k, k_b=cfg.k_b))[0]
+        )(X, Y, mask, keys)
+
+    def step(state: RoundState, _=None):
+        key_next, klocal, kchan, kpol = jax.random.split(state.key, 4)
+        W = local_stage(state.flat, klocal)
+        new_flat, delta, sel, b_mean = ota_stage(
+            W, state.flat, state.w_prev2, state.delta, kchan, kpol,
+            state.t)
+        new_state = RoundState(flat=new_flat, w_prev2=state.flat,
+                               delta=delta, t=state.t + 1, key=key_next)
+        return new_state, RoundStats(selected=sel, b_mean=b_mean)
+
+    return Engine(step=step, unravel=unravel, D=D)
+
+
+def init_state(flat: jax.Array, key: jax.Array) -> RoundState:
+    # delta follows the parameter dtype so the scan carry stays uniform
+    # whether or not x64 is enabled
+    return RoundState(flat=flat, w_prev2=flat,
+                      delta=jnp.zeros((), flat.dtype),
+                      t=jnp.int32(0), key=key)

@@ -5,44 +5,37 @@ local parameter vectors: local GD/SGD -> channel draw -> policy (b, beta)
 -> analog-aggregation transmission (with clipping) -> PS post-processing ->
 next round.  This is the path used to validate every Sec. VI figure.
 
-The per-round compute hot spots can optionally run through the Pallas
-kernels (`use_kernels=True`): the fused OTA transmit/aggregate and the
-Theorem-4 search — validated against the pure-jnp path in tests.
+The per-round computation is one fused, jit/scan-compatible
+``round_step`` built by ``repro.fl.engine``: vmap-batched local updates
+over K_max-padded worker data, a rank-1 (scalar-per-worker) channel end
+to end, and a backend switch between the pure-jnp reference and the
+single-VMEM-pass Pallas kernel (``FLConfig.backend`` or the legacy
+``use_kernels=True``).  With ``FLConfig.scan=True`` the whole training
+run is one ``jax.lax.scan`` (small-D workloads); otherwise a Python loop
+drives the same jitted step so metrics can be evaluated per round.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core import aggregation as agg
-from repro.core import channel as chan
-from repro.core import inflota
-from repro.core.channel import ChannelConfig
-from repro.core.convergence import A_t, B_t, LearningConstants
-from repro.core.objectives import Case, case_numerator
-from repro.fl.client import local_update
+# Backend / FLConfig / state types live in engine.py; re-exported here for
+# the established public import path (tests, examples, benchmarks).
+from repro.fl.engine import (Backend, Engine, FLConfig, RoundState,
+                             build_engine, init_state)
 from repro.fl.models import TaskModel
-from repro.kernels import ops as kops
+
+__all__ = ["Backend", "FLConfig", "FLTrainer"]
 
 
-@dataclasses.dataclass(frozen=True)
-class FLConfig:
-    rounds: int = 100
-    lr: float = 0.01
-    policy: str = "inflota"           # inflota | random | perfect
-    case: Case = Case.GD_CONVEX
-    k_b: Optional[int] = None         # mini-batch size (SGD); None = full GD
-    channel: ChannelConfig = ChannelConfig()
-    constants: LearningConstants = LearningConstants()
-    select_prob: float = 0.5          # random policy
-    use_kernels: bool = False
-    eval_every: int = 1
-    seed: int = 0
+def _pad_axis0(a: jnp.ndarray, k_max: int) -> jnp.ndarray:
+    pad = [(0, k_max - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
 
 
 class FLTrainer:
@@ -51,136 +44,84 @@ class FLTrainer:
     def __init__(self, task: TaskModel, worker_data: List[Tuple[Any, Any]],
                  cfg: FLConfig):
         self.task = task
-        self.data = [(jnp.asarray(x), jnp.asarray(y)) for x, y in worker_data]
         self.cfg = cfg
         self.U = len(worker_data)
-        self.k_i = jnp.asarray([x.shape[0] for x, _ in worker_data],
-                               jnp.float32)
-        # jit one local-update per distinct data shape (K_i varies slightly)
-        self._jit_update = jax.jit(
-            lambda p, x, y, k: local_update(
-                self.task, p, x, y, self.cfg.lr, key=k, k_b=self.cfg.k_b))
-
-    # ------------------------------------------------------------- rounds
-    def _local_round(self, params, key):
-        """All workers' local updates, flattened to a (U, D) matrix."""
-        flat0, unravel = ravel_pytree(params)
-        rows = []
-        keys = jax.random.split(key, self.U)
-        for i, (x, y) in enumerate(self.data):
-            w_i = self._jit_update(params, x, y, keys[i])
-            rows.append(ravel_pytree(w_i)[0])
-        return jnp.stack(rows), unravel, flat0
-
-    def _policy(self, key, h, w_prev_abs, eta, delta_prev):
-        cfg = self.cfg
-        U, D = h.shape
-        p_max = jnp.full((U,), cfg.channel.p_max)
-        k_eff = (jnp.full((U,), float(cfg.k_b)) if cfg.k_b is not None
-                 else self.k_i)
-        if cfg.policy == "inflota":
-            numer = case_numerator(cfg.case, self.k_i, cfg.constants,
-                                   delta_prev, cfg.k_b)
-            if cfg.use_kernels:
-                b, beta, _ = kops.inflota_search(
-                    h, w_prev_abs, k_eff, p_max,
-                    eta=float(jnp.mean(eta)), numer=float(numer),
-                    L=cfg.constants.L, sigma2=cfg.constants.sigma2,
-                    block_d=1024)
-                return b, beta
-            sol = inflota.solve(h, k_eff, w_prev_abs, eta, p_max,
-                                cfg.constants, cfg.case, delta_prev,
-                                cfg.k_b)
-            return sol.b, sol.beta
-        if cfg.policy == "random":
-            kb_, ksel = jax.random.split(key)
-            b = jnp.full((D,), jax.random.exponential(kb_, ()))
-            beta = jax.random.bernoulli(ksel, cfg.select_prob,
-                                        (U,)).astype(jnp.float32)
-            return b, jnp.broadcast_to(beta[:, None], (U, D))
-        raise ValueError(cfg.policy)
+        sizes = [np.asarray(x).shape[0] for x, _ in worker_data]
+        self.k_i = jnp.asarray(sizes, jnp.float32)
+        # uniform-shape batch across workers: pad to K_max + sample masks,
+        # so the engine runs ONE vmapped local-update dispatch per round
+        k_max = max(sizes)
+        self.X = jnp.stack([_pad_axis0(jnp.asarray(x), k_max)
+                            for x, _ in worker_data])
+        self.Y = jnp.stack([_pad_axis0(jnp.asarray(y), k_max)
+                            for _, y in worker_data])
+        self.mask = jnp.asarray(
+            np.arange(k_max)[None, :] < np.asarray(sizes)[:, None],
+            jnp.float32)
 
     # ---------------------------------------------------------------- run
     def run(self, key=None, eval_data: Optional[Tuple[Any, Any]] = None
             ) -> Dict[str, Any]:
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(cfg.seed)
-        kinit, key = jax.random.split(key)
+        kinit, kround = jax.random.split(key)
         params = self.task.init(kinit)
-        flat, unravel = ravel_pytree(params)
-        D = flat.shape[0]
-        p_max = jnp.full((self.U,), cfg.channel.p_max)
-        k_eff = (jnp.full((self.U,), float(cfg.k_b))
-                 if cfg.k_b is not None else self.k_i)
+        engine = build_engine(self.task, self.X, self.Y, self.mask,
+                              self.k_i, cfg, params)
+        flat, _ = ravel_pytree(params)
+        state = init_state(flat, kround)
 
-        w_prev2 = flat
-        delta_prev = 0.0
-        history: Dict[str, list] = {"round": [], "selected": [], "b": []}
+        history: Dict[str, list] = {"round": list(range(cfg.rounds)),
+                                    "selected": [], "b": []}
+        if cfg.scan:
+            state, history = self._run_scan(engine, state, history,
+                                            eval_data)
+        else:
+            state, history = self._run_loop(engine, state, history,
+                                            eval_data)
+        history["params"] = engine.unravel(state.flat)
+        return history
 
-        def _ota_round(W, w_prev, w_prev2, delta_prev, kchan, kpol, t):
-            """One policy + OTA aggregation round (jit-compiled)."""
-            kg, kn = chan.round_keys(kchan, t)
-            h_workers = chan.sample_gains(kg, (self.U,), cfg.channel)
-            h = jnp.broadcast_to(h_workers[:, None], (self.U, D))
-            noise = chan.sample_noise(kn, (D,), cfg.channel)
-            eta = jnp.abs(w_prev - w_prev2) + 1e-8   # paper footnote 4
-            b, beta = self._policy(kpol, h, jnp.abs(w_prev), eta,
-                                   delta_prev)
-            what, _ = agg.ota_aggregate(W, h, beta, b, k_eff, p_max, noise)
-            den = agg.denominator(beta, k_eff, b)
-            # entries with no selected worker keep the previous value
-            new_flat = jnp.where(den > 1e-12, what, w_prev)
-            a_t = A_t(beta, self.k_i, cfg.constants)
-            b_t = B_t(beta, b, self.k_i, cfg.constants)
-            return (new_flat, b_t + a_t * delta_prev,
-                    jnp.mean(jnp.sum(beta, axis=0)), jnp.mean(b))
+    # one scan over all rounds: no host round-trips at all
+    def _run_scan(self, engine: Engine, state: RoundState, history,
+                  eval_data):
+        cfg = self.cfg
+        collect_flat = eval_data is not None
 
-        jit_round = jax.jit(_ota_round) if not cfg.use_kernels else None
+        def body(s, _):
+            s2, stats = engine.step(s, None)
+            return s2, (stats, s2.flat if collect_flat else None)
 
+        def scan_all(s0):
+            return jax.lax.scan(body, s0, None, length=cfg.rounds)
+
+        state, (stats, flats) = jax.jit(scan_all)(state)
+        history["selected"] = np.asarray(stats.selected).tolist()
+        history["b"] = np.asarray(stats.b_mean).tolist()
+        if collect_flat:
+            ex, ey = (jnp.asarray(eval_data[0]), jnp.asarray(eval_data[1]))
+            idx = jnp.arange(0, cfg.rounds, cfg.eval_every)
+            ms = jax.jit(jax.vmap(
+                lambda f: self.task.metrics(engine.unravel(f), ex, ey)
+            ))(flats[idx])
+            for k, v in ms.items():
+                history[k] = np.asarray(v).tolist()
+        return state, history
+
+    # Python loop over the same jitted step: per-round eval on host
+    def _run_loop(self, engine: Engine, state: RoundState, history,
+                  eval_data):
+        cfg = self.cfg
+        step = jax.jit(engine.step)
+        jit_metrics = jax.jit(self.task.metrics)
+        if eval_data is not None:
+            ex, ey = (jnp.asarray(eval_data[0]), jnp.asarray(eval_data[1]))
         for t in range(cfg.rounds):
-            key, klocal, kchan, kpol = jax.random.split(key, 4)
-            W, unravel, w_prev = self._local_round(params, klocal)
-
-            if cfg.policy == "perfect":
-                new_flat = agg.fedavg(W, self.k_i)
-                sel_count, b_used = float(self.U), 0.0
-            elif cfg.use_kernels:
-                kg, kn = chan.round_keys(kchan, t)
-                h_workers = chan.sample_gains(kg, (self.U,), cfg.channel)
-                h = jnp.broadcast_to(h_workers[:, None], (self.U, D))
-                noise = chan.sample_noise(kn, (D,), cfg.channel)
-                eta = jnp.abs(w_prev - w_prev2) + 1e-8
-                b, beta = self._policy(kpol, h, jnp.abs(w_prev), eta,
-                                       delta_prev)
-                what = kops.ota_aggregate(W, h, beta, b, noise,
-                                          k_eff, p_max)
-                den = agg.denominator(beta, k_eff, b)
-                new_flat = jnp.where(den > 1e-12, what, w_prev)
-                a_t = A_t(beta, self.k_i, cfg.constants)
-                b_t = B_t(beta, b, self.k_i, cfg.constants)
-                delta_prev = float(b_t + a_t * delta_prev)
-                sel_count = float(jnp.mean(jnp.sum(beta, axis=0)))
-                b_used = float(jnp.mean(b))
-            else:
-                new_flat, dp, sel, bu = jit_round(
-                    W, w_prev, w_prev2, jnp.float32(delta_prev),
-                    kchan, kpol, jnp.int32(t))
-                delta_prev = float(dp)
-                sel_count, b_used = float(sel), float(bu)
-
-            w_prev2 = w_prev
-            params = unravel(new_flat)
-
-            history["round"].append(t)
-            history["selected"].append(sel_count)
-            history["b"].append(b_used)
+            state, stats = step(state, None)
+            history["selected"].append(float(stats.selected))
+            history["b"].append(float(stats.b_mean))
             if eval_data is not None and t % cfg.eval_every == 0:
-                if not hasattr(self, "_jit_metrics"):
-                    self._jit_metrics = jax.jit(self.task.metrics)
-                m = self._jit_metrics(params, jnp.asarray(eval_data[0]),
-                                      jnp.asarray(eval_data[1]))
+                m = jit_metrics(engine.unravel(state.flat), ex, ey)
                 for k, v in m.items():
                     history.setdefault(k, []).append(float(v))
-
-        history["params"] = params
-        return history
+        return state, history

@@ -28,7 +28,7 @@ _TOL = 1e-6  # boundary tolerance: candidate k is feasible under b_k^max
 def _kernel(h_ref, wabs_ref, ki_ref, pmax_ref,
             b_ref, beta_ref, r_ref,
             *, eta: float, numer: float, L: float, sigma2: float, U: int):
-    h = h_ref[...]                        # (U, blk)
+    h = h_ref[...]                        # (U, blk) | (U, 1) rank-1
     w_abs = wabs_ref[...]                 # (1, blk)
     k_i = ki_ref[...]                     # (U, 1)
     p_max = pmax_ref[...]                 # (U, 1)
@@ -64,7 +64,10 @@ def inflota_search(h, w_abs, k_i, p_max, *, eta: float, numer: float,
     """Per-entry optimal (b, beta, R) via the Theorem-4 U-point search.
 
     Args:
-      h:      (U, D) channel gains.
+      h:      (U, D) channel gains, or (U, 1) / (U,) for the rank-1
+              scalar-per-worker fast path (the gain is read once per
+              worker instead of once per (worker, entry), cutting HBM
+              reads by h's U*D words).
       w_abs:  (D,) |w_{t-1}|.
       k_i:    (U,) sample counts (pass K_b-filled for the SGD case).
       p_max:  (U,) power budgets.
@@ -73,22 +76,30 @@ def inflota_search(h, w_abs, k_i, p_max, *, eta: float, numer: float,
 
     Returns: (b (D,), beta (U, D), r (D,)).
     """
-    U, D = h.shape
+    h = jnp.asarray(h)
+    if h.ndim == 1:
+        h = h[:, None]
+    rank1 = h.shape[1] == 1
+    U = h.shape[0]
+    D = w_abs.shape[0]
     dt = jnp.result_type(h.dtype, jnp.float32)
     pad = (-D) % block_d
     if pad:
-        h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
+        if not rank1:
+            h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
         w_abs = jnp.pad(w_abs, (0, pad), constant_values=1.0)
     Dp = D + pad
     grid = (Dp // block_d,)
 
+    h_spec = (pl.BlockSpec((U, 1), lambda i: (0, 0)) if rank1
+              else pl.BlockSpec((U, block_d), lambda i: (0, i)))
     kern = functools.partial(_kernel, eta=float(eta), numer=float(numer),
                              L=float(L), sigma2=float(sigma2), U=U)
     b, beta, r = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((U, block_d), lambda i: (0, i)),   # h
+            h_spec,                                         # h
             pl.BlockSpec((1, block_d), lambda i: (0, i)),   # w_abs
             pl.BlockSpec((U, 1), lambda i: (0, 0)),         # k_i
             pl.BlockSpec((U, 1), lambda i: (0, 0)),         # p_max

@@ -9,11 +9,24 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import inflota_search as _search
+from repro.kernels import ota_round as _round
 from repro.kernels import ota_transmit as _ota
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
+              *, L, sigma2, block_d: int = 1024,
+              interpret: bool | None = None):
+    """Fused search + transmit single-pass round (see kernels.ota_round)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _round.ota_round(
+        w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
+        L=float(L), sigma2=float(sigma2), block_d=block_d,
+        interpret=interpret)
 
 
 def ota_aggregate(w, h, beta, b, noise, k_i, p_max,

@@ -31,8 +31,8 @@ _EPS = 1e-12
 
 def _kernel(w_ref, h_ref, beta_ref, b_ref, z_ref, ki_ref, pmax_ref, out_ref):
     w = w_ref[...]          # (U, blk)
-    h = h_ref[...]          # (U, blk)
-    beta = beta_ref[...]    # (U, blk)
+    h = h_ref[...]          # (U, blk) | (U, 1) rank-1
+    beta = beta_ref[...]    # (U, blk) | (U, 1) rank-1
     b = b_ref[...]          # (1, blk)
     z = z_ref[...]          # (1, blk)
     k_i = ki_ref[...]       # (U, 1)
@@ -52,7 +52,10 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
     """Fused OTA aggregation round.
 
     Args:
-      w, h, beta: (U, D) float arrays.
+      w:          (U, D) float array.
+      h, beta:    (U, D) float arrays, or (U, 1) / (U,) for the rank-1
+                  fast path (scalar-per-worker gain / selection — each
+                  read once per worker instead of once per entry).
       b, noise:   (D,) float arrays.
       k_i, p_max: (U,) float arrays.
       block_d:    lane tile (multiple of 128 on real TPU).
@@ -61,24 +64,38 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
     Returns: (D,) post-processed global parameter estimate w_hat.
     """
     U, D = w.shape
-    dt = jnp.result_type(w.dtype, h.dtype, jnp.float32)
+    dt = jnp.result_type(w.dtype, jnp.asarray(h).dtype, jnp.float32)
+    h = jnp.asarray(h)
+    beta = jnp.asarray(beta)
+    if h.ndim == 1:
+        h = h[:, None]
+    if beta.ndim == 1:
+        beta = beta[:, None]
+    h_rank1 = h.shape[1] == 1
+    beta_rank1 = beta.shape[1] == 1
     pad = (-D) % block_d
     if pad:
         w = jnp.pad(w, ((0, 0), (0, pad)))
-        h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
-        beta = jnp.pad(beta, ((0, 0), (0, pad)))
+        if not h_rank1:
+            h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
+        if not beta_rank1:
+            beta = jnp.pad(beta, ((0, 0), (0, pad)))
         b = jnp.pad(b, (0, pad), constant_values=1.0)
         noise = jnp.pad(noise, (0, pad))
     Dp = D + pad
     grid = (Dp // block_d,)
+
+    def _uspec(rank1):
+        return (pl.BlockSpec((U, 1), lambda i: (0, 0)) if rank1
+                else pl.BlockSpec((U, block_d), lambda i: (0, i)))
 
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((U, block_d), lambda i: (0, i)),   # w
-            pl.BlockSpec((U, block_d), lambda i: (0, i)),   # h
-            pl.BlockSpec((U, block_d), lambda i: (0, i)),   # beta
+            _uspec(h_rank1),                                # h
+            _uspec(beta_rank1),                             # beta
             pl.BlockSpec((1, block_d), lambda i: (0, i)),   # b
             pl.BlockSpec((1, block_d), lambda i: (0, i)),   # z
             pl.BlockSpec((U, 1), lambda i: (0, 0)),         # k_i

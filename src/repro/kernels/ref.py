@@ -43,6 +43,29 @@ def inflota_search_ref(h, w_abs, k_i, p_max, *, eta, numer, L, sigma2):
     return best_b, best_beta, best_r
 
 
+def ota_round_ref(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
+                  *, L, sigma2):
+    """Oracle for kernels.ota_round — search + transmit + the per-entry
+    reductions, composed from the two single-kernel oracles."""
+    h = jnp.asarray(h)
+    if h.ndim == 1:
+        h = h[:, None]
+    D = w_abs.shape[0]
+    h = jnp.broadcast_to(h, (h.shape[0], D))
+    # inflota_search_ref's eta enters only as (w_abs + eta); fold a
+    # per-entry eta into the statistic so the scalar-eta oracle applies
+    w_eff = w_abs + jnp.broadcast_to(jnp.asarray(eta), (D,))
+    best_b, best_beta, _ = inflota_search_ref(
+        h, w_eff, k_eff, p_max, eta=0.0, numer=numer, L=L, sigma2=sigma2)
+    what = ota_transmit_aggregate_ref(w, h, best_beta, best_b, noise,
+                                      k_eff, p_max)
+    den_keff = jnp.sum(jnp.asarray(k_eff, h.dtype)[:, None] * best_beta,
+                       axis=0) * best_b
+    den_ki = jnp.sum(jnp.asarray(k_i, h.dtype)[:, None] * best_beta, axis=0)
+    sel = jnp.sum(best_beta, axis=0)
+    return what, best_b, den_keff, den_ki, sel
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
     """Oracle for kernels.flash_attention — plain GQA softmax attention.
 

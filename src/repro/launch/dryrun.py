@@ -53,7 +53,7 @@ def build_lowered(arch: str, shape_name: str, mesh, *,
         "fsdp_axes": list(plan.fsdp_axes),
         "params": cfg.param_count(), "active_params": cfg.active_param_count(),
     }
-    with jax.set_mesh(mesh):   # activate in-model sharding constraints
+    with mesh_lib.activate_mesh(mesh):  # in-model sharding constraints
         if shape.kind == "train":
             opt = optimizers.adamw(1e-4)
             ota_cfg = OTAConfig() if ota else None

@@ -13,6 +13,18 @@ from __future__ import annotations
 import jax
 
 
+def activate_mesh(mesh):
+    """Context manager activating ``mesh`` for sharding constraints.
+
+    ``jax.set_mesh`` only exists on newer jax; on older releases the Mesh
+    object itself is the context manager for the same resource-env scope.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

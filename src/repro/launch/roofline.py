@@ -298,6 +298,8 @@ class Roofline:
 def analyze(compiled) -> Roofline:
     """Derive the three per-device roofline terms from an executable."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     an = analyze_hlo(compiled.as_text())
     compute_s = an.flops / PEAK_FLOPS
     memory_s = an.hbm_bytes / HBM_BW
