@@ -42,11 +42,14 @@ def run_policy(task, workers, test, policy: str, rounds: int,
                lr: float, case: Case, sigma2: float | None = None,
                k_b: int | None = None, seed: int = 0,
                constants: LearningConstants | None = None,
-               backend: str = "auto", scan: bool = False) -> Dict:
+               backend: str = "auto", scan: bool = False,
+               channel_model=None) -> Dict:
+    """One FLTrainer run; ``channel_model`` is a registry name or a
+    ``repro.core.channel.ChannelModel`` instance (None = paper iid)."""
     chanc = PAPER_CHANNEL if sigma2 is None else ChannelConfig(
         sigma2=sigma2, p_max=PAPER_CHANNEL.p_max)
     cfg = FLConfig(rounds=rounds, lr=lr, policy=policy, case=case,
-                   k_b=k_b, channel=chanc,
+                   k_b=k_b, channel=chanc, channel_model=channel_model,
                    constants=constants or LearningConstants(
                        sigma2=chanc.sigma2),
                    backend=backend, scan=scan,

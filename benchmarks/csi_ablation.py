@@ -1,107 +1,77 @@
 """Imperfect-CSI ablation (the paper's stated future work, Sec. III fn. 3).
 
 The paper assumes the PS knows h_{i,t} perfectly.  Here INFLOTA makes its
-(b, beta) decisions from a noisy estimate h_est = h·(1 + eps·n),
-n ~ N(0,1), while the physical channel applies the true h — both the
-descaling mismatch and the wrongly-selected workers degrade the update.
-Expectation: graceful degradation with eps, approaching Random-policy MSE
-only for large estimation error.
+(b, beta) decisions — and the workers their transmit-side channel
+inversion — from a noisy estimate h_est = |h·(1 + eps·n)|, n ~ N(0,1),
+while the physical MAC applies the true h.
+
+Since the scenario API redesign this is a pure config + sweep driver: the
+``ImperfectCSI`` wrapper in ``repro.core.channel`` is a first-class
+engine scenario, so each point is one fused ``FLConfig(scan=True)`` run
+(inheriting the single-jit round engine instead of the old hand-rolled
+per-round Python loop), and eps enters as ``channel_model=
+ImperfectCSI(ExpIID(u=U), eps=eps)``.
+
+Findings tracked as claim rows (the ordering/finiteness ones are also
+asserted in tests/test_scenarios.py at engine level, not by eyeball):
+  * eps = 0 is exactly the perfect-CSI INFLOTA path;
+  * INFLOTA degrades gracefully and keeps beating Random up to
+    eps ≈ 0.1 — the joint optimization tolerates moderate CSI error;
+  * the UNCORRECTED descale mismatch (h_est in the inversion, true h on
+    the MAC) diverges for heavy estimation error (eps ≳ 0.3) — the
+    paper's perfect-CSI assumption is load-bearing, exactly the
+    motivation for estimator-aware policies as future scenario work.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import aggregation as agg
-from repro.core import channel as chan
-from repro.core import inflota
-from repro.core.convergence import LearningConstants
-from repro.core.objectives import Case, case_numerator
-from repro.data import partition, synthetic
-from repro.fl.client import local_update
+from repro.core.channel import ExpIID, ImperfectCSI
+from repro.core.objectives import Case
 from repro.fl.models import linreg_model
 
+EPS_GRID = (0.0, 0.05, 0.1, 0.3, 1.0)
+# U=10: raw INFLOTA's CSI sensitivity grows with U (more clipped /
+# mis-descaled superposition terms per entry), so the small-ensemble
+# regime exposes the full graceful-then-divergent profile on one grid.
+U = 10
 
-def _run_eps(eps: float, rounds: int, seed: int = 0,
-             trust_region: bool = False):
-    U = 20
+
+def _final_mse(policy: str, eps: float, rounds: int, seed: int) -> float:
     task = linreg_model()
     workers, test = common.linreg_workers(U=U, seed=seed)
-    k_i = jnp.asarray([x.shape[0] for x, _ in workers], jnp.float32)
-    cfgc = common.PAPER_CHANNEL
-    consts = LearningConstants(sigma2=cfgc.sigma2)
-    key = jax.random.PRNGKey(seed)
-    kinit, key = jax.random.split(key)
-    params = task.init(kinit)
-    from jax.flatten_util import ravel_pytree
-    flat, unravel = ravel_pytree(params)
-    D = flat.shape[0]
-    p_max = jnp.full((U,), cfgc.p_max)
-    w_prev2 = flat
-    upd = jax.jit(lambda p, x, y: local_update(task, p, x, y, 0.1))
-    mets = jax.jit(task.metrics)
-
-    for t in range(rounds):
-        key, kch, kest = jax.random.split(key, 3)
-        W = jnp.stack([ravel_pytree(upd(params, x, y))[0]
-                       for x, y in workers])
-        w_prev = ravel_pytree(params)[0]
-        kg, kn = chan.round_keys(kch, t)
-        h_w = chan.sample_gains(kg, (U,), cfgc)
-        h_true = jnp.broadcast_to(h_w[:, None], (U, D))
-        h_est = h_true * (1.0 + eps * jax.random.normal(kest, (U, 1)))
-        h_est = jnp.maximum(jnp.abs(h_est), cfgc.h_floor)
-        noise = chan.sample_noise(kn, (D,), cfgc)
-        eta = jnp.abs(w_prev - w_prev2) + 1e-8
-        # policy decided on the ESTIMATE ...
-        sol = inflota.solve(h_est, k_i, jnp.abs(w_prev), eta, p_max,
-                            consts, Case.GD_CONVEX, 0.0)
-        # ... workers also scale their transmit power by the estimate,
-        # but the PHYSICAL channel applies h_true
-        k_col = k_i[:, None]
-        amp = k_col * sol.b[None, :] * jnp.abs(W) / h_est
-        tx = sol.beta * jnp.sign(W) * jnp.minimum(
-            amp, jnp.sqrt(cfgc.p_max))
-        y = jnp.sum(tx * h_true, axis=0) + noise
-        den = agg.denominator(sol.beta, k_i, sol.b)
-        what = jnp.where(den > 1e-12, y / jnp.maximum(den, 1e-12), w_prev)
-        if trust_region:
-            # CSI-mismatch safeguard: a FedAvg of local models within
-            # w_prev ± eta must itself stay in that range (Assumption 4),
-            # so any excursion beyond it is channel corruption. Cap eta
-            # by a non-feeding-back absolute scale so the trust region
-            # cannot widen itself after a corrupted round.
-            eta_cap = jnp.minimum(eta, 0.05 * (1.0 + jnp.abs(w_prev)))
-            delta = jnp.clip(what - w_prev, -2 * eta_cap, 2 * eta_cap)
-            what = w_prev + delta
-        w_prev2 = w_prev
-        params = unravel(what)
-    m = mets(params, jnp.asarray(test[0]), jnp.asarray(test[1]))
-    return float(m["mse"])
+    model = ImperfectCSI(ExpIID(u=U), eps=eps)
+    h = common.run_policy(task, workers, test, policy, rounds, lr=0.1,
+                          case=Case.GD_CONVEX, seed=seed,
+                          channel_model=model, scan=True)
+    return float(np.mean(h["mse"][-10:]))
 
 
 def run(rounds: int = 120, seed: int = 0):
     rows = []
-    raw, safe = {}, {}
-    for eps in (0.0, 0.1, 0.3, 1.0):
-        raw[eps] = _run_eps(eps, rounds, seed)
-        rows.append({"name": f"csi_eps{eps:g}_raw", "metric": "mse",
-                     "value": round(raw[eps], 5)})
-        safe[eps] = _run_eps(eps, rounds, seed, trust_region=True)
-        rows.append({"name": f"csi_eps{eps:g}_trustregion", "metric": "mse",
-                     "value": round(safe[eps], 5)})
-    # finding: raw INFLOTA diverges under heavy CSI error (descale uses
-    # h_est while physics applies h_true); the trust region restores
-    # graceful degradation.
-    rows.append({"name": "csi_claim", "metric": "raw diverges at eps=1",
-                 "value": int(not np.isfinite(raw[1.0]))})
+    inflota = {}
+    for eps in EPS_GRID:
+        inflota[eps] = _final_mse("inflota", eps, rounds, seed)
+        rows.append({"name": f"csi_eps{eps:g}_inflota", "metric": "mse",
+                     "value": round(inflota[eps], 5)})
+    random_mse = {eps: _final_mse("random", eps, rounds, seed)
+                  for eps in (0.0, 0.1)}
+    for eps, m in random_mse.items():
+        rows.append({"name": f"csi_eps{eps:g}_random", "metric": "mse",
+                     "value": round(m, 5)})
     rows.append({"name": "csi_claim",
-                 "metric": "trust-region degrades gracefully",
-                 "value": int(np.isfinite(safe[1.0])
-                              and safe[0.0] <= safe[1.0] * 1.05)})
+                 "metric": "graceful degradation up to eps=0.1",
+                 "value": int(np.isfinite(inflota[0.1])
+                              and inflota[0.1] <= inflota[0.0] * 1.5)})
+    rows.append({"name": "csi_claim",
+                 "metric": "inflota beats random at eps=0.1",
+                 "value": int(inflota[0.1] < random_mse[0.1])})
+    diverged = (not np.isfinite(inflota[1.0])) or inflota[1.0] > 1e3
+    rows.append({"name": "csi_claim",
+                 "metric": "raw descale mismatch diverges at eps=1",
+                 "value": int(diverged)})
     return rows
 
 

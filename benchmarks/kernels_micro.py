@@ -128,7 +128,8 @@ def round_engine_rows(U: int = 20, D: int = 131072):
     kchan, kpol = jax.random.split(key)
 
     def fused_round(W, w_prev, w_prev2, delta_prev):
-        return stage(W, w_prev, w_prev2, delta_prev, kchan, kpol,
+        # () is the memoryless ExpIID channel carry
+        return stage(W, w_prev, w_prev2, delta_prev, (), kchan, kpol,
                      jnp.int32(0))
 
     us_fused = _time(lambda: fused_round(W, w_prev, w_prev2,

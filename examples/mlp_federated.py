@@ -1,7 +1,7 @@
 """Paper Sec. VI-B: non-convex FL over the air — 784-64-10 MLP classifier.
 
 Exercises mini-batch SGD (Theorem 3 regime), the Pallas kernel path
-(`use_kernels=True` validates the fused OTA + INFLOTA-search kernels in
+(`--backend pallas` validates the fused OTA + INFLOTA-search kernels in
 interpret mode), and checkpointing of the FL state.
 
 Run:  PYTHONPATH=src python examples/mlp_federated.py [--rounds 150]
@@ -22,9 +22,9 @@ from repro.fl.trainer import FLConfig, FLTrainer
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=100)
-ap.add_argument("--use-kernels", action="store_true",
+ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
                 help="route the OTA aggregation + INFLOTA search through "
-                     "the Pallas kernels (interpret mode on CPU)")
+                     "the fused Pallas kernel (interpret mode on CPU)")
 ap.add_argument("--ckpt-dir", default=None)
 args = ap.parse_args()
 
@@ -40,7 +40,7 @@ for policy in ("perfect", "inflota", "random"):
                    case=Case.GD_NONCONVEX, k_b=16,
                    channel=ChannelConfig(sigma2=1e-4, p_max=10.0),
                    constants=LearningConstants(sigma2=1e-4),
-                   use_kernels=args.use_kernels, seed=1)
+                   backend=args.backend, seed=1)
     hist = FLTrainer(task, workers, cfg).run(
         key=jax.random.PRNGKey(1), eval_data=test)
     print(f"{policy:8s}  final CE {hist['ce'][-1]:.4f}  "

@@ -4,8 +4,10 @@ Trains the paper's linear-regression task (Sec. VI-A) with federated
 learning over a simulated wireless MAC, comparing the three policies:
 Perfect aggregation / INFLOTA (the paper's method) / Random.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--rounds 120]
 """
+
+import argparse
 
 import jax
 import numpy as np
@@ -17,7 +19,11 @@ from repro.data import partition, synthetic
 from repro.fl.models import linreg_model
 from repro.fl.trainer import FLConfig, FLTrainer
 
-U, ROUNDS = 20, 120
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=120)
+args = ap.parse_args()
+
+U, ROUNDS = 20, args.rounds
 
 # 1. federated data: 20 workers, K_i ~ round(U[25, 35]) samples each
 counts = partition.sample_counts(U, k_bar=30, seed=0)

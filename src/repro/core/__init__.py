@@ -1,23 +1,41 @@
 """Core of the paper's contribution: analog-aggregation FL + INFLOTA.
 
 Public surface:
-  channel      — Rayleigh/AWGN channel model (paper Sec. VI setup)
+  channel      — ChannelModel scenarios (iid / Gauss-Markov / pathloss /
+                 imperfect CSI) + AWGN receiver (paper Sec. VI setup)
   power        — power policy (6), constraint (7), clipping (Alg. 1 l.5)
   aggregation  — OTA MAC forward (8) + PS post-processing (9)
   convergence  — Theorems 1-3, Lemmas 1-2, Propositions 1-2
   objectives   — per-entry gap objectives R_t (35)-(37)
   inflota      — Theorem-4 reduced search space + P4 line search
-  selection    — round policies (INFLOTA / Random / AllWorkers)
+  selection    — RoundPolicy interface + registry (INFLOTA / Random /
+                 AllWorkers / Perfect)
 """
 
-from repro.core.channel import ChannelConfig, round_keys, sample_gains, sample_noise
+from repro.core.channel import (ChannelConfig, ChannelModel, ExpIID,
+                                GaussMarkovFading, ImperfectCSI,
+                                PathlossShadowing, RayleighAmplitude,
+                                make_channel, register_channel,
+                                resolve_model, round_keys, sample_gains,
+                                sample_noise)
 from repro.core.convergence import LearningConstants
 from repro.core.inflota import InflotaSolution, solve, solve_bucketed
 from repro.core.objectives import Case
-from repro.core.selection import AllWorkersPolicy, InflotaPolicy, RandomPolicy
+from repro.core.selection import (AllWorkersPolicy, BetaReductions,
+                                  InflotaPolicy, PerfectPolicy,
+                                  PolicyContext, PolicyDecision,
+                                  RandomPolicy, RoundPolicy,
+                                  make_policy, register_policy,
+                                  resolve_policy)
 
 __all__ = [
-    "ChannelConfig", "round_keys", "sample_gains", "sample_noise",
+    "ChannelConfig", "ChannelModel", "ExpIID", "RayleighAmplitude",
+    "GaussMarkovFading", "PathlossShadowing", "ImperfectCSI",
+    "register_channel", "make_channel", "resolve_model",
+    "round_keys", "sample_gains", "sample_noise",
     "LearningConstants", "InflotaSolution", "solve", "solve_bucketed",
-    "Case", "AllWorkersPolicy", "InflotaPolicy", "RandomPolicy",
+    "Case",
+    "RoundPolicy", "PolicyContext", "PolicyDecision", "BetaReductions",
+    "AllWorkersPolicy", "InflotaPolicy", "RandomPolicy", "PerfectPolicy",
+    "register_policy", "make_policy", "resolve_policy",
 ]

@@ -34,12 +34,13 @@ def denominator(beta, k_i, b):
 
 
 def ota_aggregate(w, h, beta, b, k_i, p_max, noise,
-                  clip: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  clip: bool = True, h_est=None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full OTA round: transmit (clipped), superpose, add AWGN, descale.
 
     Args:
       w:     (U, D) local parameter (or update) vectors.
-      h:     (U, D) channel gains for this round.
+      h:     (U, D) *true* channel gains the MAC applies this round.
       beta:  (U, D) or (U,) selection indicators in {0, 1}.
       b:     (D,) or scalar power scaling factor.
       k_i:   (U,) local dataset sizes.
@@ -47,16 +48,21 @@ def ota_aggregate(w, h, beta, b, k_i, p_max, noise,
       noise: (D,) AWGN realization z_t (already scaled by sigma).
       clip:  apply the Algorithm-1 bounding step (True) or assume the
              unclipped policy (6) (False; used in analysis/tests).
+      h_est: optional (U, D)/(U, 1) CSI *estimate* the workers use to
+             invert the channel at transmit time (imperfect-CSI
+             scenarios); the superposition still applies the true h.
+             None (default) = perfect CSI (h_est = h).
 
     Returns:
       (w_hat, y): the PS estimate (D,) and the raw received signal (D,).
     """
     beta = jnp.broadcast_to(
         beta[:, None] if jnp.ndim(beta) == 1 else beta, w.shape)
+    h_tx = h if h_est is None else h_est
     if clip:
-        tx = power_lib.tx_signal(w, beta, k_i, b, h, p_max)
+        tx = power_lib.tx_signal(w, beta, k_i, b, h_tx, p_max)
     else:
-        tx = power_lib.tx_signal_unclipped(w, beta, k_i, b, h)
+        tx = power_lib.tx_signal_unclipped(w, beta, k_i, b, h_tx)
     y = jnp.sum(tx * h, axis=0) + noise
     den = denominator(beta, k_i, b)
     w_hat = y / jnp.maximum(den, _EPS)

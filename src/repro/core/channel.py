@@ -1,19 +1,46 @@
-"""Wireless channel model for FL over the air.
+"""Wireless channel scenarios for FL over the air.
 
-The paper (Sec. VI) generates the channel gain ``h_{i,t}`` between worker i
-and the PS from "an exponential distribution with unit mean" (the power gain
-of a Rayleigh-fading link) and assumes the CSI is perfectly known at the PS
-and constant within each round.  Receiver noise is AWGN with variance
-``sigma2``.
+The paper (Sec. VI) evaluates exactly one ensemble: per-round iid gains
+``h_{i,t} ~ Exp(1)`` (the power gain of a Rayleigh link) with perfect CSI
+at the PS.  This module generalizes that surface behind a small
+trace-compatible interface so the round engine is generic over *scenarios*:
 
-We implement exactly that, plus an optional true Rayleigh-amplitude mode
-(``amplitude=True`` draws |h| Rayleigh-distributed with E[|h|^2]=1).
+  ``ChannelModel`` protocol
+      init_state(key)          -> carry      (pytree; () when memoryless)
+      step(carry, key, t)      -> (carry, gains)   gains: (U,) true gains
+      estimate(gains, key)     -> h_est      what the PS/policy observes
+
+  Concrete models
+      ExpIID             — the paper's Sec. VI default (gains ~ Exp(1))
+      RayleighAmplitude  — |h| Rayleigh-distributed with E[|h|^2] = 1
+      GaussMarkovFading  — time-correlated Rayleigh fading: the complex
+                           amplitude is AR(1) with coefficient rho, so the
+                           power gain is marginally Exp(1) with lag-1
+                           autocorrelation rho^2; carry = (re, im) state
+      PathlossShadowing  — per-worker mean-gain heterogeneity: static
+                           pathloss + lognormal shadowing drawn once in
+                           ``init_state``, iid Exp(1) fast fading on top
+      ImperfectCSI       — wrapper separating the true gains the MAC
+                           applies from the noisy estimate the policy and
+                           the transmit power control see
+
+All three methods are pure functions of their inputs: the carry threads
+through ``jax.lax.scan`` (via ``RoundState.chan`` in the engine), so any
+model runs inside a fully jitted training loop with no per-round
+recompiles.  A string registry (``register_channel`` / ``make_channel``)
+lets configs name scenarios ("exp_iid", "gauss_markov", ...) without
+importing the classes.
+
+Receiver noise stays AWGN with variance ``sigma2`` (``sample_noise``); the
+static ``ChannelConfig`` keeps the receiver/power constants and remains
+the back-compat construction path (``resolve_model(None, u, cfg)``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import inspect
+from typing import Any, Callable, Dict, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +56,8 @@ class ChannelConfig:
                   all workers; per-worker vectors are supported downstream).
       amplitude:  if True sample |h| from a Rayleigh amplitude distribution
                   (E[h^2] = 1); if False (paper default) sample the gain h
-                  itself from Exp(1).
+                  itself from Exp(1).  Only consulted when no explicit
+                  ``ChannelModel`` is configured (see ``resolve_model``).
       h_floor:    numerical floor on the channel gain to keep 1/h bounded.
     """
 
@@ -39,9 +67,266 @@ class ChannelConfig:
     h_floor: float = 1e-3
 
 
+# ---------------------------------------------------------------- interface
+
+@runtime_checkable
+class ChannelModel(Protocol):
+    """Trace-compatible channel scenario (see module docstring).
+
+    ``u`` (the number of workers) is a field of every concrete model so the
+    three methods keep the minimal signatures; carry is an arbitrary pytree
+    of arrays with a scan-stable structure.
+    """
+
+    u: int
+
+    def init_state(self, key: jax.Array) -> Any:
+        """Draw the cross-round carry (pytree; ``()`` when memoryless)."""
+        ...
+
+    def step(self, carry: Any, key: jax.Array, t) -> Tuple[Any, jax.Array]:
+        """Advance one round: returns (new carry, true gains (U,))."""
+        ...
+
+    def estimate(self, gains: jax.Array, key: jax.Array) -> jax.Array:
+        """CSI the PS observes for ``gains`` (identity = perfect CSI)."""
+        ...
+
+
+# ----------------------------------------------------------------- registry
+
+_CHANNEL_REGISTRY: Dict[str, Callable[..., "ChannelModel"]] = {}
+
+
+def register_channel(name: str):
+    """Register a channel-model factory under ``name``.
+
+    The factory is called as ``factory(u, **kwargs)``; decorating the model
+    class itself works because every model's first field is ``u``.
+    """
+    def deco(factory):
+        _CHANNEL_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def channel_names() -> Tuple[str, ...]:
+    return tuple(sorted(_CHANNEL_REGISTRY))
+
+
+def make_channel(name: str, u: int, **kwargs) -> "ChannelModel":
+    """Instantiate a registered channel model for ``u`` workers."""
+    try:
+        factory = _CHANNEL_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown channel model {name!r}; registered: "
+            f"{channel_names()}") from None
+    return factory(u, **kwargs)
+
+
+def resolve_model(spec, u: int, cfg: ChannelConfig) -> "ChannelModel":
+    """Turn a config's channel spec into a ChannelModel instance.
+
+    spec may be None (build the paper-faithful model from ``cfg``), a
+    registry name, or an already-constructed ChannelModel (validated
+    against ``u``).  ``cfg.h_floor`` is forwarded to registry factories
+    that accept it, so a name spec matches the equivalent None spec.
+    """
+    if spec is None:
+        cls = RayleighAmplitude if cfg.amplitude else ExpIID
+        return cls(u=u, h_floor=cfg.h_floor)
+    if isinstance(spec, str):
+        factory = _CHANNEL_REGISTRY.get(spec)
+        kwargs = {}
+        if factory is not None:
+            try:
+                params = inspect.signature(factory).parameters
+                if ("h_floor" in params
+                        or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                               for p in params.values())):
+                    kwargs["h_floor"] = cfg.h_floor
+            except (TypeError, ValueError):   # builtins without signatures
+                pass
+        return make_channel(spec, u, **kwargs)
+    if getattr(spec, "u", u) != u:
+        raise ValueError(
+            f"channel model is sized for u={spec.u} workers, got u={u}")
+    return spec
+
+
+# ------------------------------------------------------------------- models
+
+class _PerfectCSI:
+    """Mixin: perfect CSI — the PS observes the true gains."""
+
+    def estimate(self, gains: jax.Array, key: jax.Array) -> jax.Array:
+        del key
+        return gains
+
+
+@register_channel("exp_iid")
+@dataclasses.dataclass(frozen=True)
+class ExpIID(_PerfectCSI):
+    """Paper Sec. VI default: iid per-round power gains h ~ Exp(1)."""
+
+    u: int
+    h_floor: float = 1e-3
+
+    def init_state(self, key):
+        del key
+        return ()
+
+    def step(self, carry, key, t):
+        del t
+        g = jax.random.exponential(key, (self.u,))
+        return carry, jnp.maximum(g, self.h_floor)
+
+
+@register_channel("rayleigh")
+@dataclasses.dataclass(frozen=True)
+class RayleighAmplitude(_PerfectCSI):
+    """iid Rayleigh *amplitude* gains: |h| = sqrt(Exp(1)), E[|h|^2] = 1."""
+
+    u: int
+    h_floor: float = 1e-3
+
+    def init_state(self, key):
+        del key
+        return ()
+
+    def step(self, carry, key, t):
+        del t
+        g = jnp.sqrt(jax.random.exponential(key, (self.u,)))
+        return carry, jnp.maximum(g, self.h_floor)
+
+
+@register_channel("gauss_markov")
+@dataclasses.dataclass(frozen=True)
+class GaussMarkovFading(_PerfectCSI):
+    """Time-correlated Rayleigh fading (Jakes-style AR(1) approximation).
+
+    The complex amplitude a_t = re + j·im evolves per worker as
+
+        a_t = rho * a_{t-1} + sqrt(1 - rho^2) * n_t,   n_t ~ CN(0, 1)
+
+    so the stationary marginal is a ~ CN(0, 1): the power gain
+    ``g = |a|^2`` is Exp(1) (exactly the paper's ensemble) with lag-1
+    autocorrelation corr(g_t, g_{t-1}) = rho^2.  carry = (re, im), each
+    (U,), threaded through the engine's scan carry.
+    """
+
+    u: int
+    rho: float = 0.9
+    h_floor: float = 1e-3
+
+    def init_state(self, key):
+        kr, ki = jax.random.split(key)
+        s = jnp.sqrt(0.5)
+        return (s * jax.random.normal(kr, (self.u,)),
+                s * jax.random.normal(ki, (self.u,)))
+
+    def step(self, carry, key, t):
+        del t
+        re, im = carry
+        kr, ki = jax.random.split(key)
+        innov = jnp.sqrt((1.0 - self.rho ** 2) * 0.5)
+        re = self.rho * re + innov * jax.random.normal(kr, (self.u,))
+        im = self.rho * im + innov * jax.random.normal(ki, (self.u,))
+        g = re * re + im * im
+        return (re, im), jnp.maximum(g, self.h_floor)
+
+
+@register_channel("pathloss")
+@dataclasses.dataclass(frozen=True)
+class PathlossShadowing(_PerfectCSI):
+    """Per-worker mean-gain heterogeneity: pathloss + lognormal shadowing.
+
+    ``init_state`` draws a static per-worker mean gain
+
+        gbar_i ∝ 10^(-(U[0, spread_db] + N(0, shadow_db^2)) / 10)
+
+    normalized to ensemble mean 1 (so the paper's average link budget is
+    preserved while near/far workers differ by orders of magnitude);
+    each round applies iid Exp(1) fast fading on top.  carry = gbar (U,).
+    """
+
+    u: int
+    spread_db: float = 20.0
+    shadow_db: float = 8.0
+    h_floor: float = 1e-3
+
+    def init_state(self, key):
+        kp, ks = jax.random.split(key)
+        atten_db = jax.random.uniform(kp, (self.u,)) * self.spread_db
+        atten_db = atten_db + jax.random.normal(ks, (self.u,)) * \
+            self.shadow_db
+        gbar = 10.0 ** (-atten_db / 10.0)
+        return gbar / jnp.mean(gbar)
+
+    def step(self, carry, key, t):
+        del t
+        g = carry * jax.random.exponential(key, (self.u,))
+        return carry, jnp.maximum(g, self.h_floor)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImperfectCSI:
+    """Wrap any model with a noisy estimator: h_est = |h · (1 + eps·n)|.
+
+    The *true* gains from ``inner.step`` are what the MAC superposition
+    applies; ``estimate`` is what the policy decides on AND what the
+    workers use to invert the channel at transmit time — both the descale
+    mismatch and wrongly-selected workers degrade the update (the paper's
+    stated future work, Sec. III fn. 3).  ``eps=0`` is *exactly* the
+    perfect-CSI path (no extra randomness is consumed).
+    """
+
+    inner: ChannelModel
+    eps: float = 0.1
+    h_floor: float = 1e-3
+
+    @property
+    def u(self) -> int:
+        return self.inner.u
+
+    def init_state(self, key):
+        return self.inner.init_state(key)
+
+    def step(self, carry, key, t):
+        return self.inner.step(carry, key, t)
+
+    def estimate(self, gains, key):
+        # the inner estimator gets a DERIVED key so stacked wrappers draw
+        # independent (not perfectly correlated) estimation noise
+        h = self.inner.estimate(gains, jax.random.fold_in(key, 1))
+        if self.eps == 0.0:
+            return h
+        n = jax.random.normal(key, h.shape)
+        return jnp.maximum(jnp.abs(h * (1.0 + self.eps * n)), self.h_floor)
+
+
+@register_channel("exp_iid_csi")
+def _make_exp_iid_csi(u: int, eps: float = 0.3, **kw) -> ImperfectCSI:
+    """Registry shortcut: the paper channel observed through noisy CSI.
+
+    ``h_floor`` (forwarded by ``resolve_model`` from ChannelConfig) floors
+    the estimate as well as the true gains — the estimate is what the
+    transmit inversion divides by.
+    """
+    return ImperfectCSI(ExpIID(u=u, **kw), eps=eps,
+                        h_floor=kw.get("h_floor", 1e-3))
+
+
+# ----------------------------------------------------- legacy sampling API
+
 def sample_gains(key: jax.Array, shape: Tuple[int, ...],
                  cfg: ChannelConfig) -> jax.Array:
-    """Draw per-(worker, entry) channel gains h for one FL round."""
+    """Draw per-(worker, entry) channel gains h for one FL round.
+
+    Memoryless back-compat path; equals ``resolve_model(None, ...)`` +
+    one ``step`` for (U,) shapes.  Prefer ChannelModel for new code.
+    """
     if cfg.amplitude:
         # Rayleigh amplitude with unit mean-square: sqrt(Exp(1)).
         g = jnp.sqrt(jax.random.exponential(key, shape))
@@ -65,3 +350,10 @@ def round_keys(key: jax.Array, t: jax.Array | int) -> Tuple[jax.Array, jax.Array
     """
     k = jax.random.fold_in(key, t)
     return jax.random.split(k, 2)
+
+
+def estimate_key(kg: jax.Array) -> jax.Array:
+    """Derived key for ``ChannelModel.estimate`` (distinct from the gain
+    stream so perfect-CSI trajectories are bit-identical to the legacy
+    two-key derivation)."""
+    return jax.random.fold_in(kg, 7)

@@ -1,16 +1,35 @@
 """Round policies: how (b_t, beta_t) are chosen each FL round.
 
-Three policies, matching the paper's Sec. VI comparison:
-  * InflotaPolicy  — the paper's contribution (Algorithm 1).
-  * RandomPolicy   — benchmark: each worker selected w.p. 0.5, b ~ Exp(1).
-  * PerfectPolicy  — 'Perfect aggregation': error-free links, everyone
-                     participates; implemented as exact FedAvg upstream.
+The engine is generic over a small ``RoundPolicy`` interface:
+
+    decide(key, ctx: PolicyContext) -> PolicyDecision
+
+where ``ctx`` carries everything a policy may observe (the *estimated*
+CSI ``h_est``, the |w_{t-1}| statistic, the Assumption-4 slack eta, sample
+counts, power budgets and the traced convergence state) and the decision
+is a structured ``PolicyDecision(b, beta, reductions, sel)`` that both
+backends consume: the jnp / Pallas aggregation paths transmit with
+``(b, beta)``, while the A_t/B_t convergence bookkeeping reads only the
+``BetaReductions`` — so the fused kernel never has to materialize beta.
+
+Two optional capabilities keep the engine free of per-policy branches:
+
+  * ``exact = True``  — the policy is an error-free oracle (no channel,
+    no noise); the engine aggregates with exact FedAvg (PerfectPolicy).
+  * ``fused_stage(backend) -> stage | None`` — a whole-stage override for
+    a backend; InflotaPolicy returns the single-VMEM-pass
+    ``kernels.ota_round`` call for ``"pallas"`` and None otherwise.
+
+A string registry (``register_policy`` / ``make_policy``) maps config
+names ("inflota" | "random" | "perfect" | "all") to constructed policies,
+so ``FLConfig(policy="inflota")`` keeps working and new policies plug in
+without touching ``fl/engine.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Protocol, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -20,51 +39,226 @@ from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case
 
 
-class Policy(Protocol):
-    def __call__(self, key: jax.Array, h: jax.Array, k_i: jax.Array,
-                 w_prev_abs: jax.Array, eta, p_max,
-                 delta_prev=0.0) -> Tuple[jax.Array, jax.Array]:
-        """Returns (b (D,), beta (U, D)) for the round."""
+# ---------------------------------------------------------------- decision
 
+class PolicyContext(NamedTuple):
+    """Everything a policy may observe when deciding round t.
+
+    All array members are traced values inside the jitted round step.
+    """
+
+    h_est: jax.Array       # (U,)  estimated channel gains (what the PS sees)
+    w_prev_abs: jax.Array  # (D,)  |w_{t-1}| at the PS
+    eta: jax.Array         # (D,)  Assumption-4 slack (paper footnote 4)
+    k_eff: jax.Array       # (U,)  effective sample counts (K_i | K_b-filled)
+    k_i: jax.Array         # (U,)  true sample counts (A_t/B_t weights)
+    p_max: jax.Array       # (U,)  per-worker power budgets
+    numer: jax.Array       # ()    case constant C of eqs. (35)-(37), traced
+    delta_prev: jax.Array  # ()    Delta_{t-1} (Lemma-1 recursion)
+    t: jax.Array           # ()    round index
+
+
+class BetaReductions(NamedTuple):
+    """The two beta contractions the convergence bookkeeping consumes."""
+
+    den_keff: jax.Array    # (D,) sum_i K_eff beta_i · b  (descale denominator)
+    den_ki: jax.Array      # (D,) sum_i K_i beta_i        (sampling statistic)
+
+
+class PolicyDecision(NamedTuple):
+    """Structured (b, beta) decision both backends consume.
+
+    ``beta`` may be rank-1 ``(U, 1)`` (worker-level selection, broadcast
+    against entries downstream without materializing (U, D)) or dense
+    ``(U, D)`` (entry-level selection, e.g. INFLOTA).
+    """
+
+    b: jax.Array                 # (D,) common power scaling per entry
+    beta: jax.Array              # (U, 1) | (U, D) selection mask in {0, 1}
+    reductions: BetaReductions
+    sel: jax.Array               # (D,) sum_i beta_i (selection count)
+
+
+def make_decision(b, beta, k_eff, k_i) -> PolicyDecision:
+    """Assemble a PolicyDecision, computing the reductions from beta.
+
+    ``b`` must already be (D,); beta (U, 1) or (U, D).  Rank-1 betas keep
+    the contractions O(U) and broadcast lazily to (D,).
+    """
+    D = b.shape[0]
+    den_keff = jnp.broadcast_to(
+        jnp.sum(k_eff[:, None] * beta, axis=0), (D,)) * b
+    den_ki = jnp.broadcast_to(jnp.sum(k_i[:, None] * beta, axis=0), (D,))
+    sel = jnp.broadcast_to(jnp.sum(beta, axis=0), (D,))
+    return PolicyDecision(b=b, beta=beta,
+                          reductions=BetaReductions(den_keff, den_ki),
+                          sel=sel)
+
+
+# --------------------------------------------------------------- interface
+
+class RoundPolicy(Protocol):
+    """What the round engine requires of a policy (see module docstring)."""
+
+    exact: bool
+
+    def decide(self, key: jax.Array, ctx: PolicyContext) -> PolicyDecision:
+        ...
+
+    def fused_stage(self, backend: str) -> Optional[Callable]:
+        ...
+
+
+class RoundPolicyBase:
+    """Default capabilities: channel-using, no fused whole-stage override."""
+
+    exact: bool = False
+
+    def fused_stage(self, backend: str) -> Optional[Callable]:
+        del backend
+        return None
+
+
+# ----------------------------------------------------------------- registry
+
+_POLICY_REGISTRY: Dict[str, Callable[..., "RoundPolicy"]] = {}
+
+
+def register_policy(name: str):
+    """Register a policy factory: ``factory(**build_kwargs) -> RoundPolicy``.
+
+    Factories receive the config-derived keyword set (``constants``,
+    ``case``, ``k_b``, ``select_prob``, ...) and pick what they need.
+    """
+    def deco(factory):
+        _POLICY_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def policy_names():
+    return tuple(sorted(_POLICY_REGISTRY))
+
+
+def make_policy(name: str, **kwargs) -> "RoundPolicy":
+    try:
+        factory = _POLICY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; registered: {policy_names()}"
+        ) from None
+    return factory(**kwargs)
+
+
+def resolve_policy(spec, **kwargs) -> "RoundPolicy":
+    """A config's policy field -> RoundPolicy (string name or instance)."""
+    if isinstance(spec, str):
+        return make_policy(spec, **kwargs)
+    return spec
+
+
+# ----------------------------------------------------------------- policies
 
 @dataclasses.dataclass(frozen=True)
-class InflotaPolicy:
+class InflotaPolicy(RoundPolicyBase):
+    """The paper's contribution (Algorithm 1): Theorem-4 joint search."""
+
     constants: LearningConstants
     case: Case = Case.GD_CONVEX
     K_b: float | None = None
 
-    def __call__(self, key, h, k_i, w_prev_abs, eta, p_max, delta_prev=0.0):
-        sol = inflota.solve(h, k_i, w_prev_abs, eta, p_max, self.constants,
-                            case=self.case, delta_prev=delta_prev,
+    def decide(self, key, ctx: PolicyContext) -> PolicyDecision:
+        del key  # deterministic given the CSI estimate
+        sol = inflota.solve(ctx.h_est[:, None], ctx.k_eff, ctx.w_prev_abs,
+                            ctx.eta, ctx.p_max, self.constants,
+                            case=self.case, delta_prev=ctx.delta_prev,
                             K_b=self.K_b)
-        return sol.b, sol.beta
+        return make_decision(sol.b, sol.beta, ctx.k_eff, ctx.k_i)
+
+    def fused_stage(self, backend: str) -> Optional[Callable]:
+        """Single-VMEM-pass search + transmit (``kernels.ota_round``)."""
+        if backend != "pallas":
+            return None
+        from repro.kernels import ops as kops  # deferred: core -> kernels
+        c = self.constants
+
+        def stage(W, h_true, noise, ctx: PolicyContext):
+            return kops.ota_round(
+                W, h_true, ctx.w_prev_abs, ctx.eta, noise,
+                ctx.k_eff, ctx.k_i, ctx.p_max, ctx.numer,
+                h_est=ctx.h_est, L=c.L, sigma2=c.sigma2)
+
+        return stage
 
 
 @dataclasses.dataclass(frozen=True)
-class RandomPolicy:
+class RandomPolicy(RoundPolicyBase):
     """Paper Sec. VI benchmark: P(select)=0.5 per worker, b ~ Exp(1).
 
     The same scalar b is used for all entries (the post-processing (9)
-    requires a common b across workers; the benchmark draws it at random).
+    requires a common b across workers; the benchmark draws it at random),
+    and selection is worker-level — the decision stays rank-1 (U, 1).
     """
+
     select_prob: float = 0.5
 
-    def __call__(self, key, h, k_i, w_prev_abs, eta, p_max, delta_prev=0.0):
-        U, D = h.shape
+    def decide(self, key, ctx: PolicyContext) -> PolicyDecision:
+        D = ctx.w_prev_abs.shape[0]
+        U = ctx.h_est.shape[0]
         kb, ksel = jax.random.split(key)
         b = jnp.full((D,), jax.random.exponential(kb, ()))
         beta = jax.random.bernoulli(
-            ksel, self.select_prob, (U,)).astype(jnp.float32)
-        beta = jnp.broadcast_to(beta[:, None], (U, D))
-        return b, beta
+            ksel, self.select_prob, (U, 1)).astype(jnp.float32)
+        return make_decision(b, beta, ctx.k_eff, ctx.k_i)
 
 
 @dataclasses.dataclass(frozen=True)
-class AllWorkersPolicy:
+class AllWorkersPolicy(RoundPolicyBase):
     """Everyone selected, fixed b — used for ablations & noise-only studies."""
+
     b_value: float = 1.0
 
-    def __call__(self, key, h, k_i, w_prev_abs, eta, p_max, delta_prev=0.0):
-        U, D = h.shape
-        return (jnp.full((D,), self.b_value),
-                jnp.ones((U, D), jnp.float32))
+    def decide(self, key, ctx: PolicyContext) -> PolicyDecision:
+        del key
+        D = ctx.w_prev_abs.shape[0]
+        U = ctx.h_est.shape[0]
+        return make_decision(jnp.full((D,), self.b_value),
+                             jnp.ones((U, 1), jnp.float32),
+                             ctx.k_eff, ctx.k_i)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfectPolicy(RoundPolicyBase):
+    """'Perfect aggregation' baseline: error-free links, everyone
+    participates — the engine short-circuits to exact weighted FedAvg."""
+
+    exact: bool = True
+
+    def decide(self, key, ctx: PolicyContext) -> PolicyDecision:
+        del key
+        D = ctx.w_prev_abs.shape[0]
+        U = ctx.h_est.shape[0]
+        return make_decision(jnp.ones((D,)), jnp.ones((U, 1), jnp.float32),
+                             ctx.k_eff, ctx.k_i)
+
+
+@register_policy("inflota")
+def _build_inflota(*, constants: LearningConstants,
+                   case: Case = Case.GD_CONVEX, k_b=None,
+                   **_) -> InflotaPolicy:
+    return InflotaPolicy(constants=constants, case=case, K_b=k_b)
+
+
+@register_policy("random")
+def _build_random(*, select_prob: float = 0.5, **_) -> RandomPolicy:
+    return RandomPolicy(select_prob=select_prob)
+
+
+@register_policy("all")
+def _build_all(*, b_value: float = 1.0, **_) -> AllWorkersPolicy:
+    return AllWorkersPolicy(b_value=b_value)
+
+
+@register_policy("perfect")
+def _build_perfect(**_) -> PerfectPolicy:
+    return PerfectPolicy()

@@ -40,21 +40,31 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import channel as chan
-from repro.core import inflota
+from repro.core import selection as selection_lib
 from repro.core.channel import ChannelConfig
 from repro.core.convergence import LearningConstants
-from repro.core.objectives import Case
+from repro.core.objectives import Case, case_numerator
 
 _EPS = 1e-12
 
 
 @dataclasses.dataclass(frozen=True)
 class OTAConfig:
-    """Static configuration for the distributed OTA aggregator."""
+    """Static configuration for the distributed OTA aggregator.
+
+    ``policy`` resolves through the ``repro.core.selection`` registry
+    (name or RoundPolicy instance); ``channel_model`` accepts any
+    ``repro.core.channel.ChannelModel`` (name, instance, or None for the
+    paper-faithful iid ensemble built from ``channel``).  Stateful models
+    (e.g. ``GaussMarkovFading``) need their carry threaded by the caller:
+    pass ``channel_carry=`` to the aggregate functions and read the new
+    carry back from ``stats["channel_carry"]``.
+    """
 
     channel: ChannelConfig = ChannelConfig()
+    channel_model: Any = None        # None | registry name | ChannelModel
     constants: LearningConstants = LearningConstants()
-    policy: str = "inflota"          # inflota | random | perfect
+    policy: Any = "inflota"          # registry name | RoundPolicy instance
     granularity: str = "tensor"      # tensor (1 bucket/leaf) | bucket
     n_buckets: int = 64              # buckets per leaf when granularity=bucket
     case: Case = Case.GD_NONCONVEX
@@ -66,6 +76,11 @@ class OTAConfig:
     #   halves the cross-worker collective payload; the analog channel is
     #   itself noisy, so σ-scale quantization error is usually dominated —
     #   beyond-paper, EXPERIMENTS §Perf)
+
+    def resolved_policy(self) -> selection_lib.RoundPolicy:
+        return selection_lib.resolve_policy(
+            self.policy, constants=self.constants, case=self.case,
+            select_prob=self.select_prob)
 
 
 # ----------------------------------------------------------------- topology
@@ -183,37 +198,52 @@ def sample_noise_sharded(key, shape, cfg: ChannelConfig):
 
 # ------------------------------------------------------------------- policy
 
-def _solve_policy(cfg: OTAConfig, h_workers, w_stat, k_i, key,
-                  delta_prev) -> Tuple[jax.Array, jax.Array]:
-    """Replicated (b, beta) per bucket.  h_workers (U,), w_stat (nb,)."""
-    U = h_workers.shape[0]
+def _decide(policy, cfg: OTAConfig, h_est, w_stat, k_i, key,
+            delta_prev, t) -> Tuple[jax.Array, jax.Array]:
+    """Replicated (b, beta) per bucket via the RoundPolicy interface.
+
+    h_est (U,) is the CSI estimate; w_stat (nb,) the per-bucket |w|
+    statistic standing in for |w_{t-1}| (buckets play the role of
+    entries).  Returns b (nb,), beta (U, nb).
+    """
+    U = h_est.shape[0]
     nb = w_stat.shape[0]
-    if cfg.policy == "perfect":
-        return jnp.ones((nb,)), jnp.ones((U, nb))
-    if cfg.policy == "random":
-        kb, ks = jax.random.split(key)
-        b = jax.random.exponential(kb, ())
-        beta = (jax.random.uniform(ks, (U,)) < cfg.select_prob).astype(
-            jnp.float32)
-        return jnp.full((nb,), b), jnp.broadcast_to(beta[:, None], (U, nb))
-    if cfg.policy == "inflota":
-        # rank-1: solve broadcasts the per-worker scalar gain internally
-        sol = inflota.solve(h_workers[:, None], k_i, w_stat, cfg.eta,
-                            cfg.channel.p_max, cfg.constants, cfg.case,
-                            delta_prev)
-        return sol.b, sol.beta
-    raise ValueError(cfg.policy)
+    ctx = selection_lib.PolicyContext(
+        h_est=h_est, w_prev_abs=w_stat,
+        eta=jnp.broadcast_to(jnp.asarray(cfg.eta, w_stat.dtype), (nb,)),
+        k_eff=k_i, k_i=k_i,
+        p_max=jnp.full((U,), cfg.channel.p_max, w_stat.dtype),
+        numer=case_numerator(cfg.case, k_i, cfg.constants, delta_prev),
+        delta_prev=jnp.asarray(delta_prev), t=t)
+    dec = policy.decide(key, ctx)
+    return dec.b, jnp.broadcast_to(dec.beta, (U, nb))
+
+
+def _channel_round(cfg: OTAConfig, u: int, kg, t, channel_carry):
+    """One ChannelModel round: (new carry, true gains (u,), estimate).
+
+    ``kg`` is the caller's per-round gain key (the first of
+    ``chan.round_keys``) so gains and noise derive from ONE recipe.
+    """
+    model = chan.resolve_model(cfg.channel_model, u, cfg.channel)
+    if channel_carry is None:
+        channel_carry = model.init_state(jax.random.fold_in(kg, 11))
+    carry, h_true = model.step(channel_carry, kg, t)
+    h_est = model.estimate(h_true, chan.estimate_key(kg))
+    return carry, h_true, h_est
 
 
 # --------------------------------------------------------------- aggregation
 
-def _ota_leaf(v, *, h_workers, idx, b, beta, k_i, cfg: OTAConfig,
+def _ota_leaf(v, *, h_workers, h_est, idx, b, beta, k_i, cfg: OTAConfig,
               noise_key, axis_names) -> Tuple[jax.Array, jax.Array]:
     """OTA-aggregate one leaf (original shape) given a per-bucket policy.
 
     v (*shape) local values;  b (nb,), beta (U, nb) identical on all
     shards; buckets partition the leading dim.  All ops are elementwise or
     leading-dim broadcasts, so the leaf's sharding is preserved.
+    ``h_workers`` are the true gains the MAC applies; ``h_est`` the CSI
+    estimate the transmit inversion uses (== h_workers for perfect CSI).
     Returns (aggregated (*shape), per-bucket denominator (nb,)).
     """
     nb = b.shape[0]
@@ -221,8 +251,9 @@ def _ota_leaf(v, *, h_workers, idx, b, beta, k_i, cfg: OTAConfig,
     beta_mine = _expand(beta[idx], nb, v.shape)
     k_mine = k_i[idx]
     h_mine = h_workers[idx]
-    # transmit side: policy (6) + Algorithm-1 line-5 clipping, then channel
-    amp = k_mine * b_e * jnp.abs(v) / h_mine
+    # transmit side: policy (6) + Algorithm-1 line-5 clipping (against the
+    # worker's channel ESTIMATE), then the true channel
+    amp = k_mine * b_e * jnp.abs(v) / h_est[idx]
     tx = jnp.sign(v) * jnp.minimum(amp, jnp.sqrt(cfg.channel.p_max))
     rx_contrib = beta_mine * tx * h_mine
     # superposition (8) over the worker axes + AWGN at the PS
@@ -239,7 +270,9 @@ def ota_aggregate_tree(tree, *, key, t, cfg: OTAConfig,
                        axis_names: Sequence[str] = ("pod", "data"),
                        k_i: Optional[jax.Array] = None,
                        delta_prev: float = 0.0,
-                       stats_tree: Any = None) -> Tuple[Any, Dict[str, Any]]:
+                       stats_tree: Any = None,
+                       channel_carry: Any = None
+                       ) -> Tuple[Any, Dict[str, Any]]:
     """OTA-aggregate a pytree of per-worker values (inside shard_map).
 
     Args:
@@ -251,6 +284,11 @@ def ota_aggregate_tree(tree, *, key, t, cfg: OTAConfig,
       k_i:        optional (U,) per-worker sample weights; equal by default.
       delta_prev: Delta_{t-1} for the GD_CONVEX objective.
       stats_tree: per-leaf (nb,) |w| statistics when cfg.stat_mode='fixed'.
+      channel_carry: cross-round ChannelModel carry; REQUIRED for
+                  time-correlated models after round 0 (pass None on the
+                  first round, then thread ``stats["channel_carry"]`` of
+                  the previous round — with None every round a stateful
+                  model re-initializes and degenerates to iid gains).
 
     Returns (aggregated tree, stats dict). Aggregated values are identical
     on every shard (psum + replicated post-processing).  Buckets with no
@@ -262,15 +300,19 @@ def ota_aggregate_tree(tree, *, key, t, cfg: OTAConfig,
     if k_i is None:
         k_i = jnp.full((U,), cfg.k_i, jnp.float32)
 
-    kg, kn = chan.round_keys(key, t)
-    h_workers = chan.sample_gains(kg, (U,), cfg.channel)
-
-    if cfg.policy == "perfect":
+    policy = cfg.resolved_policy()
+    if getattr(policy, "exact", False):
         # error-free baseline: exact weighted FedAvg, no channel at all
         agg = fedavg_tree(tree, axis_names=axis_names, k_i=k_i)
-        return agg, {"selected_frac": jnp.ones(()),
-                     "b_mean": jnp.ones(()),
-                     "h_min": jnp.ones(()), "h_max": jnp.ones(())}
+        stats = {"selected_frac": jnp.ones(()),
+                 "b_mean": jnp.ones(()),
+                 "h_min": jnp.ones(()), "h_max": jnp.ones(())}
+        if channel_carry is not None:   # pass a threaded carry through
+            stats["channel_carry"] = channel_carry
+        return agg, stats
+
+    kg, kn = chan.round_keys(key, t)
+    carry, h_workers, h_est = _channel_round(cfg, U, kg, t, channel_carry)
 
     leaves, treedef = jax.tree.flatten(tree)
     stat_leaves = (jax.tree.flatten(stats_tree)[0]
@@ -287,9 +329,10 @@ def ota_aggregate_tree(tree, *, key, t, cfg: OTAConfig,
         else:
             w_stat = _pmax(_leaf_buckets(jnp.abs(v), nb), axis_names)
         kp, kz = jax.random.split(jax.random.fold_in(kn, i))
-        b, beta = _solve_policy(cfg, h_workers, w_stat, k_i, kp, delta_prev)
+        b, beta = _decide(policy, cfg, h_est, w_stat, k_i, kp,
+                          delta_prev, t)
         agg, den_b = _ota_leaf(
-            v, h_workers=h_workers, idx=idx, b=b,
+            v, h_workers=h_workers, h_est=h_est, idx=idx, b=b,
             beta=beta, k_i=k_i, cfg=cfg, noise_key=kz,
             axis_names=axis_names)
         out_leaves.append(agg.astype(leaf.dtype))
@@ -301,6 +344,9 @@ def ota_aggregate_tree(tree, *, key, t, cfg: OTAConfig,
         "b_mean": jnp.mean(jnp.stack(b_means)),
         "h_min": jnp.min(h_workers),
         "h_max": jnp.max(h_workers),
+        # always emitted so round 0 (channel_carry=None) can bootstrap
+        # the cross-round threading
+        "channel_carry": carry,
     }
     return jax.tree.unflatten(treedef, out_leaves), stats
 
@@ -327,6 +373,7 @@ def ota_aggregate_stacked(tree_w, *, key, t, cfg: OTAConfig,
                           k_i: Optional[jax.Array] = None,
                           delta_prev: float = 0.0,
                           worker_axes: Sequence[str] = ("pod", "data"),
+                          channel_carry: Any = None,
                           ) -> Tuple[Any, Dict[str, Any]]:
     """OTA aggregation over a *stacked* worker dim (pure-auto pjit path).
 
@@ -347,15 +394,19 @@ def ota_aggregate_stacked(tree_w, *, key, t, cfg: OTAConfig,
     if k_i is None:
         k_i = jnp.full((W,), cfg.k_i, jnp.float32)
 
-    if cfg.policy == "perfect":
+    policy = cfg.resolved_policy()
+    if getattr(policy, "exact", False):
         # error-free baseline: exact weighted FedAvg, no channel at all
         agg = fedavg_stacked(tree_w, k_i=None if cfg.k_i == 1.0 else k_i)
-        return agg, {"selected_frac": jnp.ones(()),
-                     "b_mean": jnp.ones(()),
-                     "h_min": jnp.ones(()), "h_max": jnp.ones(())}
+        stats = {"selected_frac": jnp.ones(()),
+                 "b_mean": jnp.ones(()),
+                 "h_min": jnp.ones(()), "h_max": jnp.ones(())}
+        if channel_carry is not None:   # pass a threaded carry through
+            stats["channel_carry"] = channel_carry
+        return agg, stats
 
     kg, kn = chan.round_keys(key, t)
-    h_workers = chan.sample_gains(kg, (W,), cfg.channel)
+    carry, h_workers, h_est = _channel_round(cfg, W, kg, t, channel_carry)
 
     out_leaves, sel_fracs, b_means = [], [], []
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -370,11 +421,12 @@ def ota_aggregate_stacked(tree_w, *, key, t, cfg: OTAConfig,
         w_stat = jnp.max(jax.vmap(lambda x: _leaf_buckets(jnp.abs(x), nb)
                                   )(v), axis=0)
         kp, kz = jax.random.split(jax.random.fold_in(kn, i))
-        b, beta = _solve_policy(cfg, h_workers, w_stat, k_i, kp, delta_prev)
+        b, beta = _decide(policy, cfg, h_est, w_stat, k_i, kp,
+                          delta_prev, t)
         bc = (slice(None),) + (None,) * len(shape)           # (W, 1, 1, ...)
         b_e = _expand(b, nb, shape)[None]                    # (1, L, 1...)
         beta_e = jax.vmap(lambda row: _expand(row, nb, shape))(beta)
-        amp = k_i[bc] * b_e * jnp.abs(v) / h_workers[bc]
+        amp = k_i[bc] * b_e * jnp.abs(v) / h_est[bc]
         tx = jnp.sign(v) * jnp.minimum(amp, jnp.sqrt(cfg.channel.p_max))
         y = jnp.sum(beta_e * tx * h_workers[bc], axis=0)
         y = y + sample_noise_sharded(kz, y.shape, cfg.channel)
@@ -390,6 +442,9 @@ def ota_aggregate_stacked(tree_w, *, key, t, cfg: OTAConfig,
         "b_mean": jnp.mean(jnp.stack(b_means)),
         "h_min": jnp.min(h_workers),
         "h_max": jnp.max(h_workers),
+        # always emitted so round 0 (channel_carry=None) can bootstrap
+        # the cross-round threading
+        "channel_carry": carry,
     }
     return jax.tree.unflatten(treedef, out_leaves), stats
 
@@ -416,9 +471,11 @@ class OTAAggregator:
     cfg: OTAConfig = OTAConfig()
     axis_names: Tuple[str, ...] = ("pod", "data")
 
-    def aggregate(self, tree, key, t, k_i=None, delta_prev: float = 0.0):
+    def aggregate(self, tree, key, t, k_i=None, delta_prev: float = 0.0,
+                  channel_carry=None):
         if self.cfg.policy == "off":   # pure FedAvg escape hatch
             return fedavg_tree(tree, axis_names=self.axis_names, k_i=k_i), {}
         return ota_aggregate_tree(tree, key=key, t=t, cfg=self.cfg,
                                   axis_names=self.axis_names, k_i=k_i,
-                                  delta_prev=delta_prev)
+                                  delta_prev=delta_prev,
+                                  channel_carry=channel_carry)

@@ -1,22 +1,40 @@
 """Fused single-pass OTA round engine — jit/scan-compatible Algorithm 1.
 
-One pure functional ``round_step(state, _) -> (state, stats)`` replaces the
-trainer's former three divergent per-round code paths (perfect / kernels /
-jnp).  Design points:
+One pure functional ``round_step(state, _) -> (state, stats)`` drives every
+scenario: the engine is generic over two small interfaces instead of
+branching on config strings.
+
+  * ``ChannelModel`` (``repro.core.channel``) produces the true per-worker
+    gains each round (``step``) and the CSI estimate the PS observes
+    (``estimate``); its carry threads through ``RoundState.chan``, so
+    time-correlated fading (``GaussMarkovFading``) and imperfect CSI
+    (``ImperfectCSI``) run inside one ``jax.lax.scan`` with zero per-round
+    recompiles.
+  * ``RoundPolicy`` (``repro.core.selection``) turns the estimate into a
+    structured ``PolicyDecision(b, beta, reductions, sel)``.  Both
+    backends consume the decision: the A_t/B_t bookkeeping reads only the
+    ``BetaReductions``, never beta itself.  Policies expose two
+    capabilities the engine checks structurally (no name matching):
+    ``exact`` (error-free oracle -> exact FedAvg, e.g. PerfectPolicy) and
+    ``fused_stage(backend)`` (whole-stage override — InflotaPolicy
+    returns the single-VMEM-pass ``kernels.ota_round`` for "pallas").
+
+Strings still work everywhere: ``FLConfig(policy="inflota",
+channel_model="gauss_markov")`` resolves through the registries in
+``selection`` / ``channel``; instances pass straight through, so a new
+policy or channel model defined in a test plugs in without touching this
+file.
+
+Design points carried over from the fused engine:
 
   * Local updates are vmap-batched: worker datasets are padded to a
     uniform K_max with sample masks (``client.local_update_masked``), so
     one dispatch covers all U workers instead of U serial jitted calls.
-  * The channel is drawn as the trainer's actual scalar-per-worker gain
-    and kept RANK-1 (``(U, 1)``) end to end — neither backend ever
-    materializes the broadcast (U, D) matrix in HBM.
-  * ``Backend.PALLAS`` routes the policy + aggregation through the fused
-    ``kernels.ota_round`` single-VMEM-pass kernel; ``Backend.JNP`` is the
-    pure-jnp reference.  Both take traced ``eta`` / ``numer`` / ``t``, so
-    the whole step compiles once — no per-round recompiles or host syncs.
-  * A_t / B_t bookkeeping consumes the per-entry reductions
-    (sum_i K_i beta, b) instead of beta itself, matching the kernel's
-    beta-free outputs (``convergence.A_t_from_den`` / ``B_t_from_den``).
+  * The channel is RANK-1 (scalar-per-worker) end to end — neither
+    backend ever materializes the broadcast (U, D) matrix in HBM.
+  * Both backends take traced ``eta`` / ``numer`` / ``t`` / gains /
+    estimates, so the whole step compiles once — no per-round recompiles
+    or host syncs.
   * The step is a valid ``jax.lax.scan`` body: ``FLTrainer.run`` uses a
     scan for small-D workloads and a Python loop (same jitted step) when
     per-round host-side eval is wanted.
@@ -26,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -35,7 +54,7 @@ from jax.flatten_util import ravel_pytree
 from repro.core import aggregation as agg
 from repro.core import channel as chan
 from repro.core import convergence as conv
-from repro.core import inflota
+from repro.core import selection as selection_lib
 from repro.core.channel import ChannelConfig
 from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case, case_numerator
@@ -54,15 +73,25 @@ class Backend(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
+    """Scenario + training configuration for the OTA-FL round engine.
+
+    ``policy`` and ``channel_model`` each accept a registry name (str) or
+    a constructed instance (``RoundPolicy`` / ``ChannelModel``);
+    ``channel_model=None`` builds the paper-faithful iid model from
+    ``channel`` (``ExpIID``, or ``RayleighAmplitude`` when
+    ``channel.amplitude``).
+    """
+
     rounds: int = 100
     lr: float = 0.01
-    policy: str = "inflota"           # inflota | random | perfect
+    policy: Any = "inflota"           # name | RoundPolicy instance
     case: Case = Case.GD_CONVEX
     k_b: Optional[int] = None         # mini-batch size (SGD); None = full GD
     channel: ChannelConfig = ChannelConfig()
+    channel_model: Any = None         # None | name | ChannelModel instance
     constants: LearningConstants = LearningConstants()
     select_prob: float = 0.5          # random policy
-    use_kernels: bool = False         # legacy alias for backend=PALLAS
+    use_kernels: bool = False         # DEPRECATED: use backend=Backend.PALLAS
     backend: Backend | str = Backend.AUTO
     scan: bool = False                # run() via one jax.lax.scan
     eval_every: int = 1
@@ -71,9 +100,22 @@ class FLConfig:
     def resolved_backend(self) -> Backend:
         b = Backend(self.backend) if not isinstance(self.backend, Backend) \
             else self.backend
+        if self.use_kernels:
+            warnings.warn(
+                "FLConfig.use_kernels is deprecated; pass "
+                "backend=Backend.PALLAS (or backend='pallas') instead",
+                DeprecationWarning, stacklevel=2)
         if b is Backend.AUTO:
             return Backend.PALLAS if self.use_kernels else Backend.JNP
         return b
+
+    def resolved_policy(self) -> selection_lib.RoundPolicy:
+        return selection_lib.resolve_policy(
+            self.policy, constants=self.constants, case=self.case,
+            k_b=self.k_b, select_prob=self.select_prob)
+
+    def resolved_channel_model(self, u: int) -> chan.ChannelModel:
+        return chan.resolve_model(self.channel_model, u, self.channel)
 
 
 class RoundState(NamedTuple):
@@ -83,6 +125,7 @@ class RoundState(NamedTuple):
     delta: jax.Array     # Delta_{t-1} (Lemma-1 recursion), f32 scalar
     t: jax.Array         # round index, i32 scalar
     key: jax.Array       # PRNG key for this and later rounds
+    chan: Any = ()       # ChannelModel carry (e.g. Gauss-Markov state)
 
 
 class RoundStats(NamedTuple):
@@ -90,73 +133,87 @@ class RoundStats(NamedTuple):
     b_mean: jax.Array    # mean over entries of b
 
 
-def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int
+def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
+                    model: Optional[chan.ChannelModel] = None
                     ) -> Callable[..., Any]:
-    """Policy + aggregation + convergence bookkeeping as one pure function.
+    """Channel draw + policy + aggregation + convergence bookkeeping.
 
-    Returns ``stage(W, w_prev, w_prev2, delta_prev, kchan, kpol, t) ->
-    (new_flat, delta, selected, b_mean)`` — the post-local-update part of
-    a round, shared by all policies and both backends (and benchmarked
-    head-to-head in ``benchmarks/kernels_micro.py``).
+    Returns ``stage(W, w_prev, w_prev2, delta_prev, chan_carry, kchan,
+    kpol, t) -> (new_flat, delta, chan_carry, selected, b_mean)`` — the
+    post-local-update part of a round, shared by all policies and both
+    backends (and benchmarked head-to-head in
+    ``benchmarks/kernels_micro.py``).
+
+    The function resolves the policy and channel model ONCE at build time
+    (callers that also need the model, e.g. for carry init, may pass a
+    pre-resolved instance via ``model``) and contains no per-name
+    branches: exactness and kernel fusion are capabilities the policy
+    object advertises (``policy.exact``, ``policy.fused_stage(backend)``),
+    so new scenarios plug in without editing this module.
     """
     U = k_i.shape[0]
     backend = cfg.resolved_backend()
+    policy = cfg.resolved_policy()
+    if model is None:
+        model = cfg.resolved_channel_model(U)
     k_eff = (jnp.full((U,), float(cfg.k_b), jnp.float32)
              if cfg.k_b is not None else k_i)
     p_max = jnp.full((U,), cfg.channel.p_max, jnp.float32)
     c = cfg.constants
 
-    def stage(W, w_prev, w_prev2, delta_prev, kchan, kpol, t):
-        if cfg.policy == "perfect":
-            new_flat = agg.fedavg(W, k_i)
-            return (new_flat, delta_prev, jnp.float32(U), jnp.float32(0.0))
+    if getattr(policy, "exact", False):
+        # Error-free oracle (e.g. 'perfect'): exact weighted FedAvg, no
+        # channel, no noise, Delta recursion unchanged.
+        def exact_stage(W, w_prev, w_prev2, delta_prev, chan_carry,
+                        kchan, kpol, t):
+            del w_prev, w_prev2, kchan, kpol, t
+            return (agg.fedavg(W, k_i), delta_prev, chan_carry,
+                    jnp.float32(U), jnp.float32(0.0))
+        return exact_stage
 
+    fused = None
+    if hasattr(policy, "fused_stage"):
+        fused = policy.fused_stage(backend.value)
+
+    if backend is Backend.PALLAS:
+        def aggregate(W, h_true, h_est, beta, b, noise):
+            return kops.ota_aggregate(W, h_true[:, None], beta, b, noise,
+                                      k_eff, p_max,
+                                      h_est=h_est[:, None])
+    else:
+        def aggregate(W, h_true, h_est, beta, b, noise):
+            w_hat, _ = agg.ota_aggregate(W, h_true[:, None], beta, b,
+                                         k_eff, p_max, noise,
+                                         h_est=h_est[:, None])
+            return w_hat
+
+    def stage(W, w_prev, w_prev2, delta_prev, chan_carry, kchan, kpol, t):
         kg, kn = chan.round_keys(kchan, t)
-        h_workers = chan.sample_gains(kg, (U,), cfg.channel)   # (U,) rank-1
+        chan_carry, h_true = model.step(chan_carry, kg, t)
+        h_est = model.estimate(h_true, chan.estimate_key(kg))
         noise = chan.sample_noise(kn, (D,), cfg.channel)
         eta = jnp.abs(w_prev - w_prev2) + 1e-8   # paper footnote 4
+        numer = case_numerator(cfg.case, k_i, c, delta_prev, cfg.k_b)
+        ctx = selection_lib.PolicyContext(
+            h_est=h_est, w_prev_abs=jnp.abs(w_prev), eta=eta,
+            k_eff=k_eff, k_i=k_i, p_max=p_max, numer=numer,
+            delta_prev=delta_prev, t=t)
 
-        if cfg.policy == "inflota":
-            numer = case_numerator(cfg.case, k_i, c, delta_prev, cfg.k_b)
-            if backend is Backend.PALLAS:
-                w_hat, b, den_keff, den_ki, sel = kops.ota_round(
-                    W, h_workers, jnp.abs(w_prev), eta, noise,
-                    k_eff, k_i, p_max, numer, L=c.L, sigma2=c.sigma2)
-            else:
-                sol = inflota.solve(h_workers[:, None], k_eff,
-                                    jnp.abs(w_prev), eta, p_max, c,
-                                    cfg.case, delta_prev, cfg.k_b)
-                b, beta = sol.b, sol.beta
-                w_hat, _ = agg.ota_aggregate(W, h_workers[:, None], beta,
-                                             b, k_eff, p_max, noise)
-                den_keff = agg.denominator(beta, k_eff, b)
-                den_ki = jnp.sum(k_i[:, None] * beta, axis=0)
-                sel = jnp.sum(beta, axis=0)
-        elif cfg.policy == "random":
-            kb_, ksel = jax.random.split(kpol)
-            b = jnp.full((D,), jax.random.exponential(kb_, ()))
-            beta_w = jax.random.bernoulli(
-                ksel, cfg.select_prob, (U,)).astype(jnp.float32)
-            if backend is Backend.PALLAS:
-                w_hat = kops.ota_aggregate(W, h_workers[:, None],
-                                           beta_w[:, None], b, noise,
-                                           k_eff, p_max)
-            else:
-                w_hat, _ = agg.ota_aggregate(W, h_workers[:, None],
-                                             beta_w[:, None], b, k_eff,
-                                             p_max, noise)
-            den_keff = jnp.sum(k_eff * beta_w) * b
-            den_ki = jnp.full((D,), jnp.sum(k_i * beta_w))
-            sel = jnp.full((D,), jnp.sum(beta_w))
+        if fused is not None:
+            w_hat, b, den_keff, den_ki, sel = fused(W, h_true, noise, ctx)
         else:
-            raise ValueError(cfg.policy)
+            dec = policy.decide(kpol, ctx)
+            w_hat = aggregate(W, h_true, h_est, dec.beta, dec.b, noise)
+            b = dec.b
+            den_keff, den_ki = dec.reductions
+            sel = dec.sel
 
         # entries with no selected worker keep the previous value
         new_flat = jnp.where(den_keff > _EPS, w_hat, w_prev)
         a_t = conv.A_t_from_den(den_ki, k_i, c)
         b_t = conv.B_t_from_den(den_ki, b, k_i, c)
         delta = b_t + a_t * delta_prev
-        return new_flat, delta, jnp.mean(sel), jnp.mean(b)
+        return new_flat, delta, chan_carry, jnp.mean(sel), jnp.mean(b)
 
     return stage
 
@@ -165,6 +222,7 @@ class Engine(NamedTuple):
     step: Callable[[RoundState, Any], tuple]
     unravel: Callable[[jax.Array], Any]
     D: int
+    init: Callable[[jax.Array, jax.Array], RoundState]
 
 
 def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
@@ -189,7 +247,10 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
             raise ValueError(
                 f"k_b={cfg.k_b} exceeds the smallest worker's sample "
                 f"count ({min_k}); minibatch sampling would draw padding")
-    ota_stage = build_ota_stage(cfg, k_i, D)
+    # resolve the channel model ONCE and share the instance between the
+    # stage (step) and the carry initializer (init)
+    model = cfg.resolved_channel_model(U)
+    ota_stage = build_ota_stage(cfg, k_i, D, model=model)
 
     def local_stage(flat, klocal):
         """All workers' updates in one vmap-batched dispatch -> (U, D)."""
@@ -203,19 +264,27 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
     def step(state: RoundState, _=None):
         key_next, klocal, kchan, kpol = jax.random.split(state.key, 4)
         W = local_stage(state.flat, klocal)
-        new_flat, delta, sel, b_mean = ota_stage(
-            W, state.flat, state.w_prev2, state.delta, kchan, kpol,
-            state.t)
+        new_flat, delta, chan_carry, sel, b_mean = ota_stage(
+            W, state.flat, state.w_prev2, state.delta, state.chan,
+            kchan, kpol, state.t)
         new_state = RoundState(flat=new_flat, w_prev2=state.flat,
-                               delta=delta, t=state.t + 1, key=key_next)
+                               delta=delta, t=state.t + 1, key=key_next,
+                               chan=chan_carry)
         return new_state, RoundStats(selected=sel, b_mean=b_mean)
 
-    return Engine(step=step, unravel=unravel, D=D)
+    def init(flat: jax.Array, key: jax.Array) -> RoundState:
+        # The model's init key is DERIVED (not split off) so memoryless
+        # scenarios reproduce the legacy per-round key streams exactly.
+        carry = model.init_state(jax.random.fold_in(key, 0x636861))
+        return init_state(flat, key, chan_carry=carry)
+
+    return Engine(step=step, unravel=unravel, D=D, init=init)
 
 
-def init_state(flat: jax.Array, key: jax.Array) -> RoundState:
+def init_state(flat: jax.Array, key: jax.Array,
+               chan_carry: Any = ()) -> RoundState:
     # delta follows the parameter dtype so the scan carry stays uniform
     # whether or not x64 is enabled
     return RoundState(flat=flat, w_prev2=flat,
                       delta=jnp.zeros((), flat.dtype),
-                      t=jnp.int32(0), key=key)
+                      t=jnp.int32(0), key=key, chan=chan_carry)

@@ -9,10 +9,15 @@ The per-round computation is one fused, jit/scan-compatible
 ``round_step`` built by ``repro.fl.engine``: vmap-batched local updates
 over K_max-padded worker data, a rank-1 (scalar-per-worker) channel end
 to end, and a backend switch between the pure-jnp reference and the
-single-VMEM-pass Pallas kernel (``FLConfig.backend`` or the legacy
-``use_kernels=True``).  With ``FLConfig.scan=True`` the whole training
-run is one ``jax.lax.scan`` (small-D workloads); otherwise a Python loop
-drives the same jitted step so metrics can be evaluated per round.
+single-VMEM-pass Pallas kernel (``FLConfig.backend="pallas"``; the legacy
+``use_kernels=True`` is deprecated).  Scenarios are pluggable:
+``FLConfig.channel_model`` takes any ``repro.core.channel.ChannelModel``
+(iid / time-correlated / heterogeneous / imperfect-CSI) and
+``FLConfig.policy`` any ``repro.core.selection.RoundPolicy`` — by
+registry name or instance.  With ``FLConfig.scan=True`` the whole
+training run is one ``jax.lax.scan`` (small-D workloads); otherwise a
+Python loop drives the same jitted step so metrics can be evaluated per
+round.
 """
 
 from __future__ import annotations
@@ -69,7 +74,7 @@ class FLTrainer:
         engine = build_engine(self.task, self.X, self.Y, self.mask,
                               self.k_i, cfg, params)
         flat, _ = ravel_pytree(params)
-        state = init_state(flat, kround)
+        state = engine.init(flat, kround)
 
         history: Dict[str, list] = {"round": list(range(cfg.rounds)),
                                     "selected": [], "b": []}

@@ -18,24 +18,30 @@ def _default_interpret() -> bool:
 
 
 def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
-              *, L, sigma2, block_d: int = 1024,
+              *, h_est=None, L, sigma2, block_d: int = 1024,
               interpret: bool | None = None):
-    """Fused search + transmit single-pass round (see kernels.ota_round)."""
+    """Fused search + transmit single-pass round (see kernels.ota_round).
+
+    ``h`` is the true channel the MAC applies; the optional ``h_est`` is
+    the traced CSI estimate the search/transmit inversion uses
+    (imperfect-CSI scenarios; None = perfect CSI).
+    """
     if interpret is None:
         interpret = _default_interpret()
     return _round.ota_round(
-        w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
+        w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer, h_est=h_est,
         L=float(L), sigma2=float(sigma2), block_d=block_d,
         interpret=interpret)
 
 
 def ota_aggregate(w, h, beta, b, noise, k_i, p_max,
-                  block_d: int = 1024, interpret: bool | None = None):
+                  block_d: int = 1024, interpret: bool | None = None,
+                  h_est=None):
     """Fused OTA transmit/aggregate/post-process (see kernels.ota_transmit)."""
     if interpret is None:
         interpret = _default_interpret()
     return _ota.ota_transmit_aggregate(
-        w, h, beta, b, noise, k_i, p_max,
+        w, h, beta, b, noise, k_i, p_max, h_est=h_est,
         block_d=block_d, interpret=interpret)
 
 

@@ -51,12 +51,13 @@ _EPS = 1e-12
 _TOL = 1e-6  # boundary tolerance: candidate k is feasible under b_k^max
 
 
-def _kernel(w_ref, h_ref, wabs_ref, eta_ref, z_ref,
+def _kernel(w_ref, h_ref, hest_ref, wabs_ref, eta_ref, z_ref,
             keff_ref, ki_ref, pmax_ref, numer_ref,
             what_ref, b_ref, denk_ref, deni_ref, sel_ref,
             *, L: float, sigma2: float, U: int):
     w = w_ref[...]            # (U, blk)
-    h = h_ref[...]            # (U, blk) dense | (U, 1) rank-1
+    h = h_ref[...]            # (U, blk) dense | (U, 1) rank-1 — TRUE gains
+    h_est = hest_ref[...]     # same shapes — CSI estimate (== h if perfect)
     w_abs = wabs_ref[...]     # (1, blk)
     eta = eta_ref[...]        # (1, blk)
     z = z_ref[...]            # (1, blk)
@@ -68,7 +69,8 @@ def _kernel(w_ref, h_ref, wabs_ref, eta_ref, z_ref,
     sqrt_p = jnp.sqrt(p_max)
 
     # ---- Theorem-4 line search, eqs. (43)-(44): candidates + U-point argmin
-    cand = jnp.abs(sqrt_p * h / (k_eff * (w_abs + eta)))         # (U, blk)
+    # The PS searches on what it can observe: the CSI estimate.
+    cand = jnp.abs(sqrt_p * h_est / (k_eff * (w_abs + eta)))     # (U, blk)
     best_r = jnp.full(w_abs.shape, jnp.inf, cand.dtype)          # (1, blk)
     best_b = jnp.zeros(w_abs.shape, cand.dtype)
     best_beta = jnp.zeros(cand.shape, cand.dtype)
@@ -84,7 +86,8 @@ def _kernel(w_ref, h_ref, wabs_ref, eta_ref, z_ref,
         best_beta = jnp.where(take, beta_k, best_beta)
 
     # ---- transmit + superposition + post-process, eqs. (6)-(9) + Alg.1 l.5
-    amp = jnp.abs(k_eff * best_b * w / h)
+    # Workers invert their channel ESTIMATE; the MAC applies the true h.
+    amp = jnp.abs(k_eff * best_b * w / h_est)
     tx = best_beta * jnp.sign(w) * jnp.minimum(amp, sqrt_p)
     y = jnp.sum(tx * h, axis=0, keepdims=True) + z               # (1, blk)
     den_keff = jnp.sum(k_eff * best_beta, axis=0, keepdims=True) * best_b
@@ -99,14 +102,15 @@ def _kernel(w_ref, h_ref, wabs_ref, eta_ref, z_ref,
 @functools.partial(jax.jit, static_argnames=(
     "L", "sigma2", "block_d", "interpret"))
 def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
-              *, L: float, sigma2: float, block_d: int = 1024,
+              *, h_est=None, L: float, sigma2: float, block_d: int = 1024,
               interpret: bool = True):
     """Fused Theorem-4 search + OTA transmit/aggregate, one VMEM pass.
 
     Args:
       w:      (U, D) local parameter vectors.
-      h:      (U, D) channel gains, or (U, 1) / (U,) for the rank-1
-              scalar-per-worker fast path (one coherent gain per worker).
+      h:      (U, D) TRUE channel gains the MAC applies, or (U, 1) / (U,)
+              for the rank-1 scalar-per-worker fast path (one coherent
+              gain per worker).
       w_abs:  (D,) |w_{t-1}| at the PS.
       eta:    scalar or (D,) Assumption-4 slack (traced; per-entry OK).
       noise:  (D,) AWGN realization z_t.
@@ -116,6 +120,11 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
       p_max:  (U,) power budgets.
       numer:  scalar case constant C of eqs. 35-37 (traced: it depends on
               Delta_{t-1}).
+      h_est:  optional CSI *estimate* (same shape conventions as ``h``):
+              the Theorem-4 search and the workers' transmit inversion use
+              the estimate while the superposition applies the true ``h``
+              (imperfect-CSI scenarios, traced per round).  None =
+              perfect CSI.
       L, sigma2: static learning constants.
 
     Returns (w_hat, b, den_keff, den_ki, sel), each (D,):
@@ -130,7 +139,11 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
     h = jnp.asarray(h, dt)
     if h.ndim == 1:
         h = h[:, None]
+    h_est = h if h_est is None else jnp.asarray(h_est, dt)
+    if h_est.ndim == 1:
+        h_est = h_est[:, None]
     rank1 = h.shape[1] == 1
+    rank1_est = h_est.shape[1] == 1
     eta = jnp.broadcast_to(jnp.asarray(eta, dt), (D,))
     pad = (-D) % block_d
     if pad:
@@ -140,11 +153,15 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
         noise = jnp.pad(noise, (0, pad))
         if not rank1:
             h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
+        if not rank1_est:
+            h_est = jnp.pad(h_est, ((0, 0), (0, pad)), constant_values=1.0)
     Dp = D + pad
     grid = (Dp // block_d,)
 
-    h_spec = (pl.BlockSpec((U, 1), lambda i: (0, 0)) if rank1
-              else pl.BlockSpec((U, block_d), lambda i: (0, i)))
+    def _uspec(is_rank1):
+        return (pl.BlockSpec((U, 1), lambda i: (0, 0)) if is_rank1
+                else pl.BlockSpec((U, block_d), lambda i: (0, i)))
+
     row = pl.BlockSpec((1, block_d), lambda i: (0, i))
     col = pl.BlockSpec((U, 1), lambda i: (0, 0))
     one = pl.BlockSpec((1, 1), lambda i: (0, 0))
@@ -155,7 +172,8 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
         grid=grid,
         in_specs=[
             pl.BlockSpec((U, block_d), lambda i: (0, i)),   # w
-            h_spec,                                         # h
+            _uspec(rank1),                                  # h (true)
+            _uspec(rank1_est),                              # h_est
             row,                                            # w_abs
             row,                                            # eta
             row,                                            # z
@@ -167,7 +185,7 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
         out_specs=[row, row, row, row, row],
         out_shape=[jax.ShapeDtypeStruct((1, Dp), dt)] * 5,
         interpret=interpret,
-    )(w.astype(dt), h, w_abs.astype(dt)[None, :], eta[None, :],
+    )(w.astype(dt), h, h_est, w_abs.astype(dt)[None, :], eta[None, :],
       noise.astype(dt)[None, :], jnp.asarray(k_eff, dt)[:, None],
       jnp.asarray(k_i, dt)[:, None], jnp.asarray(p_max, dt)[:, None],
       jnp.asarray(numer, dt).reshape(1, 1))

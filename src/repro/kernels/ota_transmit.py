@@ -29,16 +29,19 @@ from jax.experimental import pallas as pl
 _EPS = 1e-12
 
 
-def _kernel(w_ref, h_ref, beta_ref, b_ref, z_ref, ki_ref, pmax_ref, out_ref):
+def _kernel(w_ref, h_ref, hest_ref, beta_ref, b_ref, z_ref, ki_ref,
+            pmax_ref, out_ref):
     w = w_ref[...]          # (U, blk)
-    h = h_ref[...]          # (U, blk) | (U, 1) rank-1
+    h = h_ref[...]          # (U, blk) | (U, 1) rank-1 — TRUE gains
+    h_est = hest_ref[...]   # same shapes — CSI estimate (== h if perfect)
     beta = beta_ref[...]    # (U, blk) | (U, 1) rank-1
     b = b_ref[...]          # (1, blk)
     z = z_ref[...]          # (1, blk)
     k_i = ki_ref[...]       # (U, 1)
     p_max = pmax_ref[...]   # (U, 1)
 
-    amp = jnp.abs(k_i * b * w / h)
+    # Workers invert their channel ESTIMATE; the MAC applies the true h.
+    amp = jnp.abs(k_i * b * w / h_est)
     tx = beta * jnp.sign(w) * jnp.minimum(amp, jnp.sqrt(p_max))
     y = jnp.sum(tx * h, axis=0, keepdims=True) + z            # (1, blk)
     den = jnp.sum(k_i * beta, axis=0, keepdims=True) * b      # (1, blk)
@@ -48,7 +51,8 @@ def _kernel(w_ref, h_ref, beta_ref, b_ref, z_ref, ki_ref, pmax_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
-                           *, block_d: int = 1024, interpret: bool = True):
+                           *, h_est=None, block_d: int = 1024,
+                           interpret: bool = True):
     """Fused OTA aggregation round.
 
     Args:
@@ -56,8 +60,12 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
       h, beta:    (U, D) float arrays, or (U, 1) / (U,) for the rank-1
                   fast path (scalar-per-worker gain / selection — each
                   read once per worker instead of once per entry).
+                  ``h`` is the TRUE gain the MAC applies.
       b, noise:   (D,) float arrays.
       k_i, p_max: (U,) float arrays.
+      h_est:      optional CSI estimate (same shape conventions as ``h``)
+                  used by the workers' transmit-side channel inversion;
+                  None = perfect CSI (h_est = h).
       block_d:    lane tile (multiple of 128 on real TPU).
       interpret:  run the Pallas interpreter (CPU validation mode).
 
@@ -69,15 +77,21 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
     beta = jnp.asarray(beta)
     if h.ndim == 1:
         h = h[:, None]
+    h_est = h if h_est is None else jnp.asarray(h_est)
+    if h_est.ndim == 1:
+        h_est = h_est[:, None]
     if beta.ndim == 1:
         beta = beta[:, None]
     h_rank1 = h.shape[1] == 1
+    hest_rank1 = h_est.shape[1] == 1
     beta_rank1 = beta.shape[1] == 1
     pad = (-D) % block_d
     if pad:
         w = jnp.pad(w, ((0, 0), (0, pad)))
         if not h_rank1:
             h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
+        if not hest_rank1:
+            h_est = jnp.pad(h_est, ((0, 0), (0, pad)), constant_values=1.0)
         if not beta_rank1:
             beta = jnp.pad(beta, ((0, 0), (0, pad)))
         b = jnp.pad(b, (0, pad), constant_values=1.0)
@@ -94,7 +108,8 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
         grid=grid,
         in_specs=[
             pl.BlockSpec((U, block_d), lambda i: (0, i)),   # w
-            _uspec(h_rank1),                                # h
+            _uspec(h_rank1),                                # h (true)
+            _uspec(hest_rank1),                             # h_est
             _uspec(beta_rank1),                             # beta
             pl.BlockSpec((1, block_d), lambda i: (0, i)),   # b
             pl.BlockSpec((1, block_d), lambda i: (0, i)),   # z
@@ -104,7 +119,7 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Dp), dt),
         interpret=interpret,
-    )(w.astype(dt), h.astype(dt), beta.astype(dt),
+    )(w.astype(dt), h.astype(dt), h_est.astype(dt), beta.astype(dt),
       b.astype(dt)[None, :], noise.astype(dt)[None, :],
       jnp.asarray(k_i, dt)[:, None], jnp.asarray(p_max, dt)[:, None])
     return out[0, :D]

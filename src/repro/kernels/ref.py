@@ -9,11 +9,18 @@ _EPS = 1e-12
 _TOL = 1e-6
 
 
-def ota_transmit_aggregate_ref(w, h, beta, b, noise, k_i, p_max):
-    """Oracle for kernels.ota_transmit — composed from repro.core pieces."""
+def ota_transmit_aggregate_ref(w, h, beta, b, noise, k_i, p_max,
+                               h_est=None):
+    """Oracle for kernels.ota_transmit — composed from repro.core pieces.
+
+    ``h`` is the true gain the MAC applies; ``h_est`` (default: h) is the
+    CSI estimate the transmit-side channel inversion uses.
+    """
+    if h_est is None:
+        h_est = h
     k_col = jnp.asarray(k_i)[:, None]
     p_col = jnp.asarray(p_max)[:, None]
-    amp = jnp.abs(k_col * b[None, :] * w / h)
+    amp = jnp.abs(k_col * b[None, :] * w / h_est)
     tx = beta * jnp.sign(w) * jnp.minimum(amp, jnp.sqrt(p_col))
     y = jnp.sum(tx * h, axis=0) + noise
     den = jnp.sum(k_col * beta, axis=0) * b
@@ -44,21 +51,31 @@ def inflota_search_ref(h, w_abs, k_i, p_max, *, eta, numer, L, sigma2):
 
 
 def ota_round_ref(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
-                  *, L, sigma2):
+                  *, h_est=None, L, sigma2):
     """Oracle for kernels.ota_round — search + transmit + the per-entry
-    reductions, composed from the two single-kernel oracles."""
+    reductions, composed from the two single-kernel oracles.  The search
+    and the transmit inversion use ``h_est`` (default: the true ``h``);
+    the superposition applies ``h``."""
     h = jnp.asarray(h)
     if h.ndim == 1:
         h = h[:, None]
     D = w_abs.shape[0]
     h = jnp.broadcast_to(h, (h.shape[0], D))
+    if h_est is None:
+        h_est = h
+    else:
+        h_est = jnp.asarray(h_est)
+        if h_est.ndim == 1:
+            h_est = h_est[:, None]
+        h_est = jnp.broadcast_to(h_est, h.shape)
     # inflota_search_ref's eta enters only as (w_abs + eta); fold a
     # per-entry eta into the statistic so the scalar-eta oracle applies
     w_eff = w_abs + jnp.broadcast_to(jnp.asarray(eta), (D,))
     best_b, best_beta, _ = inflota_search_ref(
-        h, w_eff, k_eff, p_max, eta=0.0, numer=numer, L=L, sigma2=sigma2)
+        h_est, w_eff, k_eff, p_max, eta=0.0, numer=numer, L=L,
+        sigma2=sigma2)
     what = ota_transmit_aggregate_ref(w, h, best_beta, best_b, noise,
-                                      k_eff, p_max)
+                                      k_eff, p_max, h_est=h_est)
     den_keff = jnp.sum(jnp.asarray(k_eff, h.dtype)[:, None] * best_beta,
                        axis=0) * best_b
     den_ki = jnp.sum(jnp.asarray(k_i, h.dtype)[:, None] * best_beta, axis=0)

@@ -102,7 +102,7 @@ def make_train_step(model: Model, mesh, plan: MeshPlan,
         return loss, aux, grads
 
     # ---------------------------------------------------------- vmap path
-    def step_vmap(params, opt_state, batch, key, step):
+    def step_vmap(params, opt_state, batch, key, step, channel_carry):
         wspec = P(waxes if len(waxes) > 1 else waxes[0])
 
         def reshape_w(x):
@@ -116,7 +116,8 @@ def make_train_step(model: Model, mesh, plan: MeshPlan,
                 lambda b: grads_and_loss(params, b))(batch_w)
         if ota_cfg is not None:
             grads, stats = ota_aggregate_stacked(
-                grads_w, key=key, t=step, cfg=ota_cfg, worker_axes=waxes)
+                grads_w, key=key, t=step, cfg=ota_cfg, worker_axes=waxes,
+                channel_carry=channel_carry)
         else:
             grads = fedavg_stacked(grads_w)
             stats = {}
@@ -125,11 +126,12 @@ def make_train_step(model: Model, mesh, plan: MeshPlan,
         return loss, aux, grads, stats
 
     # ------------------------------------------------------ shard_map path
-    def worker_fn(params, batch, key, step):
+    def worker_fn(params, batch, key, step, channel_carry):
         loss, aux, grads = grads_and_loss(params, batch)
         if ota_cfg is not None:
             grads, stats = ota_aggregate_tree(
-                grads, key=key, t=step, cfg=ota_cfg, axis_names=waxes)
+                grads, key=key, t=step, cfg=ota_cfg, axis_names=waxes,
+                channel_carry=channel_carry)
         else:
             grads = fedavg_tree(grads, axis_names=waxes)
             stats = {}
@@ -138,25 +140,34 @@ def make_train_step(model: Model, mesh, plan: MeshPlan,
             aux = {k: jax.lax.pmean(v, tuple(waxes)) for k, v in aux.items()}
         return loss, aux, grads, stats
 
-    def step_shmap(params, opt_state, batch, key, step):
+    def step_shmap(params, opt_state, batch, key, step, channel_carry):
         bspec = jax.tree.map(
             lambda _: P(waxes if len(waxes) > 1 else waxes[0]), batch)
         fn = jax.shard_map(
             worker_fn, mesh=mesh,
-            in_specs=(P(), bspec, P(), P()),
+            in_specs=(P(), bspec, P(), P(), P()),
             out_specs=(P(), P(), P(), P()),
             axis_names=set(waxes))
-        return fn(params, batch, key, step)
+        return fn(params, batch, key, step, channel_carry)
 
-    def train_step(params, opt_state, batch, key, step):
+    def train_step(params, opt_state, batch, key, step, channel_carry=None):
+        """One OTA-FL training step.
+
+        ``channel_carry`` threads a stateful ChannelModel's cross-round
+        state (None on the first step): the new carry comes back in
+        ``metrics["channel_carry"]`` — pop it and pass it to the next
+        call (``launch/train.py`` does), or stateful fading models
+        degenerate to iid re-initialization every step.
+        """
         if not waxes:
-            loss, aux, grads, stats = worker_fn(params, batch, key, step)
+            loss, aux, grads, stats = worker_fn(params, batch, key, step,
+                                                channel_carry)
         elif dist_mode == "vmap":
             loss, aux, grads, stats = step_vmap(params, opt_state, batch,
-                                                key, step)
+                                                key, step, channel_carry)
         else:
             loss, aux, grads, stats = step_shmap(params, opt_state, batch,
-                                                 key, step)
+                                                 key, step, channel_carry)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = optimizers.apply_updates(params, updates)
         metrics = {"loss": loss, **aux, **stats}

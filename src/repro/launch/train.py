@@ -90,6 +90,7 @@ def main() -> None:
         stream = synthetic.token_stream(args.batch, args.seq,
                                         cfg.vocab_size, seed=args.seed)
         jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        carry = None   # stateful ChannelModel state, threaded step-to-step
         t0 = time.time()
         for t in range(start, args.steps):
             np_batch = next(stream)
@@ -103,7 +104,12 @@ def main() -> None:
                     size=(args.batch, cfg.prefix_tokens, cfg.d_model)) * 0.1,
                     jnp.float32)
             params, opt_state, m = jitted(params, opt_state, batch, key,
-                                          jnp.int32(t))
+                                          jnp.int32(t), carry)
+            new_carry = m.pop("channel_carry", None)
+            if new_carry is not None and jax.tree.leaves(new_carry):
+                # stateful fading models: thread the state (the structure
+                # change None -> carry retraces once, on step 2 only)
+                carry = new_carry
             if t == start:
                 print(f"compile+first step {time.time()-t0:.1f}s")
             loss = float(m["loss"])

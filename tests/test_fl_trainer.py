@@ -21,13 +21,13 @@ def _workers(U=10, k_bar=25, seed=0):
             (x[-256:], y[-256:]))
 
 
-def _run(policy, rounds=120, sigma2=1e-4, seed=0, use_kernels=False):
+def _run(policy, rounds=120, sigma2=1e-4, seed=0, backend="jnp"):
     workers, test = _workers(seed=seed)
     cfg = FLConfig(rounds=rounds, lr=0.1, policy=policy,
                    case=Case.GD_CONVEX,
                    channel=ChannelConfig(sigma2=sigma2, p_max=10.0),
                    constants=LearningConstants(sigma2=sigma2),
-                   use_kernels=use_kernels, seed=seed)
+                   backend=backend, seed=seed)
     return FLTrainer(linreg_model(), workers, cfg).run(
         key=jax.random.PRNGKey(seed), eval_data=test)
 
@@ -75,8 +75,18 @@ def test_kernel_path_matches_jnp_path():
     route is entry-wise (footnote 4 allows either), so trajectories agree
     to ~1%, not bitwise; test_kernels.py checks bitwise vs the oracle."""
     a = _run("inflota", rounds=15)
-    b = _run("inflota", rounds=15, use_kernels=True)
+    b = _run("inflota", rounds=15, backend="pallas")
     np.testing.assert_allclose(a["mse"], b["mse"], rtol=2e-2)
+
+
+def test_use_kernels_deprecated_but_equivalent():
+    """Legacy ``use_kernels=True`` warns and resolves to Backend.PALLAS."""
+    from repro.fl.trainer import Backend
+    cfg = FLConfig(use_kernels=True)
+    with pytest.warns(DeprecationWarning, match="use_kernels"):
+        assert cfg.resolved_backend() is Backend.PALLAS
+    cfg = FLConfig(backend="pallas")
+    assert cfg.resolved_backend() is Backend.PALLAS
 
 
 def test_sgd_minibatch_runs_and_learns():

@@ -116,6 +116,28 @@ def test_fused_round_ref_oracle():
                                    rtol=2e-6, atol=2e-6)
 
 
+def test_fused_round_imperfect_csi_matches_oracle():
+    """h_est != h: search + transmit inversion on the estimate, true h on
+    the MAC — kernel vs composed jnp oracle, rank-1 and dense estimates."""
+    rng = np.random.default_rng(7)
+    U, D = 6, 450
+    args = _round_inputs(rng, U, D)
+    kw = dict(L=1.5, sigma2=1e-4)
+    for h_est in (
+            jnp.asarray(rng.exponential(size=(U, 1)) + 1e-2, jnp.float32),
+            jnp.asarray(rng.exponential(size=(U, D)) + 1e-2, jnp.float32)):
+        out = ops.ota_round(*args, jnp.float32(3.0), h_est=h_est,
+                            block_d=128, interpret=True, **kw)
+        want = ref.ota_round_ref(*args, 3.0, h_est=h_est, **kw)
+        for a, b in zip(out, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-6, atol=2e-6)
+        # and the decisions really differ from the perfect-CSI ones
+        perfect = ops.ota_round(*args, jnp.float32(3.0), block_d=128,
+                                interpret=True, **kw)
+        assert not np.allclose(np.asarray(out[1]), np.asarray(perfect[1]))
+
+
 def test_search_kernel_rank1_equals_dense():
     rng = np.random.default_rng(4)
     U, D = 11, 640
