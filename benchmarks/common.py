@@ -11,7 +11,7 @@ import numpy as np
 from repro.core.channel import ChannelConfig
 from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case
-from repro.data import partition, synthetic
+from repro.data import tasks as tasks_lib
 from repro.fl.models import linreg_model, mlp_model
 from repro.fl.trainer import FLConfig, FLTrainer
 
@@ -22,20 +22,16 @@ PAPER_CHANNEL = ChannelConfig(sigma2=1e-4, p_max=10.0)
 
 
 def linreg_workers(U: int = 20, k_bar: int = 30, seed: int = 0):
-    counts = partition.sample_counts(U, k_bar, seed=seed)
-    x, y = synthetic.linreg(int(np.sum(counts)) + 512, seed=seed)
-    workers = partition.partition(x, y, counts, seed=seed)
-    test = (x[-512:], y[-512:])
+    _, workers, test = tasks_lib.build_task_data(
+        "linreg", U=U, k_bar=k_bar, data_seed=seed)
     return workers, test
 
 
 def mlp_workers(U: int = 20, k_bar: int = 40, seed: int = 0,
                 n_test: int = 2000):
-    counts = partition.sample_counts(U, k_bar, seed=seed)
-    x, y = synthetic.mnist_like(int(np.sum(counts)) + n_test, seed=seed)
-    workers = partition.partition(x[:-n_test], y[:-n_test], counts,
-                                  seed=seed)
-    return workers, (x[-n_test:], y[-n_test:])
+    _, workers, test = tasks_lib.build_task_data(
+        "mlp", U=U, k_bar=k_bar, data_seed=seed, n_test=n_test)
+    return workers, test
 
 
 def run_policy(task, workers, test, policy: str, rounds: int,
@@ -45,7 +41,13 @@ def run_policy(task, workers, test, policy: str, rounds: int,
                backend: str = "auto", scan: bool = False,
                channel_model=None) -> Dict:
     """One FLTrainer run; ``channel_model`` is a registry name or a
-    ``repro.core.channel.ChannelModel`` instance (None = paper iid)."""
+    ``repro.core.channel.ChannelModel`` instance (None = paper iid).
+
+    ``wall_s`` is honest: the final state is ``block_until_ready``-forced
+    before the clock stops.  With ``scan=True`` the trainer additionally
+    reports ``compile_s`` (first-call trace+compile overhead) separately,
+    so steady-state throughput is ``wall_s - compile_s``.
+    """
     chanc = PAPER_CHANNEL if sigma2 is None else ChannelConfig(
         sigma2=sigma2, p_max=PAPER_CHANNEL.p_max)
     cfg = FLConfig(rounds=rounds, lr=lr, policy=policy, case=case,
@@ -57,8 +59,35 @@ def run_policy(task, workers, test, policy: str, rounds: int,
     tr = FLTrainer(task, workers, cfg)
     t0 = time.time()
     hist = tr.run(key=jax.random.PRNGKey(seed), eval_data=test)
+    jax.block_until_ready(jax.tree.leaves(hist["params"]))
     hist["wall_s"] = time.time() - t0
     return hist
+
+
+def seed_spread_rows(base: dict, metric: str, label: str, name_fmt: str,
+                     seeds: int, digits: int = 5) -> List[dict]:
+    """Per-policy mean/std of ``metric`` over an N-seed vectorized sweep.
+
+    One ``repro.sweep`` cohort per policy replaces N sequential trainer
+    runs; emits ``{label}_mean_{N}seeds`` / ``{label}_std_{N}seeds`` rows
+    named by ``name_fmt.format(policy=...)``.
+    """
+    from repro.sweep import SweepSpec, run_spec
+    spec = SweepSpec(axes={"policy": POLICIES,
+                           "seed": tuple(range(seeds))}, base=base)
+    results = run_spec(spec)
+    rows = []
+    for policy in POLICIES:
+        vals = [r["metrics"][metric] for r in results
+                if r["cell"]["policy"] == policy]
+        name = name_fmt.format(policy=policy)
+        rows += [
+            {"name": name, "metric": f"{label}_mean_{seeds}seeds",
+             "value": round(float(np.mean(vals)), digits)},
+            {"name": name, "metric": f"{label}_std_{seeds}seeds",
+             "value": round(float(np.std(vals)), digits)},
+        ]
+    return rows
 
 
 def emit(rows: List[dict]) -> None:

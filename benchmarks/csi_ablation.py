@@ -5,12 +5,11 @@ The paper assumes the PS knows h_{i,t} perfectly.  Here INFLOTA makes its
 inversion — from a noisy estimate h_est = |h·(1 + eps·n)|, n ~ N(0,1),
 while the physical MAC applies the true h.
 
-Since the scenario API redesign this is a pure config + sweep driver: the
-``ImperfectCSI`` wrapper in ``repro.core.channel`` is a first-class
-engine scenario, so each point is one fused ``FLConfig(scan=True)`` run
-(inheriting the single-jit round engine instead of the old hand-rolled
-per-round Python loop), and eps enters as ``channel_model=
-ImperfectCSI(ExpIID(u=U), eps=eps)``.
+Since the sweep-engine redesign this is one declarative
+``repro.sweep.SweepSpec`` per policy: eps enters as a static ``channel``
+axis of ``ImperfectCSI(ExpIID(u=U), eps=eps)`` instances (eps changes the
+compiled estimator structure at eps=0, so each point is its own cohort),
+and every cell is the fused ``scan=True`` engine path.
 
 Findings tracked as claim rows (the ordering/finiteness ones are also
 asserted in tests/test_scenarios.py at engine level, not by eyeball):
@@ -29,8 +28,8 @@ import numpy as np
 
 from benchmarks import common
 from repro.core.channel import ExpIID, ImperfectCSI
-from repro.core.objectives import Case
-from repro.fl.models import linreg_model
+from repro.sweep import SweepSpec, run_spec
+from repro.sweep.grid import result_by
 
 EPS_GRID = (0.0, 0.05, 0.1, 0.3, 1.0)
 # U=10: raw INFLOTA's CSI sensitivity grows with U (more clipped /
@@ -39,25 +38,27 @@ EPS_GRID = (0.0, 0.05, 0.1, 0.3, 1.0)
 U = 10
 
 
-def _final_mse(policy: str, eps: float, rounds: int, seed: int) -> float:
-    task = linreg_model()
-    workers, test = common.linreg_workers(U=U, seed=seed)
-    model = ImperfectCSI(ExpIID(u=U), eps=eps)
-    h = common.run_policy(task, workers, test, policy, rounds, lr=0.1,
-                          case=Case.GD_CONVEX, seed=seed,
-                          channel_model=model, scan=True)
-    return float(np.mean(h["mse"][-10:]))
+def _csi_models(eps_grid):
+    return tuple(ImperfectCSI(ExpIID(u=U), eps=eps) for eps in eps_grid)
+
+
+def _mse_by_eps(policy: str, eps_grid, rounds: int, seed: int):
+    spec = SweepSpec(
+        axes={"channel": _csi_models(eps_grid)},
+        base={"U": U, "rounds": rounds, "lr": 0.1, "policy": policy,
+              "data_seed": seed, "seed": seed})
+    results = run_spec(spec)
+    return {eps: float(result_by(results, channel=m)["metrics"]["mse_tail"])
+            for eps, m in zip(eps_grid, _csi_models(eps_grid))}
 
 
 def run(rounds: int = 120, seed: int = 0):
     rows = []
-    inflota = {}
+    inflota = _mse_by_eps("inflota", EPS_GRID, rounds, seed)
     for eps in EPS_GRID:
-        inflota[eps] = _final_mse("inflota", eps, rounds, seed)
         rows.append({"name": f"csi_eps{eps:g}_inflota", "metric": "mse",
                      "value": round(inflota[eps], 5)})
-    random_mse = {eps: _final_mse("random", eps, rounds, seed)
-                  for eps in (0.0, 0.1)}
+    random_mse = _mse_by_eps("random", (0.0, 0.1), rounds, seed)
     for eps, m in random_mse.items():
         rows.append({"name": f"csi_eps{eps:g}_random", "metric": "mse",
                      "value": round(m, 5)})

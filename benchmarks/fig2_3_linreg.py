@@ -4,9 +4,16 @@ Fig. 2: the fitted line y = w2*(w1*x + b1) should approach y = -2x + 1.
 Fig. 3: MSE vs iteration — all three schemes converge; Perfect <= INFLOTA
 < Random in steady-state MSE (channel noise moves the steady state, not
 convergence itself — Lemma 1 / Prop. 1).
+
+``--seeds N`` (N > 1) adds multi-seed error bars: one
+``repro.sweep.SweepSpec`` with a seed axis per policy, executed as one
+vmapped cohort per policy instead of N sequential trainer runs, reporting
+mean/std of the steady-state MSE across seeds.
 """
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -15,7 +22,7 @@ from repro.core.objectives import Case
 from repro.fl.models import linreg_model
 
 
-def run(rounds: int = 150, seed: int = 0):
+def run(rounds: int = 150, seed: int = 0, seeds: int = 1):
     task = linreg_model()
     workers, test = common.linreg_workers(seed=seed)
     rows, curves = [], {}
@@ -42,8 +49,25 @@ def run(rounds: int = 150, seed: int = 0):
     rows.append({"name": "fig3_claim", "metric": "perfect<=inflota<random",
                  "value": int(final["perfect"] <= final["inflota"] * 1.05
                               and final["inflota"] < final["random"])})
+    if seeds > 1:
+        rows += run_multi_seed(rounds=rounds, data_seed=seed, seeds=seeds)
     return rows
 
 
+def run_multi_seed(rounds: int, data_seed: int, seeds: int):
+    """Seed-axis sweep: steady-state MSE spread across training seeds."""
+    return common.seed_spread_rows(
+        base={"rounds": rounds, "lr": 0.1, "data_seed": data_seed},
+        metric="mse_tail", label="mse", name_fmt="fig3_linreg_{policy}",
+        seeds=seeds)
+
+
 if __name__ == "__main__":
-    common.emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="N>1 adds an N-seed vectorized sweep with "
+                         "mean/std rows per policy")
+    args = ap.parse_args()
+    common.emit(run(rounds=args.rounds, seed=args.seed, seeds=args.seeds))

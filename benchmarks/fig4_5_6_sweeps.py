@@ -5,52 +5,57 @@ Fig. 5: MSE decreases then saturates as samples-per-worker K̄ grows.
 Fig. 6: MSE grows with noise variance for the realistic schemes; the
         Perfect-aggregation baseline is flat.
 
+Each figure is one declarative ``repro.sweep.SweepSpec`` — the old
+hand-rolled Python loops over ``common.run_policy`` are gone.  The sweep
+engine partitions every grid into vmappable cohorts and runs each cohort
+as one jitted computation; Fig. 6 in particular collapses to one
+computation per policy (sigma^2 is a traced per-experiment operand).
+
 Beyond-paper scenario axis: ``--channel NAME`` reruns every sweep under a
 registered ``ChannelModel`` (``exp_iid`` | ``rayleigh`` | ``gauss_markov``
 | ``pathloss`` | ``exp_iid_csi``); the default (None) is the paper's iid
 Exp(1) ensemble.  Row names gain a ``[NAME]`` suffix so sweeps across
-scenarios stay distinguishable in one CSV.
+scenarios stay distinguishable in one CSV.  ``--store DIR`` makes rerun
+cells content-hashed cache hits.
 """
 
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
 from benchmarks import common
 from repro.core import channel as channel_lib
-from repro.core.objectives import Case
-from repro.data import partition, synthetic
-from repro.fl.models import linreg_model
+from repro.data import synthetic
+from repro.sweep import SweepSpec, SweepStore, run_spec
+from repro.sweep.grid import result_by
 
 
-def _final_mse(task, workers, test, policy, rounds, sigma2=None, seed=0,
-               channel=None):
-    h = common.run_policy(task, workers, test, policy, rounds, lr=0.1,
-                          case=Case.GD_CONVEX, sigma2=sigma2, seed=seed,
-                          channel_model=channel)
-    return float(np.mean(h["mse"][-10:]))
+def _mse(results, **match) -> float:
+    return result_by(results, **match)["metrics"]["mse_tail"]
 
 
-def run(rounds: int = 120, seed: int = 0, channel: str | None = None):
-    task = linreg_model()
+def run(rounds: int = 120, seed: int = 0, channel: str | None = None,
+        store: SweepStore | None = None):
     rows = []
     tag = f"[{channel}]" if channel else ""
+    base = {"rounds": rounds, "lr": 0.1, "channel": channel,
+            "data_seed": seed, "seed": seed}
 
     # ---- Fig. 4: vary U --------------------------------------------------
     # Scarce-data regime (K̄ = 4) so total data actually limits accuracy —
     # with the default K̄ = 30 every U is already at the 0.4² noise floor
     # and the paper's more-workers-more-data effect is invisible.  One
-    # fixed held-out test set across all U.
-    x_t, y_t = synthetic.linreg(512, seed=999)
-    test = (x_t, y_t)
+    # fixed held-out test set across all U (hence eval_data override, and
+    # no store: cached metrics would silently depend on the override).
+    test = synthetic.linreg(512, seed=999)
+    u_values = (5, 10, 20, 40)
+    spec4 = SweepSpec(axes={"U": u_values, "policy": common.POLICIES},
+                      base={**base, "k_bar": 4})
+    res4 = run_spec(spec4, eval_data=test)
     mse_u = {}
-    for U in (5, 10, 20, 40):
-        workers, _ = common.linreg_workers(U=U, k_bar=4, seed=seed)
+    for U in u_values:
         for policy in common.POLICIES:
-            m = _final_mse(task, workers, test, policy, rounds, seed=seed,
-                           channel=channel)
+            m = _mse(res4, U=U, policy=policy)
             mse_u.setdefault(policy, []).append(m)
             rows.append({"name": f"fig4_U{U}_{policy}{tag}",
                          "metric": "mse", "value": round(m, 5)})
@@ -61,12 +66,14 @@ def run(rounds: int = 120, seed: int = 0, channel: str | None = None):
                      "value": int(mse_u[policy][-1] <= mse_u[policy][0])})
 
     # ---- Fig. 5: vary K̄ --------------------------------------------------
+    k_values = (10, 20, 40, 80)
+    spec5 = SweepSpec(axes={"k_bar": k_values, "policy": common.POLICIES},
+                      base={**base, "U": 20})
+    res5 = run_spec(spec5, store=store)
     mse_k = {}
-    for k_bar in (10, 20, 40, 80):
-        workers, test = common.linreg_workers(U=20, k_bar=k_bar, seed=seed)
+    for k_bar in k_values:
         for policy in common.POLICIES:
-            m = _final_mse(task, workers, test, policy, rounds, seed=seed,
-                           channel=channel)
+            m = _mse(res5, k_bar=k_bar, policy=policy)
             mse_k.setdefault(policy, []).append(m)
             rows.append({"name": f"fig5_K{k_bar}_{policy}{tag}",
                          "metric": "mse", "value": round(m, 5)})
@@ -79,12 +86,16 @@ def run(rounds: int = 120, seed: int = 0, channel: str | None = None):
                      "value": int(mse_k[policy][-1] <= mse_k[policy][0])})
 
     # ---- Fig. 6: vary sigma^2 --------------------------------------------
-    workers, test = common.linreg_workers(U=20, seed=seed)
+    # sigma2 is a VECTOR axis: all four noise levels run inside one
+    # vmapped cohort per policy.
+    s_values = (1e-4, 1e-2, 1e-1, 1.0)
+    spec6 = SweepSpec(axes={"policy": common.POLICIES, "sigma2": s_values},
+                      base={**base, "U": 20, "k_bar": 30})
+    res6 = run_spec(spec6, store=store)
     mse_s = {}
-    for sigma2 in (1e-4, 1e-2, 1e-1, 1.0):
+    for sigma2 in s_values:
         for policy in common.POLICIES:
-            m = _final_mse(task, workers, test, policy, rounds,
-                           sigma2=sigma2, seed=seed, channel=channel)
+            m = _mse(res6, sigma2=sigma2, policy=policy)
             mse_s.setdefault(policy, []).append(m)
             rows.append({"name": f"fig6_s{sigma2:g}_{policy}{tag}",
                          "metric": "mse", "value": round(m, 5)})
@@ -106,6 +117,9 @@ if __name__ == "__main__":
                     choices=channel_lib.channel_names(),
                     help="run the sweeps under a registered ChannelModel "
                          "scenario (default: the paper's iid Exp(1))")
+    ap.add_argument("--store", default=None,
+                    help="sweep result store dir (reruns become cache hits)")
     args = ap.parse_args()
     common.emit(run(rounds=args.rounds, seed=args.seed,
-                    channel=args.channel))
+                    channel=args.channel,
+                    store=SweepStore(args.store) if args.store else None))

@@ -5,9 +5,15 @@
 MNIST is not available offline; the synthetic cluster dataset keeps every
 *comparative* claim testable (Perfect >= INFLOTA > Random accuracy;
 cross-entropy decreasing in t).
+
+``--seeds N`` (N > 1) adds a multi-seed accuracy spread via one
+``repro.sweep.SweepSpec`` (a vmapped seed cohort per policy) instead of N
+sequential trainer runs.
 """
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -16,7 +22,7 @@ from repro.core.objectives import Case
 from repro.fl.models import mlp_model
 
 
-def run(rounds: int = 120, seed: int = 0):
+def run(rounds: int = 120, seed: int = 0, seeds: int = 1):
     task = mlp_model()
     workers, test = common.mlp_workers(U=20, k_bar=40, seed=seed)
     rows, acc, ce = [], {}, {}
@@ -41,8 +47,27 @@ def run(rounds: int = 120, seed: int = 0):
                               and fa["inflota"] > fa["random"])})
     rows.append({"name": "fig7_claim", "metric": "ce decreases",
                  "value": int(fc["inflota"] < float(ce["inflota"][0]))})
+    if seeds > 1:
+        rows += run_multi_seed(rounds=rounds, data_seed=seed, seeds=seeds)
     return rows
 
 
+def run_multi_seed(rounds: int, data_seed: int, seeds: int):
+    """Seed-axis sweep: accuracy spread across training seeds."""
+    return common.seed_spread_rows(
+        base={"task": "mlp", "k_bar": 40, "rounds": rounds, "lr": 0.1,
+              "case": Case.GD_NONCONVEX, "k_b": 16,
+              "data_seed": data_seed},
+        metric="accuracy_tail", label="acc", name_fmt="fig8_mlp_{policy}",
+        seeds=seeds, digits=4)
+
+
 if __name__ == "__main__":
-    common.emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="N>1 adds an N-seed vectorized sweep with "
+                         "mean/std accuracy rows per policy")
+    args = ap.parse_args()
+    common.emit(run(rounds=args.rounds, seed=args.seed, seeds=args.seeds))

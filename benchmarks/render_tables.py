@@ -1,8 +1,16 @@
-"""Render EXPERIMENTS.md roofline tables from results/*.jsonl."""
+"""Render EXPERIMENTS.md tables.
+
+Two input kinds, auto-detected per path:
+  * roofline results: ``results/*.jsonl`` dry-run records;
+  * sweep stores: directories of content-hashed cell results written by
+    ``repro.sweep`` (``python -m repro.sweep --store DIR``) — rendered as
+    a tidy long-format markdown table (one row per cell x metric).
+"""
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -37,6 +45,25 @@ def render(path):
               f"| {'Y' if mem.get('fits_16gb') else 'n'} |")
 
 
+def render_sweep(store_dir, columns=("task", "policy", "channel", "U",
+                                     "k_bar", "sigma2", "seed")):
+    """Markdown long-format table from a ``repro.sweep`` store dir."""
+    from repro.sweep.store import SweepStore, long_rows
+    rows = long_rows(SweepStore(store_dir).results(), columns=columns)
+    print(f"\n### {store_dir} ({len(rows)} rows)")
+    cols = list(columns) + ["metric", "value"]
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        vals = [r.get(c) for c in cols]
+        print("| " + " | ".join(
+            fmt(v) if isinstance(v, float) and v >= 0 else str(v)
+            for v in vals) + " |")
+
+
 if __name__ == "__main__":
     for p in sys.argv[1:]:
-        render(p)
+        if os.path.isdir(p):
+            render_sweep(p)
+        else:
+            render(p)

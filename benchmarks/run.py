@@ -5,9 +5,11 @@ Prints ``name,metric,value`` CSV.  Sections:
   fig4_5_6 MSE sweeps over U, K̄, sigma^2              (paper Sec. VI-A)
   fig7_8   MLP cross-entropy + accuracy                (paper Sec. VI-B)
   kernels  OTA aggregate / INFLOTA search micro-scaling
+  sweep    loop-vs-vectorized sweep-engine throughput  (repro.sweep)
   roofline per-(arch × shape × mesh) dry-run terms      (§Roofline)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only X]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+       [--only X[,Y,...]]
 """
 
 from __future__ import annotations
@@ -18,7 +20,7 @@ import time
 
 from benchmarks import (common, csi_ablation, fig2_3_linreg,
                         fig4_5_6_sweeps, fig7_8_mlp, kernels_micro,
-                        roofline_table, theory_check)
+                        roofline_table, sweep_bench, theory_check)
 
 SECTIONS = {
     "fig2_3": lambda r: fig2_3_linreg.run(rounds=r),
@@ -27,8 +29,24 @@ SECTIONS = {
     "theory": lambda r: theory_check.run(rounds=min(r, 60)),
     "csi": lambda r: csi_ablation.run(rounds=max(r * 4 // 5, 20)),
     "kernels": lambda r: kernels_micro.run(),
+    "sweep": lambda r: sweep_bench.run(rounds=min(r, 60)),
     "roofline": lambda r: roofline_table.run(),
 }
+
+
+def parse_only(only: str | None, parser: argparse.ArgumentParser):
+    """``--only`` accepts a comma-separated section list, validated."""
+    if only is None:
+        return list(SECTIONS)
+    names = [s.strip() for s in only.split(",") if s.strip()]
+    if not names:
+        parser.error("--only got an empty section list")
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        parser.error(
+            f"unknown section(s) {', '.join(unknown)}; "
+            f"choose from: {', '.join(SECTIONS)}")
+    return names
 
 
 def main() -> None:
@@ -37,11 +55,13 @@ def main() -> None:
                     help="fewer FL rounds (CI-speed)")
     ap.add_argument("--full", action="store_true",
                     help="paper-length runs (500 rounds)")
-    ap.add_argument("--only", default=None, choices=list(SECTIONS))
+    ap.add_argument("--only", default=None, metavar="SECTION[,SECTION...]",
+                    help="run only these sections (comma-separated); "
+                         f"available: {', '.join(SECTIONS)}")
     args = ap.parse_args()
 
     rounds = 40 if args.quick else (500 if args.full else 150)
-    names = [args.only] if args.only else list(SECTIONS)
+    names = parse_only(args.only, ap)
     print("name,metric,value")
     t0 = time.time()
     ok = True

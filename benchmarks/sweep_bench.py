@@ -1,0 +1,111 @@
+"""Sweep-engine throughput: sequential loop vs vectorized cohorts.
+
+The ISSUE-3 acceptance grid: 8 seeds x 2 policies x 2 channels (linreg,
+``scan=True``), driven two ways over the SAME cells —
+
+  sequential:  one fresh ``FLTrainer`` per cell, exactly how the fig
+               benchmarks drove grids before the sweep engine (every run
+               re-traces + re-compiles + round-trips the host);
+  vectorized:  ``repro.sweep.run_spec`` — one jitted, vmapped, device-
+               resident computation per (policy x channel) cohort.
+
+Reports runs/sec for both, the speedup, and a bit-exactness count (every
+vectorized cell must match its sequential twin's final parameters
+bit-for-bit).  ``--json`` writes the committed ``BENCH_sweeps.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case
+from repro.data.tasks import build_task_data
+from repro.fl.trainer import FLConfig, FLTrainer
+from repro.sweep import SweepSpec, run_spec
+from repro.sweep.grid import cells
+
+SEEDS = 8
+POLICIES = ("inflota", "random")
+CHANNELS = (None, "gauss_markov")
+U, K_BAR = 20, 30
+
+
+def _spec(rounds: int) -> SweepSpec:
+    return SweepSpec(axes={"policy": POLICIES, "channel": CHANNELS,
+                           "seed": tuple(range(SEEDS))},
+                     base={"U": U, "k_bar": K_BAR, "rounds": rounds,
+                           "lr": 0.1, "backend": "jnp"},
+                     eval=False)
+
+
+def _sequential(rounds: int):
+    """One fresh FLTrainer per cell (the pre-sweep benchmark pattern)."""
+    task, workers, _ = build_task_data("linreg", U=U, k_bar=K_BAR,
+                                       data_seed=0)
+    flats = []
+    for cell in cells(_spec(rounds)):
+        cfg = FLConfig(rounds=rounds, lr=0.1, policy=cell["policy"],
+                       case=Case.GD_CONVEX,
+                       channel=ChannelConfig(sigma2=1e-4, p_max=10.0),
+                       channel_model=cell["channel"],
+                       constants=LearningConstants(sigma2=1e-4),
+                       backend="jnp", scan=True)
+        h = FLTrainer(task, workers, cfg).run(
+            key=jax.random.PRNGKey(cell["seed"]))
+        flats.append(np.asarray(ravel_pytree(h["params"])[0]))
+    return flats
+
+
+def run(rounds: int = 60, json_path: str | None = None):
+    spec = _spec(rounds)
+    n = len(cells(spec))
+
+    t0 = time.time()
+    seq_flats = _sequential(rounds)
+    t_seq = time.time() - t0
+
+    t0 = time.time()
+    results = run_spec(spec)
+    jax.block_until_ready([r["flat"] for r in results])
+    t_vec = time.time() - t0
+
+    exact = sum(int(np.array_equal(a, r["flat"]))
+                for a, r in zip(seq_flats, results))
+    seq_rps, vec_rps = n / t_seq, n / t_vec
+    rows = [
+        {"name": f"sweep_seq_runs_per_s_n{n}", "metric": "runs/s",
+         "value": round(seq_rps, 3)},
+        {"name": f"sweep_vec_runs_per_s_n{n}", "metric": "runs/s",
+         "value": round(vec_rps, 3)},
+        {"name": "sweep_speedup", "metric": "vec/seq",
+         "value": round(vec_rps / seq_rps, 2)},
+        {"name": "sweep_bitexact", "metric": f"cells=={n}",
+         "value": exact},
+    ]
+    if json_path:
+        doc = {"host": platform.node(), "backend": "cpu",
+               "grid": {"seeds": SEEDS, "policies": list(POLICIES),
+                        "channels": [c or "exp_iid" for c in CHANNELS],
+                        "rounds": rounds, "U": U, "k_bar": K_BAR},
+               "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    for r in run(rounds=args.rounds, json_path=args.json):
+        print(f"{r['name']},{r['metric']},{r['value']}")

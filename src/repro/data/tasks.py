@@ -1,0 +1,76 @@
+"""Named experiment tasks: (TaskModel, worker datasets, test set) builders.
+
+The paper's two Sec. VI workloads — the 1-neuron linear regression and the
+784-64-10 MLP — were previously assembled ad hoc inside
+``benchmarks/common.py``.  The sweep engine (``repro.sweep``) needs the
+same builders from library code (benchmarks must stay importable without
+``src`` layering violations), so they live here and ``benchmarks.common``
+delegates.
+
+A task builder is registered under a name and called as
+
+    build_task_data(name, U=20, k_bar=30, data_seed=0)
+      -> (TaskModel, workers, (x_test, y_test))
+
+where ``workers`` is the ``FLTrainer`` list of (x_i, y_i) per-worker
+datasets.  ``data_seed`` drives both the per-worker sample counts
+K_i ~ round(U[K̄-5, K̄+5]) and the dataset draw, exactly as the fig
+benchmarks always have.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.data import partition, synthetic
+from repro.fl.models import TaskModel, linreg_model, mlp_model
+
+TaskData = Tuple[TaskModel, List[Tuple[Any, Any]], Tuple[Any, Any]]
+
+_TASK_REGISTRY: Dict[str, Callable[..., TaskData]] = {}
+
+
+def register_task(name: str):
+    """Register a task-data builder under ``name``."""
+    def deco(fn):
+        _TASK_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def task_names() -> Tuple[str, ...]:
+    return tuple(sorted(_TASK_REGISTRY))
+
+
+def build_task_data(name: str, U: int = 20, k_bar: int = 30,
+                    data_seed: int = 0, **kwargs) -> TaskData:
+    try:
+        builder = _TASK_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown task {name!r}; registered: {task_names()}") from None
+    return builder(U=U, k_bar=k_bar, data_seed=data_seed, **kwargs)
+
+
+@register_task("linreg")
+def _linreg(U: int = 20, k_bar: int = 30, data_seed: int = 0,
+            n_test: int = 512) -> TaskData:
+    """Paper Sec. VI-A: y = -2x + 1 + 0.4n, U workers, K̄ ± 5 samples."""
+    counts = partition.sample_counts(U, k_bar, seed=data_seed)
+    x, y = synthetic.linreg(int(np.sum(counts)) + n_test, seed=data_seed)
+    workers = partition.partition(x, y, counts, seed=data_seed)
+    return linreg_model(), workers, (x[-n_test:], y[-n_test:])
+
+
+@register_task("mlp")
+def _mlp(U: int = 20, k_bar: int = 40, data_seed: int = 0,
+         n_test: int = 2000) -> TaskData:
+    """Paper Sec. VI-B: 784-64-10 MLP over the synthetic cluster dataset."""
+    counts = partition.sample_counts(U, k_bar, seed=data_seed)
+    x, y = synthetic.mnist_like(int(np.sum(counts)) + n_test,
+                                seed=data_seed)
+    workers = partition.partition(x[:-n_test], y[:-n_test], counts,
+                                  seed=data_seed)
+    return mlp_model(), workers, (x[-n_test:], y[-n_test:])

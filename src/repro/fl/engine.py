@@ -49,6 +49,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core import aggregation as agg
@@ -238,11 +239,16 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
     flat0, unravel = ravel_pytree(params0)
     D = flat0.shape[0]
     U = k_i.shape[0]
-    if cfg.k_b is not None:
+    if cfg.k_b is not None and not isinstance(mask, jax.core.Tracer):
         # padded no-replacement sampling cannot raise per worker inside the
         # traced step (the old per-worker path did); validate up front so a
-        # too-large minibatch fails loudly instead of drawing zero-padding
-        min_k = int(jnp.min(jnp.sum(mask, axis=1)))
+        # too-large minibatch fails loudly instead of drawing zero-padding.
+        # Skipped when ``mask`` is itself traced (the sweep engine vmaps
+        # whole runs over an experiment axis) — cohort builders validate
+        # against the concrete mask before batching.
+        # numpy, not jnp: under a jit/vmap trace (the sweep engine) jnp
+        # ops are staged even on concrete operands and can't concretize
+        min_k = int(np.min(np.sum(np.asarray(mask), axis=1)))
         if cfg.k_b > min_k:
             raise ValueError(
                 f"k_b={cfg.k_b} exceeds the smallest worker's sample "

@@ -22,6 +22,7 @@ round.
 
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -35,12 +36,73 @@ from repro.fl.engine import (Backend, Engine, FLConfig, RoundState,
                              build_engine, init_state)
 from repro.fl.models import TaskModel
 
-__all__ = ["Backend", "FLConfig", "FLTrainer"]
+__all__ = ["Backend", "FLConfig", "FLTrainer", "pad_workers",
+           "scan_experiment"]
 
 
 def _pad_axis0(a: jnp.ndarray, k_max: int) -> jnp.ndarray:
     pad = [(0, k_max - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
     return jnp.pad(a, pad)
+
+
+def pad_workers(worker_data: List[Tuple[Any, Any]]):
+    """Worker datasets -> uniform-shape (X, Y, mask, k_i) engine batch.
+
+    Pads every worker to the fleet-wide K_max along axis 0 with sample
+    masks.  Shared by ``FLTrainer`` and the sweep engine so both feed the
+    round engine bit-identical arrays.
+    """
+    sizes = [np.asarray(x).shape[0] for x, _ in worker_data]
+    k_i = jnp.asarray(sizes, jnp.float32)
+    k_max = max(sizes)
+    X = jnp.stack([_pad_axis0(jnp.asarray(x), k_max)
+                   for x, _ in worker_data])
+    Y = jnp.stack([_pad_axis0(jnp.asarray(y), k_max)
+                   for _, y in worker_data])
+    mask = jnp.asarray(
+        np.arange(k_max)[None, :] < np.asarray(sizes)[:, None],
+        jnp.float32)
+    return X, Y, mask, k_i
+
+
+def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
+                    key, eval_xy: Optional[Tuple[Any, Any]] = None
+                    ) -> Dict[str, jax.Array]:
+    """One full ``scan=True`` training run as a pure traced function.
+
+    This is the single source of truth for the scan path: ``FLTrainer``
+    jits it directly, and the sweep engine (``repro.sweep``) lifts it over
+    a leading experiment axis with ``jax.vmap`` — ``key`` and any
+    config scalars the sweep varies (``lr``, ``sigma2``, ``p_max``) may be
+    traced, so a whole grid of runs compiles once and executes as one
+    device-resident computation.
+
+    Returns a dict of arrays: ``flat`` (final parameters, flattened),
+    ``selected`` / ``b`` per-round stats (rounds,), and — when ``eval_xy``
+    is given — one (rounds / eval_every,) history per task metric.
+    """
+    kinit, kround = jax.random.split(key)
+    params = task.init(kinit)
+    engine = build_engine(task, X, Y, mask, k_i, cfg, params)
+    flat0, _ = ravel_pytree(params)
+    state = engine.init(flat0, kround)
+    collect = eval_xy is not None
+
+    def body(s, _):
+        s2, stats = engine.step(s, None)
+        return s2, (stats, s2.flat if collect else None)
+
+    state, (stats, flats) = jax.lax.scan(body, state, None,
+                                         length=cfg.rounds)
+    out = {"flat": state.flat, "selected": stats.selected,
+           "b": stats.b_mean}
+    if collect:
+        ex, ey = (jnp.asarray(eval_xy[0]), jnp.asarray(eval_xy[1]))
+        idx = jnp.arange(0, cfg.rounds, cfg.eval_every)
+        ms = jax.vmap(
+            lambda f: task.metrics(engine.unravel(f), ex, ey))(flats[idx])
+        out.update(ms)
+    return out
 
 
 class FLTrainer:
@@ -51,67 +113,52 @@ class FLTrainer:
         self.task = task
         self.cfg = cfg
         self.U = len(worker_data)
-        sizes = [np.asarray(x).shape[0] for x, _ in worker_data]
-        self.k_i = jnp.asarray(sizes, jnp.float32)
         # uniform-shape batch across workers: pad to K_max + sample masks,
         # so the engine runs ONE vmapped local-update dispatch per round
-        k_max = max(sizes)
-        self.X = jnp.stack([_pad_axis0(jnp.asarray(x), k_max)
-                            for x, _ in worker_data])
-        self.Y = jnp.stack([_pad_axis0(jnp.asarray(y), k_max)
-                            for _, y in worker_data])
-        self.mask = jnp.asarray(
-            np.arange(k_max)[None, :] < np.asarray(sizes)[:, None],
-            jnp.float32)
+        self.X, self.Y, self.mask, self.k_i = pad_workers(worker_data)
 
     # ---------------------------------------------------------------- run
     def run(self, key=None, eval_data: Optional[Tuple[Any, Any]] = None
             ) -> Dict[str, Any]:
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+        history: Dict[str, list] = {"round": list(range(cfg.rounds)),
+                                    "selected": [], "b": []}
+        if cfg.scan:
+            return self._run_scan(key, history, eval_data)
         kinit, kround = jax.random.split(key)
         params = self.task.init(kinit)
         engine = build_engine(self.task, self.X, self.Y, self.mask,
                               self.k_i, cfg, params)
         flat, _ = ravel_pytree(params)
         state = engine.init(flat, kround)
-
-        history: Dict[str, list] = {"round": list(range(cfg.rounds)),
-                                    "selected": [], "b": []}
-        if cfg.scan:
-            state, history = self._run_scan(engine, state, history,
-                                            eval_data)
-        else:
-            state, history = self._run_loop(engine, state, history,
-                                            eval_data)
+        state, history = self._run_loop(engine, state, history, eval_data)
         history["params"] = engine.unravel(state.flat)
         return history
 
-    # one scan over all rounds: no host round-trips at all
-    def _run_scan(self, engine: Engine, state: RoundState, history,
-                  eval_data):
+    # one scan over all rounds: no host round-trips at all.  The whole run
+    # is the shared ``scan_experiment`` pure function (also the sweep
+    # engine's unit of vmapping); compile time is measured separately from
+    # execution so reported wall clocks are honest.
+    def _run_scan(self, key, history, eval_data):
         cfg = self.cfg
-        collect_flat = eval_data is not None
 
-        def body(s, _):
-            s2, stats = engine.step(s, None)
-            return s2, (stats, s2.flat if collect_flat else None)
+        def run_fn(k):
+            return scan_experiment(self.task, self.X, self.Y, self.mask,
+                                   self.k_i, cfg, k, eval_xy=eval_data)
 
-        def scan_all(s0):
-            return jax.lax.scan(body, s0, None, length=cfg.rounds)
-
-        state, (stats, flats) = jax.jit(scan_all)(state)
-        history["selected"] = np.asarray(stats.selected).tolist()
-        history["b"] = np.asarray(stats.b_mean).tolist()
-        if collect_flat:
-            ex, ey = (jnp.asarray(eval_data[0]), jnp.asarray(eval_data[1]))
-            idx = jnp.arange(0, cfg.rounds, cfg.eval_every)
-            ms = jax.jit(jax.vmap(
-                lambda f: self.task.metrics(engine.unravel(f), ex, ey)
-            ))(flats[idx])
-            for k, v in ms.items():
+        t0 = time.time()
+        compiled = jax.jit(run_fn).lower(key).compile()
+        history["compile_s"] = time.time() - t0
+        out = jax.block_until_ready(compiled(key))
+        for k, v in out.items():
+            if k != "flat":
                 history[k] = np.asarray(v).tolist()
-        return state, history
+        # rebuild the params template (same kinit stream) only to unravel
+        kinit, _ = jax.random.split(key)
+        _, unravel = ravel_pytree(self.task.init(kinit))
+        history["params"] = unravel(out["flat"])
+        return history
 
     # Python loop over the same jitted step: per-round eval on host
     def _run_loop(self, engine: Engine, state: RoundState, history,

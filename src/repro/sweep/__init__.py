@@ -1,0 +1,21 @@
+"""Vectorized sweep engine: whole experiment grids as sharded computations.
+
+``SweepSpec`` declares a grid over axes (seed, policy, channel, sigma2,
+U, lr, ...).  ``run_spec`` partitions it into vmappable cohorts — cells
+that share every *static* field (policy / channel structure, shapes,
+rounds) — and executes each cohort as ONE jitted computation:
+``fl.trainer.scan_experiment`` lifted over a leading experiment axis with
+``jax.vmap``, the experiment axis sharded across the device mesh
+(``repro.sweep.shard``).  Results are cached content-addressed
+(``repro.sweep.store``) so unchanged cells are cache hits on re-runs.
+
+CLI: ``python -m repro.sweep --task linreg --axis seed=0:8
+--axis policy=inflota,random --rounds 100``.
+"""
+
+from repro.sweep.grid import (Cohort, SweepSpec, cells, cohorts,
+                              run_cohort, run_spec)
+from repro.sweep.store import SweepStore, cell_hash, long_rows
+
+__all__ = ["SweepSpec", "Cohort", "cells", "cohorts", "run_cohort",
+           "run_spec", "SweepStore", "cell_hash", "long_rows"]

@@ -1,0 +1,173 @@
+"""``python -m repro.sweep`` — run experiment grids from the command line.
+
+Examples:
+
+    # 8 seeds x 2 policies x 2 channels, one vectorized computation per
+    # cohort, results cached under sweeps/store, tidy CSV on stdout
+    python -m repro.sweep --task linreg --rounds 100 \
+        --axis seed=0:8 --axis policy=inflota,random \
+        --axis channel=exp_iid,gauss_markov --store sweeps/store
+
+    # grid from a JSON spec file
+    python -m repro.sweep --spec myspec.json --csv out.csv
+
+Spec JSON mirrors ``SweepSpec``: {"axes": {...}, "base": {...},
+"eval": true, "tail": 10}.  Axis values on the command line are comma
+lists (``policy=inflota,random``) or integer ranges (``seed=0:8``);
+values parse as int, then float, then string (``none`` -> null).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, List, Tuple
+
+from repro.sweep import shard as shard_lib
+from repro.sweep import store as store_lib
+from repro.sweep.grid import DEFAULTS, SweepSpec, cells, cohorts, run_spec
+
+
+def parse_value(s: str) -> Any:
+    low = s.strip().lower()
+    if low in ("none", "null"):
+        return None
+    if low in ("true", "false"):
+        return low == "true"
+    for cast in (int, float):
+        try:
+            return cast(s)
+        except ValueError:
+            pass
+    return s.strip()
+
+
+def parse_axis(arg: str) -> Tuple[str, List[Any]]:
+    """``name=v1,v2`` or ``name=start:stop[:step]`` (int range)."""
+    if "=" not in arg:
+        raise ValueError(f"--axis wants NAME=VALUES, got {arg!r}")
+    name, _, rhs = arg.partition("=")
+    name = name.strip()
+    if ":" in rhs:
+        parts = [int(p) for p in rhs.split(":")]
+        if len(parts) == 2:
+            values: List[Any] = list(range(parts[0], parts[1]))
+        elif len(parts) == 3:
+            values = list(range(parts[0], parts[1], parts[2]))
+        else:
+            raise ValueError(f"bad range {rhs!r} for axis {name!r}")
+    else:
+        values = [parse_value(v) for v in rhs.split(",") if v.strip() != ""]
+    if not values:
+        raise ValueError(f"axis {name!r} has no values")
+    return name, values
+
+
+def build_spec(args) -> SweepSpec:
+    """A --spec file provides the starting point; every other flag given
+    on the command line overrides it (axes by name, base field-wise)."""
+    axes: dict = {}
+    base: dict = {}
+    do_eval, tail = True, 10
+    if args.spec:
+        with open(args.spec) as f:
+            doc = json.load(f)
+        axes = {k: list(v) for k, v in doc["axes"].items()}
+        base = dict(doc.get("base", {}))
+        do_eval = doc.get("eval", True)
+        tail = doc.get("tail", 10)
+    for a in args.axis:
+        name, values = parse_axis(a)
+        axes[name] = values
+    for field in ("task", "U", "k_bar", "data_seed", "rounds", "lr",
+                  "sigma2", "p_max", "policy", "channel", "case", "k_b",
+                  "backend", "eval_every", "seed"):
+        v = getattr(args, field)
+        if v is not None:
+            base[field] = v
+    if args.no_eval:
+        do_eval = False
+    if args.tail is not None:
+        tail = args.tail
+    return SweepSpec(axes=axes, base=base, eval=do_eval, tail=tail)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sweep",
+        description="run a whole experiment grid as vectorized cohorts")
+    ap.add_argument("--spec", default=None, help="JSON spec file")
+    ap.add_argument("--axis", action="append", default=[],
+                    metavar="NAME=VALUES",
+                    help="grid axis (repeatable): comma list or int range "
+                         "a:b[:step]")
+    for field in ("task", "policy", "channel", "case", "backend"):
+        ap.add_argument(f"--{field}", default=None)
+    for field in ("U", "k_bar", "data_seed", "rounds", "k_b",
+                  "eval_every", "seed"):
+        ap.add_argument(f"--{field.replace('_', '-')}", dest=field,
+                        type=int, default=None)
+    for field in ("lr", "sigma2", "p_max"):
+        ap.add_argument(f"--{field.replace('_', '-')}", dest=field,
+                        type=float, default=None)
+    ap.add_argument("--tail", type=int, default=None,
+                    help="tail window for <metric>_tail summaries "
+                         "(default 10)")
+    ap.add_argument("--no-eval", action="store_true",
+                    help="skip per-round metric evaluation")
+    ap.add_argument("--store", default=None,
+                    help="result-store directory (content-hashed cache)")
+    ap.add_argument("--csv", default=None,
+                    help="write tidy long-format CSV here (default stdout)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the experiment axis over this many devices "
+                         "(default: all visible; 1 disables sharding)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the cohort plan without executing")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if not args.spec and not args.axis:
+        ap.error("need --spec FILE or at least one --axis NAME=VALUES")
+    try:
+        spec = build_spec(args)
+    except (ValueError, KeyError) as e:
+        ap.error(str(e))
+
+    cell_list = cells(spec)
+    plan = cohorts(cell_list)
+    if not args.quiet:
+        print(f"# grid: {len(cell_list)} cells in {len(plan)} "
+              f"vmappable cohort(s)", file=sys.stderr)
+    if args.dry_run:
+        for co in plan:
+            print(f"# cohort x{len(co)}: "
+                  + " ".join(f"{k}={v}" for k, v in sorted(
+                      co.static.items()) if DEFAULTS.get(k) != v),
+                  file=sys.stderr)
+        return 0
+
+    store = store_lib.SweepStore(args.store) if args.store else None
+    mesh = shard_lib.sweep_mesh(args.devices)
+    results = run_spec(spec, store=store, mesh=mesh,
+                       verbose=not args.quiet)
+
+    columns = list(spec.axes)
+    rows = store_lib.long_rows(results, columns=columns)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            store_lib.write_long_csv(rows, f)
+        if not args.quiet:
+            print(f"# wrote {len(rows)} rows to {args.csv}",
+                  file=sys.stderr)
+    else:
+        store_lib.write_long_csv(rows, sys.stdout)
+    if store is not None and not args.quiet:
+        print(f"# store: {store.root} now holds {len(store)} cells",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

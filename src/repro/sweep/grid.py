@@ -1,0 +1,278 @@
+"""Declarative experiment grids -> vmappable cohorts -> one computation.
+
+A ``SweepSpec`` names a grid: ``axes`` (axis name -> values, crossed) over
+a ``base`` of fixed fields.  Cells split into *cohorts* by their static
+fields — everything that changes compiled structure (policy / channel
+model, U, k_bar, data_seed, rounds, case, k_b, backend).  The remaining
+VECTOR_AXES (``seed``, ``lr``, ``sigma2``, ``p_max``) become traced
+per-experiment operands, so a whole cohort is ONE computation:
+``fl.trainer.scan_experiment`` lifted over a leading experiment axis with
+``jax.vmap``, jitted once, and sharded over the device mesh by
+``repro.sweep.shard.run_sharded``.
+
+Compared to the old benchmark drivers (one ``FLTrainer`` per cell: a
+fresh trace + compile + U-round dispatch chain each), a cohort of E
+experiments compiles once and runs device-resident end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.core.objectives import Case
+from repro.data.tasks import build_task_data
+from repro.fl.trainer import FLConfig, pad_workers, scan_experiment
+from repro.sweep import shard as shard_lib
+from repro.sweep import store as store_lib
+
+# Cell fields that may vary WITHIN a cohort: they enter the computation as
+# traced per-experiment operands.  Everything else is static (changes the
+# compiled structure) and partitions the grid.
+VECTOR_AXES = ("seed", "lr", "sigma2", "p_max")
+
+DEFAULTS: Dict[str, Any] = {
+    "task": "linreg",        # repro.data.tasks registry name
+    "U": 20,
+    "k_bar": 30,
+    "data_seed": 0,
+    "rounds": 100,
+    "eval_every": 1,
+    "policy": "inflota",     # registry name | RoundPolicy instance
+    "channel": None,         # None | registry name | ChannelModel instance
+    "case": Case.GD_CONVEX,  # Case | its string value
+    "k_b": None,
+    "backend": "auto",
+    "select_prob": 0.5,
+    "constants": None,       # None -> LearningConstants(sigma2=sigma2)
+    "amplitude": False,
+    "h_floor": 1e-3,
+    "seed": 0,
+    "lr": 0.1,
+    "sigma2": 1e-4,
+    "p_max": 10.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A declarative experiment grid.
+
+    axes:  axis name -> tuple of values; the grid is their cross product.
+           Axis names must be cell fields (see DEFAULTS).
+    base:  fixed cell fields overriding DEFAULTS for every cell.
+    eval:  collect per-round task metrics against the task's test split.
+    tail:  window (in eval points) for the ``<metric>_tail`` summary.
+    """
+
+    axes: Mapping[str, Sequence[Any]]
+    base: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    eval: bool = True
+    tail: int = 10
+
+    def __post_init__(self):
+        known = set(DEFAULTS)
+        bad = [k for k in (*self.axes, *self.base) if k not in known]
+        if bad:
+            raise ValueError(
+                f"unknown cell field(s) {bad}; known: {sorted(known)}")
+        empty = [k for k, v in self.axes.items() if len(tuple(v)) == 0]
+        if empty:
+            raise ValueError(f"empty axis value list for {empty}")
+
+
+@dataclasses.dataclass
+class Cohort:
+    """Cells that share every static field -> one vmapped computation."""
+
+    static: Dict[str, Any]
+    cells: List[Dict[str, Any]]     # grid order preserved
+    indices: List[int]              # positions in the full cell list
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+
+def cells(spec: SweepSpec) -> List[Dict[str, Any]]:
+    """The full grid, one dict per cell, axes crossed in insertion order."""
+    names = list(spec.axes)
+    out: List[Dict[str, Any]] = []
+
+    def rec(i: int, acc: Dict[str, Any]):
+        if i == len(names):
+            out.append({**DEFAULTS, **dict(spec.base), **acc})
+            return
+        for v in spec.axes[names[i]]:
+            rec(i + 1, {**acc, names[i]: v})
+
+    rec(0, {})
+    return out
+
+
+def _static_key(cell: Dict[str, Any]) -> Tuple:
+    return tuple((k, cell[k]) for k in sorted(cell) if k not in VECTOR_AXES)
+
+
+def cohorts(cell_list: List[Dict[str, Any]],
+            indices: Optional[List[int]] = None) -> List[Cohort]:
+    """Group cells by static key, preserving grid order within a cohort."""
+    indices = list(range(len(cell_list))) if indices is None else indices
+    groups: Dict[Tuple, Cohort] = {}
+    for idx, cell in zip(indices, cell_list):
+        key = _static_key(cell)
+        if key not in groups:
+            groups[key] = Cohort(
+                static={k: v for k, v in key}, cells=[], indices=[])
+        groups[key].cells.append(cell)
+        groups[key].indices.append(idx)
+    return list(groups.values())
+
+
+def _resolved_case(case) -> Case:
+    return case if isinstance(case, Case) else Case(case)
+
+
+def _cohort_cfg(static: Dict[str, Any], lr, sigma2, p_max) -> FLConfig:
+    """FLConfig for one experiment; lr/sigma2/p_max may be traced."""
+    chanc = ChannelConfig(sigma2=sigma2, p_max=p_max,
+                          amplitude=static["amplitude"],
+                          h_floor=static["h_floor"])
+    constants = static["constants"]
+    if constants is None:
+        constants = LearningConstants(sigma2=sigma2)
+    return FLConfig(rounds=static["rounds"], lr=lr,
+                    policy=static["policy"],
+                    case=_resolved_case(static["case"]),
+                    k_b=static["k_b"], channel=chanc,
+                    channel_model=static["channel"], constants=constants,
+                    select_prob=static["select_prob"],
+                    backend=static["backend"], scan=True,
+                    eval_every=static["eval_every"])
+
+
+def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
+               mesh=None, eval_data=None) -> List[Dict[str, Any]]:
+    """Execute one cohort as a single vmapped (and mesh-sharded) program.
+
+    Returns one result dict per cell (cohort order): ``cell``,
+    ``metrics`` (scalar summaries), ``history`` (per-round traces) and
+    ``flat`` (final parameters, in-memory only — the store persists
+    metrics + history).  ``eval_data`` overrides the task's own test
+    split (e.g. Fig. 4's fixed held-out set shared across U).
+    """
+    st = cohort.static
+    task, workers, test = build_task_data(
+        st["task"], U=st["U"], k_bar=st["k_bar"], data_seed=st["data_seed"])
+    if eval_data is not None:
+        test = eval_data
+    X, Y, mask, k_i = pad_workers(workers)
+
+    keys = jnp.stack([jax.random.PRNGKey(int(c["seed"]))
+                      for c in cohort.cells])
+    # a scalar becomes a traced per-experiment operand only when it varies
+    # within the cohort; uniform scalars stay static Python floats (this
+    # keeps the per-run graph identical to FLTrainer's, and the Pallas
+    # backend — whose kernels bake sigma2 in as a compile-time constant —
+    # usable for any cohort that doesn't sweep it)
+    uniform: Dict[str, float] = {}
+    varying: Dict[str, jnp.ndarray] = {}
+    for name in ("lr", "sigma2", "p_max"):
+        vals = [float(c[name]) for c in cohort.cells]
+        if len(set(vals)) == 1:
+            uniform[name] = vals[0]
+        else:
+            varying[name] = jnp.asarray(vals, jnp.float32)
+    eval_xy = test if do_eval else None
+
+    def run_one(batch):
+        s = {**uniform, **{n: batch[n] for n in varying}}
+        cfg = _cohort_cfg(st, s["lr"], s["sigma2"], s["p_max"])
+        return scan_experiment(task, X, Y, mask, k_i, cfg, batch["key"],
+                               eval_xy=eval_xy)
+
+    out = shard_lib.run_sharded(jax.vmap(run_one),
+                                {"key": keys, **varying}, mesh)
+    out = {k: np.asarray(v) for k, v in out.items()}
+
+    results = []
+    for e, cell in enumerate(cohort.cells):
+        history = {k: out[k][e].tolist() for k in out if k != "flat"}
+        metrics: Dict[str, float] = {
+            "selected_mean": float(np.mean(out["selected"][e])),
+            "b_mean": float(np.mean(out["b"][e])),
+        }
+        for k in out:
+            if k in ("flat", "selected", "b"):
+                continue
+            h = out[k][e]
+            metrics[f"{k}_final"] = float(h[-1])
+            metrics[f"{k}_tail"] = float(np.mean(h[-tail:]))
+        results.append({"cell": cell, "metrics": metrics,
+                        "history": history, "flat": out["flat"][e]})
+    return results
+
+
+def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
+             mesh=None, eval_data=None,
+             verbose: bool = False) -> List[Dict[str, Any]]:
+    """Run a whole grid: cache lookups, cohort batching, store writes.
+
+    Returns one result per cell in grid order.  Cached cells are served
+    from ``store`` without executing; only the misses are regrouped into
+    cohorts and run.  The cache identity covers the spec's evaluation
+    settings (``eval``, ``tail``) as well as the cell, so e.g. a
+    ``--no-eval`` run never satisfies a later metrics-wanting run.
+    """
+    if store is not None and eval_data is not None:
+        # an eval_data override changes every metric without changing any
+        # cell, so cached entries would be poisoned for ordinary runs
+        raise ValueError("store and eval_data are mutually exclusive; "
+                         "run eval-override sweeps uncached")
+    cache_key = {"eval": spec.eval, "tail": spec.tail}
+    cell_list = cells(spec)
+    results: List[Optional[Dict[str, Any]]] = [None] * len(cell_list)
+    pending_cells, pending_idx = [], []
+    for i, cell in enumerate(cell_list):
+        cached = store.get(cell, cache_key) if store is not None else None
+        if cached is not None:
+            # the store round-trips the cell through JSON; hand callers
+            # back the original dict so result_by matching keeps working
+            results[i] = {**cached, "cell": cell}
+        else:
+            pending_cells.append(cell)
+            pending_idx.append(i)
+    if verbose and store is not None:
+        hits = len(cell_list) - len(pending_cells)
+        print(f"# sweep: {len(cell_list)} cells, {hits} cache hits",
+              file=sys.stderr)
+    for cohort in cohorts(pending_cells, pending_idx):
+        if verbose:
+            print(f"# cohort x{len(cohort)}: "
+                  f"policy={cohort.static['policy']} "
+                  f"channel={cohort.static['channel']} "
+                  f"U={cohort.static['U']} rounds={cohort.static['rounds']}",
+                  file=sys.stderr)
+        outs = run_cohort(cohort, do_eval=spec.eval, tail=spec.tail,
+                          mesh=mesh, eval_data=eval_data)
+        for idx, res in zip(cohort.indices, outs):
+            results[idx] = res
+            if store is not None:
+                store.put(res["cell"], res, cache_key)
+    return results   # type: ignore[return-value]
+
+
+def result_by(results: List[Dict[str, Any]],
+              **match: Any) -> Dict[str, Any]:
+    """The unique result whose cell matches every ``match`` item."""
+    found = [r for r in results
+             if all(r["cell"].get(k) == v for k, v in match.items())]
+    if len(found) != 1:
+        raise ValueError(f"{len(found)} results match {match}")
+    return found[0]

@@ -1,0 +1,106 @@
+"""Shard a cohort's experiment axis across the device mesh.
+
+A vmapped cohort is embarrassingly parallel over experiments, so the
+leading axis maps straight onto the ``launch/mesh.py`` data-parallel
+axes: each device runs E / n_devices whole training scans.  With one
+device (the common CPU container) everything degrades to a no-op, so the
+sweep engine never branches on topology.
+
+The experiment count rarely divides the device count; ``pad_batch``
+repeats the trailing experiment (wasted compute, not wrong results) and
+``unpad`` slices the originals back out.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.sharding import specs
+
+
+def sweep_mesh(n: Optional[int] = None):
+    """A 1-D data-parallel mesh for the experiment axis (None = no mesh).
+
+    Returns None when only one device is visible — callers then skip
+    device placement entirely.
+    """
+    avail = len(jax.devices())
+    n = avail if n is None else min(n, avail)
+    if n <= 1:
+        return None
+    return mesh_lib.make_smoke_mesh(data=n, model=1)
+
+
+def shard_count(mesh) -> int:
+    """How many ways the experiment axis splits on ``mesh``."""
+    if mesh is None:
+        return 1
+    sizes = dict(mesh.shape)
+    count = 1
+    for a in specs.batch_axes(mesh):
+        count *= sizes.get(a, 1)
+    return max(count, 1)
+
+
+def pad_batch(tree: Any, n_shards: int) -> Tuple[Any, int]:
+    """Pad every leaf's leading axis to a multiple of ``n_shards``.
+
+    Padding repeats the last experiment (cheap, shape-stable); returns
+    (padded tree, original length).
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree, 0
+    e = leaves[0].shape[0]
+    pad = (-e) % n_shards
+
+    def padded(x):
+        if pad == 0:
+            return x
+        reps = np.concatenate([np.arange(e), np.full(pad, e - 1)])
+        return np.asarray(x)[reps]
+
+    return jax.tree.map(padded, tree), e
+
+
+def unpad(tree: Any, e: int) -> Any:
+    return jax.tree.map(lambda x: x[:e], tree)
+
+
+def shard_batch(tree: Any, mesh) -> Any:
+    """device_put each leaf with the leading (experiment) axis sharded
+    over the mesh batch axes; a no-op when ``mesh`` is None."""
+    if mesh is None:
+        return tree
+    axes = specs.batch_axes(mesh)
+    if not axes:
+        return tree
+
+    def put(x):
+        x = np.asarray(x)
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree)
+
+
+def run_sharded(batched_fn, batch: Any, mesh=None) -> Any:
+    """Run ``batched_fn`` (vmapped over the leading axis) with the
+    experiment axis sharded across ``mesh``.
+
+    Handles pad -> place -> jit -> unpad; the single-device path is just
+    ``jit(batched_fn)(batch)``.
+    """
+    fn = jax.jit(batched_fn)
+    if mesh is None:
+        return fn(batch)
+    padded, e = pad_batch(batch, shard_count(mesh))
+    placed = shard_batch(padded, mesh)
+    with mesh_lib.activate_mesh(mesh):
+        out = fn(placed)
+    return unpad(jax.device_get(out), e)

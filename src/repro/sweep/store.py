@@ -1,0 +1,162 @@
+"""Content-hashed sweep result store + tidy long-format export.
+
+Each grid cell (one experiment configuration) canonicalizes to a JSON
+document — dataclasses (policies, channel models, constants) serialize by
+class name + field values, enums by value — and its SHA-256 prefix is the
+cell's identity.  Results land as ``<root>/<hash>.json`` holding the
+canonical cell next to its metrics, so a re-run of an unchanged cell is a
+cache hit (``SweepStore.get``) and any config change (a different eps, a
+new policy field) automatically misses.
+
+``long_rows`` flattens results to tidy long format (one row per
+cell x metric) for CSV export and ``benchmarks/render_tables.py``.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import enum
+import hashlib
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+_SCHEMA = 1          # bump to invalidate every cached cell
+
+
+def jsonable(v: Any) -> Any:
+    """Canonical JSON form of a cell value (deterministic, type-tagged)."""
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        d = {f.name: jsonable(getattr(v, f.name))
+             for f in dataclasses.fields(v)}
+        return {"__class__": type(v).__name__, **d}
+    if isinstance(v, enum.Enum):
+        return {"__enum__": type(v).__name__, "value": v.value}
+    if isinstance(v, (np.floating, np.integer)):
+        return v.item()
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (tuple, list)):
+        return [jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): jsonable(v[k]) for k in sorted(v, key=str)}
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    # last resort: a stable repr (e.g. a custom policy without dataclass
+    # structure); repr must be deterministic for caching to work
+    return {"__repr__": repr(v)}
+
+
+def canonical_cell(cell: Dict[str, Any],
+                   extra: Optional[Dict[str, Any]] = None) -> str:
+    """``extra`` is run-level evaluation identity (e.g. the spec's
+    eval/tail settings) that must invalidate the cache when it changes
+    without being part of the user-visible cell."""
+    doc = {"schema": _SCHEMA, "cell": jsonable(cell),
+           "extra": jsonable(extra or {})}
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+def cell_hash(cell: Dict[str, Any],
+              extra: Optional[Dict[str, Any]] = None) -> str:
+    return hashlib.sha256(
+        canonical_cell(cell, extra).encode()).hexdigest()[:20]
+
+
+class SweepStore:
+    """Directory of ``<hash>.json`` files: {"cell", "metrics", "history"}."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def path(self, cell: Dict[str, Any], extra=None) -> str:
+        return os.path.join(self.root, f"{cell_hash(cell, extra)}.json")
+
+    def get(self, cell: Dict[str, Any],
+            extra=None) -> Optional[Dict[str, Any]]:
+        p = self.path(cell, extra)
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            doc = json.load(f)
+        # guard against hash-prefix collisions / schema drift
+        if doc.get("canonical") != canonical_cell(cell, extra):
+            return None
+        return doc["result"]
+
+    def put(self, cell: Dict[str, Any], result: Dict[str, Any],
+            extra=None) -> str:
+        p = self.path(cell, extra)
+        doc = {"canonical": canonical_cell(cell, extra),
+               "cell": jsonable(cell),
+               "result": {"cell": jsonable(result.get("cell", cell)),
+                          "metrics": jsonable(result["metrics"]),
+                          "history": jsonable(result.get("history", {}))}}
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, p)
+        return p
+
+    def __len__(self) -> int:
+        return len([f for f in os.listdir(self.root)
+                    if f.endswith(".json")])
+
+    def results(self) -> List[Dict[str, Any]]:
+        out = []
+        for fn in sorted(os.listdir(self.root)):
+            if not fn.endswith(".json"):
+                continue
+            with open(os.path.join(self.root, fn)) as f:
+                out.append(json.load(f)["result"])
+        return out
+
+
+# ------------------------------------------------------------- long format
+
+def _cell_label(v: Any) -> Any:
+    """Human-readable scalar for a (possibly structured) cell value."""
+    if isinstance(v, dict):
+        if "__class__" in v:
+            inner = {k: _cell_label(x) for k, x in v.items()
+                     if k != "__class__"}
+            args = ",".join(f"{k}={x}" for k, x in sorted(inner.items()))
+            return f"{v['__class__']}({args})"
+        if "__enum__" in v:
+            return v["value"]
+        if "__repr__" in v:
+            return v["__repr__"]
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return _cell_label(jsonable(v))
+    if isinstance(v, enum.Enum):
+        return v.value
+    return v
+
+
+def long_rows(results: Iterable[Dict[str, Any]],
+              columns: Optional[Iterable[str]] = None) -> List[Dict]:
+    """Tidy long format: one row per (cell columns..., metric, value)."""
+    rows = []
+    for res in results:
+        cell = res["cell"]
+        keep = list(columns) if columns is not None else sorted(cell)
+        base = {c: _cell_label(cell.get(c)) for c in keep}
+        for metric, value in sorted(res["metrics"].items()):
+            rows.append({**base, "metric": metric, "value": value})
+    return rows
+
+
+def write_long_csv(rows: List[Dict], fh) -> None:
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    # csv.writer: structured cell labels (e.g. ImperfectCSI(...,eps=0.1))
+    # contain commas and must be quoted, not split across columns
+    w = csv.writer(fh, lineterminator="\n")
+    w.writerow(cols)
+    for r in rows:
+        w.writerow([r.get(c, "") for c in cols])
