@@ -8,8 +8,11 @@ Fig. 6: MSE grows with noise variance for the realistic schemes; the
 Each figure is one declarative ``repro.sweep.SweepSpec`` — the old
 hand-rolled Python loops over ``common.run_policy`` are gone.  The sweep
 engine partitions every grid into vmappable cohorts and runs each cohort
-as one jitted computation; Fig. 6 in particular collapses to one
-computation per policy (sigma^2 is a traced per-experiment operand).
+as one jitted computation: Fig. 6's sigma^2 axis is a traced
+per-experiment operand, and the Fig. 4 / Fig. 5 worker axes (U, K̄) merge
+into RAGGED cohorts (worker padding + masks), so every figure is one
+compile per policy.  ``BENCH_sweeps.json`` records the before/after
+cohort counts and compile seconds for these grids (``cohorts_*`` rows).
 
 Beyond-paper scenario axis: ``--channel NAME`` reruns every sweep under a
 registered ``ChannelModel`` (``exp_iid`` | ``rayleigh`` | ``gauss_markov``

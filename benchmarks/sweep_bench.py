@@ -1,7 +1,7 @@
-"""Sweep-engine throughput: sequential loop vs vectorized cohorts.
+"""Sweep-engine throughput + single-compile cohort merging.
 
-The ISSUE-3 acceptance grid: 8 seeds x 2 policies x 2 channels (linreg,
-``scan=True``), driven two ways over the SAME cells —
+Section 1 — the ISSUE-3 acceptance grid: 8 seeds x 2 policies x 2
+channels (linreg, ``scan=True``), driven two ways over the SAME cells —
 
   sequential:  one fresh ``FLTrainer`` per cell, exactly how the fig
                benchmarks drove grids before the sweep engine (every run
@@ -11,7 +11,16 @@ The ISSUE-3 acceptance grid: 8 seeds x 2 policies x 2 channels (linreg,
 
 Reports runs/sec for both, the speedup, and a bit-exactness count (every
 vectorized cell must match its sequential twin's final parameters
-bit-for-bit).  ``--json`` writes the committed ``BENCH_sweeps.json``.
+bit-for-bit).
+
+Section 2 — the ISSUE-4 cohort-merge comparison: the fig4_5_6 benchmark
+grids plus the U x eps x sigma2 acceptance grid, partitioned BEFORE
+(``cohorts(..., legacy=True)``: U / k_bar / eps static, one compile per
+combination) and AFTER (ragged worker padding + traced eps/rho/sigma2/L:
+one compile per shape family).  Both plans execute the same cells;
+``compile_s`` / ``run_s`` split trace+compile wall time from
+post-compile execution, so the committed numbers show exactly what the
+merge buys.  ``--json`` writes the committed ``BENCH_sweeps.json``.
 """
 
 from __future__ import annotations
@@ -31,7 +40,7 @@ from repro.core.objectives import Case
 from repro.data.tasks import build_task_data
 from repro.fl.trainer import FLConfig, FLTrainer
 from repro.sweep import SweepSpec, run_spec
-from repro.sweep.grid import cells
+from repro.sweep.grid import cells, cohorts, run_cohort
 
 SEEDS = 8
 POLICIES = ("inflota", "random")
@@ -65,7 +74,53 @@ def _sequential(rounds: int):
     return flats
 
 
-def run(rounds: int = 60, json_path: str | None = None):
+def _merge_specs(rounds: int) -> dict[str, SweepSpec]:
+    """The grids whose cohort plans the merge changes (all no-eval: the
+    comparison times training compute, not metric evaluation)."""
+    figs = {"U": (5, 10, 20, 40), "k_bar": (10, 20, 40, 80),
+            "sigma2": (1e-4, 1e-2, 1e-1, 1.0)}
+    base = {"rounds": rounds, "lr": 0.1, "backend": "jnp"}
+    out = {
+        f"fig4_5_6[{ax}]": SweepSpec(
+            axes={ax: vals, "policy": ("inflota", "random")},
+            base=dict(base), eval=False)
+        for ax, vals in figs.items()}
+    out["u_eps_sigma2"] = SweepSpec(
+        axes={"U": (5, 10, 20), "eps": (0.0, 0.1),
+              "sigma2": (1e-4, 1e-2)},
+        base={**base, "k_bar": 20, "channel": "exp_iid_csi"}, eval=False)
+    return out
+
+
+def _run_plan(spec: SweepSpec, legacy: bool) -> dict[str, float]:
+    """Execute a spec under one cohort plan, timing compile vs run."""
+    cl = cells(spec)
+    plan = cohorts(cl, legacy=legacy)
+    t: dict[str, float] = {}
+    for co in plan:
+        run_cohort(co, do_eval=False, timings=t)
+    return {"cells": len(cl), "cohorts": len(plan),
+            "compile_s": t["compile_s"], "run_s": t["run_s"]}
+
+
+def cohort_merge_rows(rounds: int = 40):
+    """Before/after cohort counts + compile/run walls per grid."""
+    rows = []
+    for name, spec in _merge_specs(rounds).items():
+        for tag, legacy in (("before", True), ("after", False)):
+            jax.clear_caches()      # each plan pays its own compiles
+            r = _run_plan(spec, legacy)
+            rps = r["cells"] / (r["compile_s"] + r["run_s"])
+            rows.append({
+                "name": f"cohorts_{name}_{tag}",
+                "metric": "cells/cohorts/compile_s/runs_per_s",
+                "value": [r["cells"], r["cohorts"],
+                          round(r["compile_s"], 2), round(rps, 3)]})
+    return rows
+
+
+def run(rounds: int = 60, json_path: str | None = None,
+        merge_rounds: int = 40):
     spec = _spec(rounds)
     n = len(cells(spec))
 
@@ -91,11 +146,13 @@ def run(rounds: int = 60, json_path: str | None = None):
         {"name": "sweep_bitexact", "metric": f"cells=={n}",
          "value": exact},
     ]
+    rows += cohort_merge_rows(rounds=merge_rounds)
     if json_path:
         doc = {"host": platform.node(), "backend": "cpu",
                "grid": {"seeds": SEEDS, "policies": list(POLICIES),
                         "channels": [c or "exp_iid" for c in CHANNELS],
-                        "rounds": rounds, "U": U, "k_bar": K_BAR},
+                        "rounds": rounds, "U": U, "k_bar": K_BAR,
+                        "merge_rounds": merge_rounds},
                "rows": rows}
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=1)
@@ -105,7 +162,9 @@ def run(rounds: int = 60, json_path: str | None = None):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--merge-rounds", type=int, default=40)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    for r in run(rounds=args.rounds, json_path=args.json):
+    for r in run(rounds=args.rounds, json_path=args.json,
+                 merge_rounds=args.merge_rounds):
         print(f"{r['name']},{r['metric']},{r['value']}")

@@ -31,6 +31,22 @@ recompiles.  A string registry (``register_channel`` / ``make_channel``)
 lets configs name scenarios ("exp_iid", "gauss_markov", ...) without
 importing the classes.
 
+Every per-worker draw goes through the ``worker_keys`` helpers, which
+derive one subkey per worker INDEX (``fold_in(key, i)``) instead of
+drawing a shape-(U,) batch.  That makes worker-axis randomness
+RESTRICTION-STABLE: the first U' workers of a U-sized model (U' < U) see
+exactly the draws a U'-sized model would — the property the sweep
+engine's ragged cohorts rely on to stay bit-exact when cells with
+different worker counts are padded to a shared U_max.  Custom models
+should use the same helpers if they want to join ragged cohorts
+bit-exactly (batch draws still *work*, they just aren't
+padding-invariant).
+
+``ImperfectCSI.eps`` and ``GaussMarkovFading.rho`` accept traced scalars
+(per-experiment sweep operands), not just Python floats; the ``eps == 0``
+fast path is taken only for a concrete zero and otherwise resolves via a
+``jnp.where`` that is bit-exact at eps == 0.
+
 Receiver noise stays AWGN with variance ``sigma2`` (``sample_noise``); the
 static ``ChannelConfig`` keeps the receiver/power constants and remains
 the back-compat construction path (``resolve_model(None, u, cfg)``).
@@ -65,6 +81,42 @@ class ChannelConfig:
     p_max: float = 10.0
     amplitude: bool = False
     h_floor: float = 1e-3
+
+
+# ----------------------------------------------- per-worker key derivation
+
+def worker_keys(key: jax.Array, u: int) -> jax.Array:
+    """(u, ...) per-worker subkeys: ``fold_in(key, i)`` for i = 0..u-1.
+
+    Restriction-stable: growing ``u`` appends workers without changing the
+    keys (hence the draws) of the existing ones — unlike
+    ``jax.random.split(key, u)`` or shape-(u,) batch draws, whose bit
+    streams depend on u.  This is what lets ragged sweep cohorts pad the
+    worker axis to a cohort-wide U_max and stay bit-exact per cell.
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(u))
+
+
+def worker_exponential(key: jax.Array, u: int) -> jax.Array:
+    """(u,) iid Exp(1) draws, one per worker subkey (restriction-stable)."""
+    return jax.vmap(lambda k: jax.random.exponential(k, ()))(
+        worker_keys(key, u))
+
+
+def worker_normal(key: jax.Array, u: int) -> jax.Array:
+    """(u,) iid N(0, 1) draws, one per worker subkey."""
+    return jax.vmap(lambda k: jax.random.normal(k, ()))(worker_keys(key, u))
+
+
+def worker_uniform(key: jax.Array, u: int) -> jax.Array:
+    """(u,) iid U[0, 1) draws, one per worker subkey."""
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(worker_keys(key, u))
+
+
+def worker_bernoulli(key: jax.Array, p, u: int) -> jax.Array:
+    """(u,) iid Bernoulli(p) draws (bool), one per worker subkey."""
+    return jax.vmap(lambda k: jax.random.bernoulli(k, p, ()))(
+        worker_keys(key, u))
 
 
 # ---------------------------------------------------------------- interface
@@ -125,20 +177,31 @@ def make_channel(name: str, u: int, **kwargs) -> "ChannelModel":
     return factory(u, **kwargs)
 
 
-def resolve_model(spec, u: int, cfg: ChannelConfig) -> "ChannelModel":
+def resolve_model(spec, u: int, cfg: ChannelConfig,
+                  **factory_kwargs) -> "ChannelModel":
     """Turn a config's channel spec into a ChannelModel instance.
 
     spec may be None (build the paper-faithful model from ``cfg``), a
     registry name, or an already-constructed ChannelModel (validated
     against ``u``).  ``cfg.h_floor`` is forwarded to registry factories
     that accept it, so a name spec matches the equivalent None spec.
+
+    Extra ``factory_kwargs`` (e.g. a traced ``eps`` / ``rho`` from the
+    sweep engine) are forwarded to the registry factory and therefore
+    require a string spec — a factory that doesn't accept them raises
+    its usual TypeError.
     """
     if spec is None:
+        if factory_kwargs:
+            raise ValueError(
+                f"channel kwargs {sorted(factory_kwargs)} need a registry "
+                "channel name (e.g. 'exp_iid_csi' for eps, 'gauss_markov' "
+                "for rho); the default channel accepts none")
         cls = RayleighAmplitude if cfg.amplitude else ExpIID
         return cls(u=u, h_floor=cfg.h_floor)
     if isinstance(spec, str):
         factory = _CHANNEL_REGISTRY.get(spec)
-        kwargs = {}
+        kwargs = dict(factory_kwargs)
         if factory is not None:
             try:
                 params = inspect.signature(factory).parameters
@@ -149,10 +212,35 @@ def resolve_model(spec, u: int, cfg: ChannelConfig) -> "ChannelModel":
             except (TypeError, ValueError):   # builtins without signatures
                 pass
         return make_channel(spec, u, **kwargs)
+    if factory_kwargs:
+        raise ValueError(
+            f"channel kwargs {sorted(factory_kwargs)} need a registry "
+            "channel name; an already-constructed model cannot be "
+            "re-parameterized")
     if getattr(spec, "u", u) != u:
         raise ValueError(
             f"channel model is sized for u={spec.u} workers, got u={u}")
     return spec
+
+
+def ragged_exact(spec) -> bool:
+    """Whether a channel spec stays bit-exact under worker-axis padding.
+
+    True means the model's per-worker randomness is restriction-stable
+    (drawn via the ``worker_keys`` helpers) AND free of cross-worker
+    coupling, so a cell run inside a ragged cohort (padded to the
+    cohort's U_max with a worker mask) reproduces the standalone run
+    bit-for-bit.  The sweep partitioner keeps cells whose channel reports
+    False shape-exact (no ragged merging).  ``spec`` follows
+    ``resolve_model``: None | registry name | model instance.
+    """
+    if spec is None:
+        return True
+    obj = _CHANNEL_REGISTRY.get(spec, None) if isinstance(spec, str) \
+        else spec
+    if obj is None:      # unknown name: resolve_model will raise later
+        return True
+    return bool(getattr(obj, "ragged_exact", True))
 
 
 # ------------------------------------------------------------------- models
@@ -179,7 +267,7 @@ class ExpIID(_PerfectCSI):
 
     def step(self, carry, key, t):
         del t
-        g = jax.random.exponential(key, (self.u,))
+        g = worker_exponential(key, self.u)
         return carry, jnp.maximum(g, self.h_floor)
 
 
@@ -197,7 +285,7 @@ class RayleighAmplitude(_PerfectCSI):
 
     def step(self, carry, key, t):
         del t
-        g = jnp.sqrt(jax.random.exponential(key, (self.u,)))
+        g = jnp.sqrt(worker_exponential(key, self.u))
         return carry, jnp.maximum(g, self.h_floor)
 
 
@@ -214,25 +302,34 @@ class GaussMarkovFading(_PerfectCSI):
     ``g = |a|^2`` is Exp(1) (exactly the paper's ensemble) with lag-1
     autocorrelation corr(g_t, g_{t-1}) = rho^2.  carry = (re, im), each
     (U,), threaded through the engine's scan carry.
+
+    ``rho`` may be a traced scalar (a per-experiment sweep operand): it
+    only enters ``step`` multiplicatively, so cells that differ solely in
+    rho share one compiled cohort.
     """
 
     u: int
-    rho: float = 0.9
+    rho: Any = 0.9           # float | traced scalar
     h_floor: float = 1e-3
 
     def init_state(self, key):
         kr, ki = jax.random.split(key)
         s = jnp.sqrt(0.5)
-        return (s * jax.random.normal(kr, (self.u,)),
-                s * jax.random.normal(ki, (self.u,)))
+        return (s * worker_normal(kr, self.u),
+                s * worker_normal(ki, self.u))
 
     def step(self, carry, key, t):
         del t
         re, im = carry
         kr, ki = jax.random.split(key)
-        innov = jnp.sqrt((1.0 - self.rho ** 2) * 0.5)
-        re = self.rho * re + innov * jax.random.normal(kr, (self.u,))
-        im = self.rho * im + innov * jax.random.normal(ki, (self.u,))
+        # rho is forced to the carry dtype so a concrete Python float and
+        # a traced per-experiment scalar run the SAME f32 arithmetic —
+        # otherwise Python-double rho**2 lands one ulp off the traced
+        # value and sweep cohorts drift from standalone runs
+        rho = jnp.asarray(self.rho, re.dtype)
+        innov = jnp.sqrt((1.0 - rho ** 2) * 0.5)
+        re = rho * re + innov * worker_normal(kr, self.u)
+        im = rho * im + innov * worker_normal(ki, self.u)
         g = re * re + im * im
         return (re, im), jnp.maximum(g, self.h_floor)
 
@@ -255,18 +352,21 @@ class PathlossShadowing(_PerfectCSI):
     spread_db: float = 20.0
     shadow_db: float = 8.0
     h_floor: float = 1e-3
+    # the gbar normalization averages over the ensemble, so a padded
+    # worker axis changes every worker's mean gain: ragged sweep cohorts
+    # must keep pathloss cells shape-exact (see ``ragged_exact``)
+    ragged_exact = False
 
     def init_state(self, key):
         kp, ks = jax.random.split(key)
-        atten_db = jax.random.uniform(kp, (self.u,)) * self.spread_db
-        atten_db = atten_db + jax.random.normal(ks, (self.u,)) * \
-            self.shadow_db
+        atten_db = worker_uniform(kp, self.u) * self.spread_db
+        atten_db = atten_db + worker_normal(ks, self.u) * self.shadow_db
         gbar = 10.0 ** (-atten_db / 10.0)
         return gbar / jnp.mean(gbar)
 
     def step(self, carry, key, t):
         del t
-        g = carry * jax.random.exponential(key, (self.u,))
+        g = carry * worker_exponential(key, self.u)
         return carry, jnp.maximum(g, self.h_floor)
 
 
@@ -278,17 +378,27 @@ class ImperfectCSI:
     applies; ``estimate`` is what the policy decides on AND what the
     workers use to invert the channel at transmit time — both the descale
     mismatch and wrongly-selected workers degrade the update (the paper's
-    stated future work, Sec. III fn. 3).  ``eps=0`` is *exactly* the
-    perfect-CSI path (no extra randomness is consumed).
+    stated future work, Sec. III fn. 3).  A concrete ``eps=0`` is
+    *exactly* the perfect-CSI path (no extra randomness is consumed).
+
+    ``eps`` may also be a TRACED scalar — the sweep engine promotes it to
+    a per-experiment operand so cells differing only in eps share one
+    compiled cohort.  The traced path draws the estimation noise
+    unconditionally and selects with ``jnp.where``, which is still
+    bit-exact against perfect CSI where eps == 0.
     """
 
     inner: ChannelModel
-    eps: float = 0.1
+    eps: Any = 0.1           # float | traced scalar
     h_floor: float = 1e-3
 
     @property
     def u(self) -> int:
         return self.inner.u
+
+    @property
+    def ragged_exact(self) -> bool:
+        return getattr(self.inner, "ragged_exact", True)
 
     def init_state(self, key):
         return self.inner.init_state(key)
@@ -300,10 +410,12 @@ class ImperfectCSI:
         # the inner estimator gets a DERIVED key so stacked wrappers draw
         # independent (not perfectly correlated) estimation noise
         h = self.inner.estimate(gains, jax.random.fold_in(key, 1))
-        if self.eps == 0.0:
+        eps = self.eps
+        if isinstance(eps, (int, float)) and float(eps) == 0.0:
             return h
-        n = jax.random.normal(key, h.shape)
-        return jnp.maximum(jnp.abs(h * (1.0 + self.eps * n)), self.h_floor)
+        n = worker_normal(key, h.shape[0])
+        noisy = jnp.maximum(jnp.abs(h * (1.0 + eps * n)), self.h_floor)
+        return jnp.where(jnp.asarray(eps) == 0.0, h, noisy)
 
 
 @register_channel("exp_iid_csi")
@@ -325,8 +437,13 @@ def sample_gains(key: jax.Array, shape: Tuple[int, ...],
     """Draw per-(worker, entry) channel gains h for one FL round.
 
     Memoryless back-compat path; equals ``resolve_model(None, ...)`` +
-    one ``step`` for (U,) shapes.  Prefer ChannelModel for new code.
+    one ``step`` for (U,) shapes (both use the restriction-stable
+    per-worker subkey draws).  Prefer ChannelModel for new code.
     """
+    if len(shape) == 1:
+        e = worker_exponential(key, shape[0])
+        g = jnp.sqrt(e) if cfg.amplitude else e
+        return jnp.maximum(g, cfg.h_floor)
     if cfg.amplitude:
         # Rayleigh amplitude with unit mean-square: sqrt(Exp(1)).
         g = jnp.sqrt(jax.random.exponential(key, shape))

@@ -132,7 +132,9 @@ def _solve_rank1(h_w, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
     # exactly as r_t() does on the generic path; candidates (43) keep k_i
     k_eff = jnp.full_like(k_arr, K_b) if K_b is not None else k_arr
     p_arr = jnp.broadcast_to(jnp.asarray(p_max, dt), (U,))
-    cw = jnp.abs(jnp.sqrt(p_arr) * h_w.astype(dt) / k_arr)        # (U,)
+    # K_i floored so masked workers (k_i = p_max = 0) give cw = 0, not NaN
+    cw = jnp.abs(jnp.sqrt(p_arr) * h_w.astype(dt)
+                 / jnp.maximum(k_arr, _EPS))                      # (U,)
     s = (1.0 / (w_prev_abs + eta)).astype(dt)                     # (D,)
     # feas[i, k] = worker i accepts candidate k's scaling (eq. 44)
     feas = cw[None, :] <= cw[:, None] * (1.0 + 1e-6)              # (U, U)

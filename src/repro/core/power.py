@@ -65,7 +65,12 @@ def b_max_per_worker(h, k_i, w_prev_abs, eta, p_max):
 
     Shapes: h (U, D); k_i (U,); w_prev_abs (D,); eta scalar or (D,);
     p_max (U,) or scalar.  Returns (U, D).
+
+    K_i is floored at a tiny epsilon so MASKED (padded) workers — which
+    the engine hands in with k_i = p_max = 0 — yield b_i^max = 0 (never
+    selected) instead of a 0/0 NaN; real workers (K_i >= 1) are
+    bit-identical to the unguarded expression.
     """
-    k_i = jnp.asarray(k_i)[:, None]
+    k_i = jnp.maximum(jnp.asarray(k_i), 1e-12)[:, None]
     p_max = jnp.broadcast_to(jnp.asarray(p_max), (h.shape[0],))[:, None]
     return jnp.abs(jnp.sqrt(p_max) * h / (k_i * (w_prev_abs[None, :] + eta)))

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import inflota
+from repro.core.channel import worker_bernoulli
 from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case
 
@@ -56,6 +57,9 @@ class PolicyContext(NamedTuple):
     numer: jax.Array       # ()    case constant C of eqs. (35)-(37), traced
     delta_prev: jax.Array  # ()    Delta_{t-1} (Lemma-1 recursion)
     t: jax.Array           # ()    round index
+    wmask: Optional[jax.Array] = None  # (U,) 1.0 real / 0.0 padded worker
+    #   (ragged sweep cohorts pad the worker axis to a cohort-wide U_max;
+    #   None means every worker is real — the common, unpadded case)
 
 
 class BetaReductions(NamedTuple):
@@ -79,12 +83,18 @@ class PolicyDecision(NamedTuple):
     sel: jax.Array               # (D,) sum_i beta_i (selection count)
 
 
-def make_decision(b, beta, k_eff, k_i) -> PolicyDecision:
+def make_decision(b, beta, k_eff, k_i, wmask=None) -> PolicyDecision:
     """Assemble a PolicyDecision, computing the reductions from beta.
 
     ``b`` must already be (D,); beta (U, 1) or (U, D).  Rank-1 betas keep
-    the contractions O(U) and broadcast lazily to (D,).
+    the contractions O(U) and broadcast lazily to (D,).  ``wmask`` (the
+    (U,) real-worker mask from ``PolicyContext.wmask``) zeroes padded
+    workers out of beta — and hence out of every reduction — so policies
+    that select unconditionally (random / all / perfect) stay correct
+    inside ragged cohorts; pass ``ctx.wmask`` through.
     """
+    if wmask is not None:
+        beta = beta * wmask[:, None]
     D = b.shape[0]
     den_keff = jnp.broadcast_to(
         jnp.sum(k_eff[:, None] * beta, axis=0), (D,)) * b
@@ -173,7 +183,8 @@ class InflotaPolicy(RoundPolicyBase):
                             ctx.eta, ctx.p_max, self.constants,
                             case=self.case, delta_prev=ctx.delta_prev,
                             K_b=self.K_b)
-        return make_decision(sol.b, sol.beta, ctx.k_eff, ctx.k_i)
+        return make_decision(sol.b, sol.beta, ctx.k_eff, ctx.k_i,
+                             wmask=ctx.wmask)
 
     def fused_stage(self, backend: str) -> Optional[Callable]:
         """Single-VMEM-pass search + transmit (``kernels.ota_round``)."""
@@ -198,6 +209,8 @@ class RandomPolicy(RoundPolicyBase):
     The same scalar b is used for all entries (the post-processing (9)
     requires a common b across workers; the benchmark draws it at random),
     and selection is worker-level — the decision stays rank-1 (U, 1).
+    Selection uses the per-worker subkey draws (``worker_bernoulli``) so
+    the policy is restriction-stable under ragged worker padding.
     """
 
     select_prob: float = 0.5
@@ -207,9 +220,9 @@ class RandomPolicy(RoundPolicyBase):
         U = ctx.h_est.shape[0]
         kb, ksel = jax.random.split(key)
         b = jnp.full((D,), jax.random.exponential(kb, ()))
-        beta = jax.random.bernoulli(
-            ksel, self.select_prob, (U, 1)).astype(jnp.float32)
-        return make_decision(b, beta, ctx.k_eff, ctx.k_i)
+        beta = worker_bernoulli(
+            ksel, self.select_prob, U).astype(jnp.float32)[:, None]
+        return make_decision(b, beta, ctx.k_eff, ctx.k_i, wmask=ctx.wmask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,7 +237,7 @@ class AllWorkersPolicy(RoundPolicyBase):
         U = ctx.h_est.shape[0]
         return make_decision(jnp.full((D,), self.b_value),
                              jnp.ones((U, 1), jnp.float32),
-                             ctx.k_eff, ctx.k_i)
+                             ctx.k_eff, ctx.k_i, wmask=ctx.wmask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,7 +252,7 @@ class PerfectPolicy(RoundPolicyBase):
         D = ctx.w_prev_abs.shape[0]
         U = ctx.h_est.shape[0]
         return make_decision(jnp.ones((D,)), jnp.ones((U, 1), jnp.float32),
-                             ctx.k_eff, ctx.k_i)
+                             ctx.k_eff, ctx.k_i, wmask=ctx.wmask)
 
 
 @register_policy("inflota")

@@ -135,7 +135,8 @@ class RoundStats(NamedTuple):
 
 
 def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
-                    model: Optional[chan.ChannelModel] = None
+                    model: Optional[chan.ChannelModel] = None,
+                    wmask: Optional[jax.Array] = None
                     ) -> Callable[..., Any]:
     """Channel draw + policy + aggregation + convergence bookkeeping.
 
@@ -151,6 +152,14 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
     branches: exactness and kernel fusion are capabilities the policy
     object advertises (``policy.exact``, ``policy.fused_stage(backend)``),
     so new scenarios plug in without editing this module.
+
+    ``wmask`` (optional (U,) of 1.0/0.0, possibly traced) marks which
+    workers are REAL: ragged sweep cohorts pad the worker axis to a
+    cohort-wide U_max, and the stage silences padded workers by zeroing
+    their k_i / k_eff / p_max (they then transmit nothing, select
+    nothing, and drop out of every denominator and statistic).  None —
+    the default everywhere outside the sweep engine — keeps the compiled
+    graph identical to the unpadded engine.
     """
     U = k_i.shape[0]
     backend = cfg.resolved_backend()
@@ -160,16 +169,24 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
     k_eff = (jnp.full((U,), float(cfg.k_b), jnp.float32)
              if cfg.k_b is not None else k_i)
     p_max = jnp.full((U,), cfg.channel.p_max, jnp.float32)
+    if wmask is not None:
+        k_i = k_i * wmask
+        k_eff = k_eff * wmask
+        p_max = p_max * wmask
     c = cfg.constants
 
     if getattr(policy, "exact", False):
         # Error-free oracle (e.g. 'perfect'): exact weighted FedAvg, no
-        # channel, no noise, Delta recursion unchanged.
+        # channel, no noise, Delta recursion unchanged.  Masked workers
+        # have k_i = 0, so they drop out of the weighted average and the
+        # selected count reports only real workers.
+        n_real = jnp.float32(U) if wmask is None else jnp.sum(wmask)
+
         def exact_stage(W, w_prev, w_prev2, delta_prev, chan_carry,
                         kchan, kpol, t):
             del w_prev, w_prev2, kchan, kpol, t
             return (agg.fedavg(W, k_i), delta_prev, chan_carry,
-                    jnp.float32(U), jnp.float32(0.0))
+                    n_real, jnp.float32(0.0))
         return exact_stage
 
     fused = None
@@ -198,7 +215,7 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
         ctx = selection_lib.PolicyContext(
             h_est=h_est, w_prev_abs=jnp.abs(w_prev), eta=eta,
             k_eff=k_eff, k_i=k_i, p_max=p_max, numer=numer,
-            delta_prev=delta_prev, t=t)
+            delta_prev=delta_prev, t=t, wmask=wmask)
 
         if fused is not None:
             w_hat, b, den_keff, den_ki, sel = fused(W, h_true, noise, ctx)
@@ -226,7 +243,8 @@ class Engine(NamedTuple):
     init: Callable[[jax.Array, jax.Array], RoundState]
 
 
-def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
+def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0,
+                 wmask: Optional[jax.Array] = None) -> Engine:
     """Assemble the full jit/scan-compatible round step.
 
     Args:
@@ -235,6 +253,9 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
       mask:    (U, K_max) 1.0 for real samples, 0.0 for padding.
       k_i:     (U,) true per-worker sample counts.
       params0: parameter pytree template (defines flatten/unflatten).
+      wmask:   optional (U,) real-worker mask for ragged cohorts (padded
+               workers carry all-zero sample masks and k_i = 0); None
+               keeps the unpadded graph.
     """
     flat0, unravel = ravel_pytree(params0)
     D = flat0.shape[0]
@@ -256,12 +277,18 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0) -> Engine:
     # resolve the channel model ONCE and share the instance between the
     # stage (step) and the carry initializer (init)
     model = cfg.resolved_channel_model(U)
-    ota_stage = build_ota_stage(cfg, k_i, D, model=model)
+    ota_stage = build_ota_stage(cfg, k_i, D, model=model, wmask=wmask)
 
     def local_stage(flat, klocal):
-        """All workers' updates in one vmap-batched dispatch -> (U, D)."""
+        """All workers' updates in one vmap-batched dispatch -> (U, D).
+
+        Per-worker keys come from ``chan.worker_keys`` (fold_in by worker
+        index), which is restriction-stable under worker padding — the
+        same property the channel models guarantee — so ragged cohorts
+        reproduce each cell's standalone key streams exactly.
+        """
         params = unravel(flat)
-        keys = jax.random.split(klocal, U)
+        keys = chan.worker_keys(klocal, U)
         return jax.vmap(
             lambda x, y, m, k: ravel_pytree(local_update_masked(
                 task, params, x, y, m, cfg.lr, key=k, k_b=cfg.k_b))[0]

@@ -45,16 +45,25 @@ def _pad_axis0(a: jnp.ndarray, k_max: int) -> jnp.ndarray:
     return jnp.pad(a, pad)
 
 
-def pad_workers(worker_data: List[Tuple[Any, Any]]):
+def pad_workers(worker_data: List[Tuple[Any, Any]],
+                k_max: Optional[int] = None):
     """Worker datasets -> uniform-shape (X, Y, mask, k_i) engine batch.
 
-    Pads every worker to the fleet-wide K_max along axis 0 with sample
-    masks.  Shared by ``FLTrainer`` and the sweep engine so both feed the
-    round engine bit-identical arrays.
+    Pads every worker to ``k_max`` (default: the fleet-wide max) along
+    axis 0 with sample masks.  Shared by ``FLTrainer`` and the sweep
+    engine so both feed the round engine bit-identical arrays; ragged
+    cohorts pass an explicit cohort-wide ``k_max`` so cells with
+    different sample counts share one compiled shape (zero-padding with
+    a zero mask is bit-exact — padded samples contribute 0 to the
+    mask-weighted mean loss and its gradient).
     """
     sizes = [np.asarray(x).shape[0] for x, _ in worker_data]
     k_i = jnp.asarray(sizes, jnp.float32)
-    k_max = max(sizes)
+    if k_max is None:
+        k_max = max(sizes)
+    elif k_max < max(sizes):
+        raise ValueError(
+            f"k_max={k_max} below the largest worker ({max(sizes)})")
     X = jnp.stack([_pad_axis0(jnp.asarray(x), k_max)
                    for x, _ in worker_data])
     Y = jnp.stack([_pad_axis0(jnp.asarray(y), k_max)
@@ -66,15 +75,17 @@ def pad_workers(worker_data: List[Tuple[Any, Any]]):
 
 
 def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
-                    key, eval_xy: Optional[Tuple[Any, Any]] = None
-                    ) -> Dict[str, jax.Array]:
+                    key, eval_xy: Optional[Tuple[Any, Any]] = None,
+                    wmask=None) -> Dict[str, jax.Array]:
     """One full ``scan=True`` training run as a pure traced function.
 
     This is the single source of truth for the scan path: ``FLTrainer``
     jits it directly, and the sweep engine (``repro.sweep``) lifts it over
-    a leading experiment axis with ``jax.vmap`` — ``key`` and any
-    config scalars the sweep varies (``lr``, ``sigma2``, ``p_max``) may be
-    traced, so a whole grid of runs compiles once and executes as one
+    a leading experiment axis with ``jax.vmap`` — ``key``, any config
+    scalars the sweep varies (``lr``, ``sigma2``, ``p_max``, ``eps``,
+    ``rho``, ``L``) and even the worker data block (``X``/``Y``/``mask``/
+    ``k_i`` plus the ragged-cohort worker mask ``wmask``) may be traced,
+    so a whole grid of runs compiles once and executes as one
     device-resident computation.
 
     Returns a dict of arrays: ``flat`` (final parameters, flattened),
@@ -83,7 +94,7 @@ def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
     """
     kinit, kround = jax.random.split(key)
     params = task.init(kinit)
-    engine = build_engine(task, X, Y, mask, k_i, cfg, params)
+    engine = build_engine(task, X, Y, mask, k_i, cfg, params, wmask=wmask)
     flat0, _ = ravel_pytree(params)
     state = engine.init(flat0, kround)
     collect = eval_xy is not None

@@ -11,6 +11,11 @@ iteration builds the (U, block_d) feasibility mask beta_k via eq. (44),
 reduces it over sublanes to the denominator, evaluates R_t (eqs. 35-37), and
 keeps the running argmin.  One HBM read per operand, one write per output —
 versus U materialized (U, D) candidate masks in the naive XLA lowering.
+
+``eta`` / ``numer`` / ``L`` / ``sigma2`` are TRACED operands (eta as a
+per-entry row, the other three as a (3,) SMEM scalar vector), matching
+``kernels.ota_round``: a jitted caller — or a vmapped sweep cohort that
+varies sigma2 / L per experiment — never recompiles the kernel.
 """
 
 from __future__ import annotations
@@ -20,21 +25,27 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _EPS = 1e-12
 _TOL = 1e-6  # boundary tolerance: candidate k is feasible under b_k^max
 
 
-def _kernel(h_ref, wabs_ref, ki_ref, pmax_ref,
-            b_ref, beta_ref, r_ref,
-            *, eta: float, numer: float, L: float, sigma2: float, U: int):
+def _kernel(h_ref, wabs_ref, eta_ref, ki_ref, pmax_ref, scal_ref,
+            b_ref, beta_ref, r_ref, *, U: int):
     h = h_ref[...]                        # (U, blk) | (U, 1) rank-1
     w_abs = wabs_ref[...]                 # (1, blk)
+    eta = eta_ref[...]                    # (1, blk)
     k_i = ki_ref[...]                     # (U, 1)
     p_max = pmax_ref[...]                 # (U, 1)
+    L = scal_ref[0]                       # (3,) SMEM: [L, sigma2, numer]
+    sigma2 = scal_ref[1]
+    numer = scal_ref[2]
 
-    # Candidate matrix, eq. (43)/(81): b_i^max per (worker, entry).
-    cand = jnp.abs(jnp.sqrt(p_max) * h / (k_i * (w_abs + eta)))  # (U, blk)
+    # Candidate matrix, eq. (43)/(81): b_i^max per (worker, entry).  k_i
+    # floored: masked workers (k_i = p_max = 0) give candidate 0, not NaN.
+    cand = jnp.abs(jnp.sqrt(p_max) * h
+                   / (jnp.maximum(k_i, _EPS) * (w_abs + eta)))   # (U, blk)
 
     best_r = jnp.full(w_abs.shape, jnp.inf, cand.dtype)          # (1, blk)
     best_b = jnp.zeros(w_abs.shape, cand.dtype)
@@ -56,10 +67,9 @@ def _kernel(h_ref, wabs_ref, ki_ref, pmax_ref,
     r_ref[...] = best_r
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "eta", "numer", "L", "sigma2", "block_d", "interpret"))
-def inflota_search(h, w_abs, k_i, p_max, *, eta: float, numer: float,
-                   L: float, sigma2: float, block_d: int = 1024,
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def inflota_search(h, w_abs, k_i, p_max, *, eta, numer,
+                   L, sigma2, block_d: int = 1024,
                    interpret: bool = True):
     """Per-entry optimal (b, beta, R) via the Theorem-4 U-point search.
 
@@ -71,8 +81,10 @@ def inflota_search(h, w_abs, k_i, p_max, *, eta: float, numer: float,
       w_abs:  (D,) |w_{t-1}|.
       k_i:    (U,) sample counts (pass K_b-filled for the SGD case).
       p_max:  (U,) power budgets.
-      eta, numer, L, sigma2: static scalars (numer = case constant C of
-        eqs. 35-37, computed by repro.core.objectives.case_numerator).
+      eta:    TRACED scalar or (D,) Assumption-4 slack.
+      numer, L, sigma2: TRACED scalars (numer = case constant C of
+        eqs. 35-37, computed by repro.core.objectives.case_numerator);
+        they ride in a (3,) SMEM vector, so none of them recompiles.
 
     Returns: (b (D,), beta (U, D), r (D,)).
     """
@@ -83,26 +95,32 @@ def inflota_search(h, w_abs, k_i, p_max, *, eta: float, numer: float,
     U = h.shape[0]
     D = w_abs.shape[0]
     dt = jnp.result_type(h.dtype, jnp.float32)
+    eta = jnp.broadcast_to(jnp.asarray(eta, dt), (D,))
     pad = (-D) % block_d
     if pad:
         if not rank1:
             h = jnp.pad(h, ((0, 0), (0, pad)), constant_values=1.0)
         w_abs = jnp.pad(w_abs, (0, pad), constant_values=1.0)
+        eta = jnp.pad(eta, (0, pad), constant_values=1.0)
     Dp = D + pad
     grid = (Dp // block_d,)
 
     h_spec = (pl.BlockSpec((U, 1), lambda i: (0, 0)) if rank1
               else pl.BlockSpec((U, block_d), lambda i: (0, i)))
-    kern = functools.partial(_kernel, eta=float(eta), numer=float(numer),
-                             L=float(L), sigma2=float(sigma2), U=U)
+    scal = jnp.stack([jnp.asarray(L, dt).reshape(()),
+                      jnp.asarray(sigma2, dt).reshape(()),
+                      jnp.asarray(numer, dt).reshape(())])
+    kern = functools.partial(_kernel, U=U)
     b, beta, r = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             h_spec,                                         # h
             pl.BlockSpec((1, block_d), lambda i: (0, i)),   # w_abs
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),   # eta
             pl.BlockSpec((U, 1), lambda i: (0, 0)),         # k_i
             pl.BlockSpec((U, 1), lambda i: (0, 0)),         # p_max
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # [L,sigma2,numer]
         ],
         out_specs=[
             pl.BlockSpec((1, block_d), lambda i: (0, i)),
@@ -115,6 +133,7 @@ def inflota_search(h, w_abs, k_i, p_max, *, eta: float, numer: float,
             jax.ShapeDtypeStruct((1, Dp), dt),
         ],
         interpret=interpret,
-    )(h.astype(dt), w_abs.astype(dt)[None, :],
-      jnp.asarray(k_i, dt)[:, None], jnp.asarray(p_max, dt)[:, None])
+    )(h.astype(dt), w_abs.astype(dt)[None, :], eta[None, :],
+      jnp.asarray(k_i, dt)[:, None], jnp.asarray(p_max, dt)[:, None],
+      scal)
     return b[0, :D], beta[:, :D], r[0, :D]

@@ -24,14 +24,15 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
 
     ``h`` is the true channel the MAC applies; the optional ``h_est`` is
     the traced CSI estimate the search/transmit inversion uses
-    (imperfect-CSI scenarios; None = perfect CSI).
+    (imperfect-CSI scenarios; None = perfect CSI).  ``L`` / ``sigma2``
+    may be traced scalars (SMEM operands — sweeping them never
+    recompiles the kernel).
     """
     if interpret is None:
         interpret = _default_interpret()
     return _round.ota_round(
         w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer, h_est=h_est,
-        L=float(L), sigma2=float(sigma2), block_d=block_d,
-        interpret=interpret)
+        L=L, sigma2=sigma2, block_d=block_d, interpret=interpret)
 
 
 def ota_aggregate(w, h, beta, b, noise, k_i, p_max,
@@ -47,13 +48,15 @@ def ota_aggregate(w, h, beta, b, noise, k_i, p_max,
 
 def inflota_search(h, w_abs, k_i, p_max, *, eta, numer, L, sigma2,
                    block_d: int = 1024, interpret: bool | None = None):
-    """Fused Theorem-4 line search (see kernels.inflota_search)."""
+    """Fused Theorem-4 line search (see kernels.inflota_search).
+
+    ``eta`` / ``numer`` / ``L`` / ``sigma2`` may all be traced.
+    """
     if interpret is None:
         interpret = _default_interpret()
     return _search.inflota_search(
-        h, w_abs, k_i, p_max, eta=float(eta), numer=float(numer),
-        L=float(L), sigma2=float(sigma2), block_d=block_d,
-        interpret=interpret)
+        h, w_abs, k_i, p_max, eta=eta, numer=numer,
+        L=L, sigma2=sigma2, block_d=block_d, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,

@@ -28,11 +28,16 @@ dense-``h`` path; (U,)-shaped operands are negligible):
   trainer's scalar-per-worker draw): both h reads drop from U*D to U,
       fused total ≈ (U + 8) D — roughly another third off at U = 20.
 
-Unlike ``kernels.inflota_search``, ``eta`` (the Assumption-4 slack,
-per entry) and ``numer`` (the case constant C, a function of the traced
-Delta_{t-1}) are ARRAY inputs here, so the whole round engine compiles
-once and runs under ``jax.jit`` / ``jax.lax.scan`` with no per-round
-recompilation or host syncs.
+EVERY scalar the round consumes is a traced operand: ``eta`` (the
+Assumption-4 slack, per entry) and ``numer`` (the case constant C, a
+function of the traced Delta_{t-1}) are arrays, and the learning
+constants ``L`` / ``sigma2`` ride with ``numer`` in a single (3,)
+scalar vector placed in SMEM (``pltpu.SMEM`` — the TPU's scalar memory,
+read before the VPU loop body).  So the whole round engine compiles once
+and runs under ``jax.jit`` / ``jax.lax.scan`` with no per-round
+recompilation or host syncs, and the sweep engine can vmap a cohort that
+varies sigma2 / L per experiment over ONE kernel compilation instead of
+baking each value into its own executable.
 
 Outputs are the per-entry reductions the trainer actually consumes —
 w_hat, b, sum_i K_eff beta (descale denominator), sum_i K_i beta (the
@@ -46,15 +51,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _EPS = 1e-12
 _TOL = 1e-6  # boundary tolerance: candidate k is feasible under b_k^max
 
 
 def _kernel(w_ref, h_ref, hest_ref, wabs_ref, eta_ref, z_ref,
-            keff_ref, ki_ref, pmax_ref, numer_ref,
+            keff_ref, ki_ref, pmax_ref, scal_ref,
             what_ref, b_ref, denk_ref, deni_ref, sel_ref,
-            *, L: float, sigma2: float, U: int):
+            *, U: int):
     w = w_ref[...]            # (U, blk)
     h = h_ref[...]            # (U, blk) dense | (U, 1) rank-1 — TRUE gains
     h_est = hest_ref[...]     # same shapes — CSI estimate (== h if perfect)
@@ -64,13 +70,21 @@ def _kernel(w_ref, h_ref, hest_ref, wabs_ref, eta_ref, z_ref,
     k_eff = keff_ref[...]     # (U, 1)
     k_i = ki_ref[...]         # (U, 1)
     p_max = pmax_ref[...]     # (U, 1)
-    numer = numer_ref[...]    # (1, 1)
+    # (3,) scalar vector in SMEM: traced [L, sigma2, numer] — swept per
+    # experiment without recompiling the kernel
+    L = scal_ref[0]
+    sigma2 = scal_ref[1]
+    numer = scal_ref[2]
 
     sqrt_p = jnp.sqrt(p_max)
 
     # ---- Theorem-4 line search, eqs. (43)-(44): candidates + U-point argmin
-    # The PS searches on what it can observe: the CSI estimate.
-    cand = jnp.abs(sqrt_p * h_est / (k_eff * (w_abs + eta)))     # (U, blk)
+    # The PS searches on what it can observe: the CSI estimate.  k_eff is
+    # floored so MASKED workers (ragged cohorts hand in k_eff = p_max = 0)
+    # produce candidate 0 — never selected — instead of a 0/0 NaN; real
+    # workers (k_eff >= 1) are bit-identical to the unguarded form.
+    cand = jnp.abs(sqrt_p * h_est
+                   / (jnp.maximum(k_eff, _EPS) * (w_abs + eta)))  # (U, blk)
     best_r = jnp.full(w_abs.shape, jnp.inf, cand.dtype)          # (1, blk)
     best_b = jnp.zeros(w_abs.shape, cand.dtype)
     best_beta = jnp.zeros(cand.shape, cand.dtype)
@@ -99,10 +113,9 @@ def _kernel(w_ref, h_ref, hest_ref, wabs_ref, eta_ref, z_ref,
     sel_ref[...] = jnp.sum(best_beta, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "L", "sigma2", "block_d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
-              *, h_est=None, L: float, sigma2: float, block_d: int = 1024,
+              *, h_est=None, L, sigma2, block_d: int = 1024,
               interpret: bool = True):
     """Fused Theorem-4 search + OTA transmit/aggregate, one VMEM pass.
 
@@ -125,7 +138,9 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
               the estimate while the superposition applies the true ``h``
               (imperfect-CSI scenarios, traced per round).  None =
               perfect CSI.
-      L, sigma2: static learning constants.
+      L, sigma2: learning constants — TRACED scalars (floats work too):
+              they enter the kernel through a (3,) SMEM scalar vector
+              together with ``numer``, so sweeping them never recompiles.
 
     Returns (w_hat, b, den_keff, den_ki, sel), each (D,):
       w_hat:    PS estimate (0 where no worker selected).
@@ -164,9 +179,13 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
 
     row = pl.BlockSpec((1, block_d), lambda i: (0, i))
     col = pl.BlockSpec((U, 1), lambda i: (0, 0))
-    one = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    # traced [L, sigma2, numer] live in SMEM (scalar memory): available to
+    # every grid step without occupying VMEM lanes
+    scal = jnp.stack([jnp.asarray(L, dt).reshape(()),
+                      jnp.asarray(sigma2, dt).reshape(()),
+                      jnp.asarray(numer, dt).reshape(())])
 
-    kern = functools.partial(_kernel, L=float(L), sigma2=float(sigma2), U=U)
+    kern = functools.partial(_kernel, U=U)
     what, b, denk, deni, sel = pl.pallas_call(
         kern,
         grid=grid,
@@ -180,7 +199,7 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
             col,                                            # k_eff
             col,                                            # k_i
             col,                                            # p_max
-            one,                                            # numer
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # [L,sigma2,numer]
         ],
         out_specs=[row, row, row, row, row],
         out_shape=[jax.ShapeDtypeStruct((1, Dp), dt)] * 5,
@@ -188,5 +207,5 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
     )(w.astype(dt), h, h_est, w_abs.astype(dt)[None, :], eta[None, :],
       noise.astype(dt)[None, :], jnp.asarray(k_eff, dt)[:, None],
       jnp.asarray(k_i, dt)[:, None], jnp.asarray(p_max, dt)[:, None],
-      jnp.asarray(numer, dt).reshape(1, 1))
+      scal)
     return (what[0, :D], b[0, :D], denk[0, :D], deni[0, :D], sel[0, :D])

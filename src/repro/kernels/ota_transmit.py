@@ -60,7 +60,10 @@ def ota_transmit_aggregate(w, h, beta, b, noise, k_i, p_max,
       h, beta:    (U, D) float arrays, or (U, 1) / (U,) for the rank-1
                   fast path (scalar-per-worker gain / selection — each
                   read once per worker instead of once per entry).
-                  ``h`` is the TRUE gain the MAC applies.
+                  ``h`` is the TRUE gain the MAC applies.  Masked
+                  (ragged-cohort-padded) workers arrive with k_i = 0 and
+                  a zeroed beta row: their amp and denominator
+                  contributions vanish without any special casing here.
       b, noise:   (D,) float arrays.
       k_i, p_max: (U,) float arrays.
       h_est:      optional CSI estimate (same shape conventions as ``h``)

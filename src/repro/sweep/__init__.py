@@ -1,21 +1,27 @@
 """Vectorized sweep engine: whole experiment grids as sharded computations.
 
 ``SweepSpec`` declares a grid over axes (seed, policy, channel, sigma2,
-U, lr, ...).  ``run_spec`` partitions it into vmappable cohorts — cells
-that share every *static* field (policy / channel structure, shapes,
-rounds) — and executes each cohort as ONE jitted computation:
-``fl.trainer.scan_experiment`` lifted over a leading experiment axis with
-``jax.vmap``, the experiment axis sharded across the device mesh
-(``repro.sweep.shard``).  Results are cached content-addressed
-(``repro.sweep.store``) so unchanged cells are cache hits on re-runs.
+U, eps, rho, lr, ...).  ``run_spec`` partitions it into vmappable
+cohorts — cells that share every *static* field (policy / channel
+structure, task, rounds) — and executes each cohort as ONE jitted
+computation: ``fl.trainer.scan_experiment`` lifted over a leading
+experiment axis with ``jax.vmap``, the experiment axis sharded across
+the device mesh (``repro.sweep.shard``).  Scalars (sigma2, eps, rho, L,
+lr, p_max) vectorize as traced operands; worker-fleet axes (U, k_bar,
+data_seed) merge into RAGGED cohorts via worker padding + masks, so a
+whole U x eps x sigma2 grid is one compile per backend.  Results are
+cached content-addressed (``repro.sweep.store``) so unchanged cells are
+cache hits on re-runs.
 
 CLI: ``python -m repro.sweep --task linreg --axis seed=0:8
---axis policy=inflota,random --rounds 100``.
+--axis policy=inflota,random --rounds 100`` (``--dry-run`` prints the
+cohort plan).  Authoring guide: ``docs/sweeps.md``.
 """
 
 from repro.sweep.grid import (Cohort, SweepSpec, cells, cohorts,
-                              run_cohort, run_spec)
+                              result_by, run_cohort, run_spec)
 from repro.sweep.store import SweepStore, cell_hash, long_rows
 
-__all__ = ["SweepSpec", "Cohort", "cells", "cohorts", "run_cohort",
-           "run_spec", "SweepStore", "cell_hash", "long_rows"]
+__all__ = ["SweepSpec", "Cohort", "cells", "cohorts", "result_by",
+           "run_cohort", "run_spec", "SweepStore", "cell_hash",
+           "long_rows"]

@@ -81,8 +81,9 @@ def build_spec(args) -> SweepSpec:
         name, values = parse_axis(a)
         axes[name] = values
     for field in ("task", "U", "k_bar", "data_seed", "rounds", "lr",
-                  "sigma2", "p_max", "policy", "channel", "case", "k_b",
-                  "backend", "eval_every", "seed"):
+                  "sigma2", "p_max", "eps", "rho", "L", "policy",
+                  "channel", "case", "k_b", "backend", "eval_every",
+                  "seed"):
         v = getattr(args, field)
         if v is not None:
             base[field] = v
@@ -91,6 +92,59 @@ def build_spec(args) -> SweepSpec:
     if args.tail is not None:
         tail = args.tail
     return SweepSpec(axes=axes, base=base, eval=do_eval, tail=tail)
+
+
+def format_plan(cell_list, plan) -> List[str]:
+    """Human-readable cohort partition: which cells share one compile.
+
+    One block per cohort: the static fields that pin it (non-defaults
+    only), the axes that vectorize INSIDE it (traced scalar operands and
+    ragged data axes), and the grid indices of its member cells — so a
+    user can see exactly why the grid compiles ``len(plan)`` times.
+    """
+    from repro.sweep.grid import _SCALARS, DATA_AXES   # internal layout
+
+    lines = [f"# plan: {len(cell_list)} cells -> {len(plan)} cohort(s), "
+             f"one compile each"]
+    for n, co in enumerate(plan):
+        pins = {k: v for k, v in co.static.items() if DEFAULTS.get(k) != v}
+        # ragged-mergeable cohorts drop DATA_AXES from the static key;
+        # uniform non-default values still pin the fleet — show them
+        for name in DATA_AXES:
+            if name not in co.static:
+                vals = {c[name] for c in co.cells}
+                if len(vals) == 1 and DEFAULTS.get(name) not in vals:
+                    pins[name] = next(iter(vals))
+        static = " ".join(f"{k}={v}" for k, v in sorted(pins.items())) \
+            or "(all defaults)"
+        vec = []
+        for name in _SCALARS + ("seed",):
+            vals = {c[name] for c in co.cells}
+            if len(vals) > 1:
+                vec.append(f"{name}x{len(vals)}")
+        for name in DATA_AXES:
+            vals = {c[name] for c in co.cells}
+            if len(vals) > 1:
+                vec.append(f"{name}x{len(vals)}(ragged)")
+        tag = " ragged" if co.ragged else ""
+        lines.append(f"# cohort {n} x{len(co)}{tag}: {static}")
+        if vec:
+            lines.append(f"#   vectorized: {' '.join(vec)}")
+        lines.append(f"#   cells: {_ranges(co.indices)}")
+    return lines
+
+
+def _ranges(idx: List[int]) -> str:
+    """Compact '0-3,7,9-11' rendering of sorted cell indices."""
+    out, i = [], 0
+    s = sorted(idx)
+    while i < len(s):
+        j = i
+        while j + 1 < len(s) and s[j + 1] == s[j] + 1:
+            j += 1
+        out.append(str(s[i]) if i == j else f"{s[i]}-{s[j]}")
+        i = j + 1
+    return ",".join(out)
 
 
 def main(argv=None) -> int:
@@ -108,7 +162,7 @@ def main(argv=None) -> int:
                   "eval_every", "seed"):
         ap.add_argument(f"--{field.replace('_', '-')}", dest=field,
                         type=int, default=None)
-    for field in ("lr", "sigma2", "p_max"):
+    for field in ("lr", "sigma2", "p_max", "eps", "rho", "L"):
         ap.add_argument(f"--{field.replace('_', '-')}", dest=field,
                         type=float, default=None)
     ap.add_argument("--tail", type=int, default=None,
@@ -141,11 +195,8 @@ def main(argv=None) -> int:
         print(f"# grid: {len(cell_list)} cells in {len(plan)} "
               f"vmappable cohort(s)", file=sys.stderr)
     if args.dry_run:
-        for co in plan:
-            print(f"# cohort x{len(co)}: "
-                  + " ".join(f"{k}={v}" for k, v in sorted(
-                      co.static.items()) if DEFAULTS.get(k) != v),
-                  file=sys.stderr)
+        for line in format_plan(cell_list, plan):
+            print(line, file=sys.stderr)
         return 0
 
     store = store_lib.SweepStore(args.store) if args.store else None

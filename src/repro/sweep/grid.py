@@ -3,16 +3,38 @@
 A ``SweepSpec`` names a grid: ``axes`` (axis name -> values, crossed) over
 a ``base`` of fixed fields.  Cells split into *cohorts* by their static
 fields — everything that changes compiled structure (policy / channel
-model, U, k_bar, data_seed, rounds, case, k_b, backend).  The remaining
-VECTOR_AXES (``seed``, ``lr``, ``sigma2``, ``p_max``) become traced
-per-experiment operands, so a whole cohort is ONE computation:
+model, task, rounds, case, k_b, backend).  Everything else becomes a
+traced per-experiment operand, so a whole cohort is ONE computation:
 ``fl.trainer.scan_experiment`` lifted over a leading experiment axis with
 ``jax.vmap``, jitted once, and sharded over the device mesh by
 ``repro.sweep.shard.run_sharded``.
 
+Two families of axes vectorize inside a cohort:
+
+  * VECTOR_AXES — scalars (``seed``, ``lr``, ``sigma2``, ``p_max``,
+    ``eps``, ``rho``, ``L``).  ``eps`` / ``rho`` re-parameterize the
+    channel factory per experiment (``ImperfectCSI.eps`` /
+    ``GaussMarkovFading.rho`` accept traced scalars); ``sigma2`` / ``L``
+    reach the Pallas kernels as SMEM scalar operands, so even
+    ``backend="pallas"`` cohorts sweep them without recompiling.
+  * DATA_AXES — ``U``, ``k_bar``, ``data_seed``.  Cells whose worker
+    fleets differ merge into a RAGGED cohort: every cell's worker data is
+    padded to the cohort-wide (U_max, K_max) with per-experiment worker
+    masks (``wmask``), and the engine silences padded workers end to end
+    (zero k_i / p_max, masked selection).  All worker-axis randomness is
+    restriction-stable (``repro.core.channel.worker_keys``), so a padded
+    cell is BIT-EXACT against its standalone ``FLTrainer`` run.
+
+Cells that can't be ragged-merged stay shape-exact: minibatch cells
+(``k_b``: the sample draw depends on the padded K_max), the SGD case
+(its numerator counts workers by shape), and channels whose model
+reports ``ragged_exact = False`` (e.g. pathloss — ensemble-normalized).
+
 Compared to the old benchmark drivers (one ``FLTrainer`` per cell: a
 fresh trace + compile + U-round dispatch chain each), a cohort of E
-experiments compiles once and runs device-resident end to end.
+experiments compiles once and runs device-resident end to end — and a
+full U x eps x sigma2 grid is ONE compile per backend instead of one per
+(U, eps) combination.
 """
 
 from __future__ import annotations
@@ -25,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import channel as chan_lib
 from repro.core.channel import ChannelConfig
 from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case
@@ -33,10 +56,22 @@ from repro.fl.trainer import FLConfig, pad_workers, scan_experiment
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
 
-# Cell fields that may vary WITHIN a cohort: they enter the computation as
-# traced per-experiment operands.  Everything else is static (changes the
-# compiled structure) and partitions the grid.
-VECTOR_AXES = ("seed", "lr", "sigma2", "p_max")
+# Cell fields that may vary WITHIN a cohort as traced scalar operands.
+VECTOR_AXES = ("seed", "lr", "sigma2", "p_max", "eps", "rho", "L")
+
+# The pre-ragged (PR 3) vector set: eps / rho / L were static model
+# fields and every distinct value compiled its own cohort.  Kept for the
+# before/after cohort-count benchmark (``cohorts(..., legacy=True)``).
+LEGACY_VECTOR_AXES = ("seed", "lr", "sigma2", "p_max")
+
+# Cell fields that reshape the worker fleet: they merge into a ragged
+# cohort (padded worker axis + per-experiment masks) when the cell is
+# ragged-mergeable (see ``ragged_mergeable``).
+DATA_AXES = ("U", "k_bar", "data_seed")
+
+# Scalar fields handled by the uniform/varying split in ``run_cohort``.
+# The trailing three may be None (= "not set"): None never vectorizes.
+_SCALARS = ("lr", "sigma2", "p_max", "eps", "rho", "L")
 
 DEFAULTS: Dict[str, Any] = {
     "task": "linreg",        # repro.data.tasks registry name
@@ -51,13 +86,16 @@ DEFAULTS: Dict[str, Any] = {
     "k_b": None,
     "backend": "auto",
     "select_prob": 0.5,
-    "constants": None,       # None -> LearningConstants(sigma2=sigma2)
+    "constants": None,       # None -> LearningConstants(sigma2=sigma2[, L])
     "amplitude": False,
     "h_floor": 1e-3,
     "seed": 0,
     "lr": 0.1,
     "sigma2": 1e-4,
     "p_max": 10.0,
+    "eps": None,             # CSI error: channel factory kwarg (traced)
+    "rho": None,             # fading correlation: factory kwarg (traced)
+    "L": None,               # smoothness constant: None = constants default
 }
 
 
@@ -99,6 +137,18 @@ class Cohort:
     def __len__(self) -> int:
         return len(self.cells)
 
+    def data_keys(self) -> List[Tuple]:
+        """Unique (task, U, k_bar, data_seed) configs, cohort order."""
+        seen: Dict[Tuple, None] = {}
+        for c in self.cells:
+            seen.setdefault(_data_key(c))
+        return list(seen)
+
+    @property
+    def ragged(self) -> bool:
+        """True when the cohort spans more than one worker-fleet shape."""
+        return len(self.data_keys()) > 1
+
 
 def cells(spec: SweepSpec) -> List[Dict[str, Any]]:
     """The full grid, one dict per cell, axes crossed in insertion order."""
@@ -116,17 +166,49 @@ def cells(spec: SweepSpec) -> List[Dict[str, Any]]:
     return out
 
 
-def _static_key(cell: Dict[str, Any]) -> Tuple:
-    return tuple((k, cell[k]) for k in sorted(cell) if k not in VECTOR_AXES)
+def _data_key(cell: Dict[str, Any]) -> Tuple:
+    return (cell["task"], cell["U"], cell["k_bar"], cell["data_seed"])
+
+
+def ragged_mergeable(cell: Dict[str, Any]) -> bool:
+    """Whether this cell may join a ragged (padded-worker-axis) cohort.
+
+    Three exclusions, each because padding would NOT be bit-exact against
+    the cell's standalone run:
+
+      * ``k_b`` minibatch sampling draws from the padded sample block, so
+        the draw depends on the cohort's K_max;
+      * the SGD objective's numerator counts workers by array shape
+        (eq. 37's leading U), which padding would inflate;
+      * channel models that report ``ragged_exact = False`` (cross-worker
+        coupling, e.g. pathloss ensemble normalization).
+    """
+    if cell["k_b"] is not None or _resolved_case(cell["case"]) is Case.SGD:
+        return False
+    return chan_lib.ragged_exact(cell["channel"])
+
+
+def _static_key(cell: Dict[str, Any], legacy: bool = False) -> Tuple:
+    drop = set(LEGACY_VECTOR_AXES if legacy else VECTOR_AXES)
+    if not legacy and ragged_mergeable(cell):
+        drop |= set(DATA_AXES)
+    return tuple((k, cell[k]) for k in sorted(cell) if k not in drop)
 
 
 def cohorts(cell_list: List[Dict[str, Any]],
-            indices: Optional[List[int]] = None) -> List[Cohort]:
-    """Group cells by static key, preserving grid order within a cohort."""
+            indices: Optional[List[int]] = None, *,
+            legacy: bool = False) -> List[Cohort]:
+    """Group cells by static key, preserving grid order within a cohort.
+
+    ``legacy=True`` reproduces the pre-ragged (PR 3) partitioning —
+    U / k_bar / data_seed / eps / rho / L as static fields — kept for the
+    cohort-count before/after benchmark and for debugging shape-exact
+    plans.
+    """
     indices = list(range(len(cell_list))) if indices is None else indices
     groups: Dict[Tuple, Cohort] = {}
     for idx, cell in zip(indices, cell_list):
-        key = _static_key(cell)
+        key = _static_key(cell, legacy)
         if key not in groups:
             groups[key] = Cohort(
                 static={k: v for k, v in key}, cells=[], indices=[])
@@ -139,26 +221,123 @@ def _resolved_case(case) -> Case:
     return case if isinstance(case, Case) else Case(case)
 
 
-def _cohort_cfg(static: Dict[str, Any], lr, sigma2, p_max) -> FLConfig:
-    """FLConfig for one experiment; lr/sigma2/p_max may be traced."""
-    chanc = ChannelConfig(sigma2=sigma2, p_max=p_max,
+def _split_scalars(cohort_cells: List[Dict[str, Any]]
+                   ) -> Tuple[Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """Partition the scalar cell fields into uniform values and traced
+    per-experiment operand arrays (only fields that actually vary trace —
+    uniform scalars stay Python floats so the per-run graph matches
+    FLTrainer's exactly)."""
+    uniform: Dict[str, Any] = {}
+    varying: Dict[str, jnp.ndarray] = {}
+    for name in _SCALARS:
+        vals = [c[name] for c in cohort_cells]
+        if any(v is None for v in vals):
+            if not all(v is None for v in vals):
+                raise ValueError(
+                    f"cell field {name!r} mixes None with numbers inside "
+                    f"one cohort; use an explicit number (e.g. 0.0) for "
+                    f"every cell")
+            uniform[name] = None
+        elif len({float(v) for v in vals}) == 1:
+            uniform[name] = float(vals[0])
+        else:
+            varying[name] = jnp.asarray([float(v) for v in vals],
+                                        jnp.float32)
+    return uniform, varying
+
+
+def _cohort_cfg(static: Dict[str, Any], s: Dict[str, Any],
+                u: int) -> FLConfig:
+    """FLConfig for one experiment of a cohort.
+
+    ``s`` maps scalar field -> value (Python float, None, or a traced
+    per-experiment scalar); ``u`` is the worker count the channel model
+    is sized for (the cohort's U_max when ragged).
+    """
+    chanc = ChannelConfig(sigma2=s["sigma2"], p_max=s["p_max"],
                           amplitude=static["amplitude"],
                           h_floor=static["h_floor"])
+    model = static["channel"]
+    factory_kw = {k: s[k] for k in ("eps", "rho") if s[k] is not None}
+    if factory_kw:
+        # eps / rho re-parameterize the channel per experiment; resolve
+        # here (build_engine would resolve without the kwargs)
+        model = chan_lib.resolve_model(model, u, chanc, **factory_kw)
     constants = static["constants"]
     if constants is None:
-        constants = LearningConstants(sigma2=sigma2)
-    return FLConfig(rounds=static["rounds"], lr=lr,
+        ckw: Dict[str, Any] = {"sigma2": s["sigma2"]}
+        if s["L"] is not None:
+            ckw["L"] = s["L"]
+        constants = LearningConstants(**ckw)
+    elif s["L"] is not None:
+        raise ValueError(
+            "cell field 'L' conflicts with explicitly provided constants; "
+            "set L through LearningConstants OR the cell field, not both")
+    return FLConfig(rounds=static["rounds"], lr=s["lr"],
                     policy=static["policy"],
                     case=_resolved_case(static["case"]),
                     k_b=static["k_b"], channel=chanc,
-                    channel_model=static["channel"], constants=constants,
+                    channel_model=model, constants=constants,
                     select_prob=static["select_prob"],
                     backend=static["backend"], scan=True,
                     eval_every=static["eval_every"])
 
 
+def _pad_worker_axis(a: jnp.ndarray, u_max: int) -> jnp.ndarray:
+    pad = [(0, u_max - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+def _ragged_batch(cohort: Cohort, built: Dict[Tuple, Any], do_eval: bool,
+                  eval_override) -> Tuple[Dict[str, jnp.ndarray], bool]:
+    """Per-experiment data arrays for a ragged cohort.
+
+    Every cell's (X, Y, mask, k_i) is padded to the cohort-wide
+    (U_max, K_max) and stacked on a leading experiment axis, with a
+    (U_max,) worker mask per experiment.  Returns (batch, batch_eval):
+    the per-cell test splits stack too (same per-task n_test) unless an
+    ``eval_override`` supplies one shared set.
+    """
+    if any(not isinstance(c["channel"], (str, type(None)))
+           for c in cohort.cells):
+        raise ValueError(
+            "ragged cohorts need a registry channel name or None: an "
+            "instance is sized for one worker count and cannot span "
+            "cells with different U")
+    u_max = max(len(built[k][1]) for k in cohort.data_keys())
+    k_max = max(int(np.asarray(x).shape[0])
+                for key in cohort.data_keys()
+                for x, _ in built[key][1])
+    per_key: Dict[Tuple, Tuple] = {}
+    for key in cohort.data_keys():
+        _, workers, test = built[key]
+        X, Y, mask, k_i = pad_workers(workers, k_max=k_max)
+        u = len(workers)
+        wmask = jnp.asarray(
+            np.arange(u_max) < u, jnp.float32)
+        per_key[key] = (
+            _pad_worker_axis(X, u_max), _pad_worker_axis(Y, u_max),
+            _pad_worker_axis(mask, u_max), _pad_worker_axis(k_i, u_max),
+            wmask, test)
+
+    def stack(i):
+        return jnp.stack([per_key[_data_key(c)][i] for c in cohort.cells])
+
+    batch = {"X": stack(0), "Y": stack(1), "mask": stack(2),
+             "k_i": stack(3), "wmask": stack(4)}
+    batch_eval = do_eval and eval_override is None
+    if batch_eval:
+        batch["ex"] = jnp.stack([
+            jnp.asarray(per_key[_data_key(c)][5][0]) for c in cohort.cells])
+        batch["ey"] = jnp.stack([
+            jnp.asarray(per_key[_data_key(c)][5][1]) for c in cohort.cells])
+    return batch, batch_eval
+
+
 def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
-               mesh=None, eval_data=None) -> List[Dict[str, Any]]:
+               mesh=None, eval_data=None,
+               timings: Optional[Dict[str, float]] = None
+               ) -> List[Dict[str, Any]]:
     """Execute one cohort as a single vmapped (and mesh-sharded) program.
 
     Returns one result dict per cell (cohort order): ``cell``,
@@ -166,39 +345,74 @@ def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
     ``flat`` (final parameters, in-memory only — the store persists
     metrics + history).  ``eval_data`` overrides the task's own test
     split (e.g. Fig. 4's fixed held-out set shared across U).
+
+    ``timings`` (single-device only): a dict whose ``compile_s`` /
+    ``run_s`` entries are INCREMENTED with this cohort's trace+compile
+    wall time and its post-compile execution wall time — the numbers
+    ``benchmarks/sweep_bench.py`` commits for the cohort-merge
+    before/after comparison.
     """
     st = cohort.static
-    task, workers, test = build_task_data(
-        st["task"], U=st["U"], k_bar=st["k_bar"], data_seed=st["data_seed"])
-    if eval_data is not None:
-        test = eval_data
-    X, Y, mask, k_i = pad_workers(workers)
+    built = {key: build_task_data(key[0], U=key[1], k_bar=key[2],
+                                  data_seed=key[3])
+             for key in cohort.data_keys()}
+    task = next(iter(built.values()))[0]
+    ragged = cohort.ragged
 
     keys = jnp.stack([jax.random.PRNGKey(int(c["seed"]))
                       for c in cohort.cells])
-    # a scalar becomes a traced per-experiment operand only when it varies
-    # within the cohort; uniform scalars stay static Python floats (this
-    # keeps the per-run graph identical to FLTrainer's, and the Pallas
-    # backend — whose kernels bake sigma2 in as a compile-time constant —
-    # usable for any cohort that doesn't sweep it)
-    uniform: Dict[str, float] = {}
-    varying: Dict[str, jnp.ndarray] = {}
-    for name in ("lr", "sigma2", "p_max"):
-        vals = [float(c[name]) for c in cohort.cells]
-        if len(set(vals)) == 1:
-            uniform[name] = vals[0]
-        else:
-            varying[name] = jnp.asarray(vals, jnp.float32)
-    eval_xy = test if do_eval else None
+    uniform, varying = _split_scalars(cohort.cells)
+    u_model = (max(len(built[k][1]) for k in cohort.data_keys()) if ragged
+               else len(built[cohort.data_keys()[0]][1]))
 
-    def run_one(batch):
-        s = {**uniform, **{n: batch[n] for n in varying}}
-        cfg = _cohort_cfg(st, s["lr"], s["sigma2"], s["p_max"])
-        return scan_experiment(task, X, Y, mask, k_i, cfg, batch["key"],
-                               eval_xy=eval_xy)
+    if ragged:
+        data_batch, batch_eval = _ragged_batch(cohort, built, do_eval,
+                                               eval_data)
+        shared_eval = (jnp.asarray(eval_data[0]), jnp.asarray(eval_data[1])
+                       ) if (do_eval and eval_data is not None) else None
 
-    out = shard_lib.run_sharded(jax.vmap(run_one),
-                                {"key": keys, **varying}, mesh)
+        def run_one(batch):
+            s = {**uniform, **{n: batch[n] for n in varying}}
+            cfg = _cohort_cfg(st, s, u_model)
+            eval_xy = ((batch["ex"], batch["ey"]) if batch_eval
+                       else shared_eval)
+            return scan_experiment(task, batch["X"], batch["Y"],
+                                   batch["mask"], batch["k_i"], cfg,
+                                   batch["key"], eval_xy=eval_xy,
+                                   wmask=batch["wmask"])
+
+        full_batch = {"key": keys, **varying, **data_batch}
+    else:
+        # uniform-fleet cohorts keep the data in the closure (not
+        # batched), so their per-run graph — and results — are identical
+        # to the pre-ragged engine
+        _, workers, test = built[cohort.data_keys()[0]]
+        X, Y, mask, k_i = pad_workers(workers)
+        if eval_data is not None:
+            test = eval_data
+        eval_xy = ((jnp.asarray(test[0]), jnp.asarray(test[1]))
+                   if do_eval else None)
+
+        def run_one(batch):
+            s = {**uniform, **{n: batch[n] for n in varying}}
+            cfg = _cohort_cfg(st, s, u_model)
+            return scan_experiment(task, X, Y, mask, k_i, cfg,
+                                   batch["key"], eval_xy=eval_xy)
+
+        full_batch = {"key": keys, **varying}
+
+    if timings is not None and mesh is None:
+        import time
+        fn = jax.jit(jax.vmap(run_one))
+        t0 = time.time()
+        compiled = fn.lower(full_batch).compile()
+        t1 = time.time()
+        out = jax.block_until_ready(compiled(full_batch))
+        t2 = time.time()
+        timings["compile_s"] = timings.get("compile_s", 0.0) + (t1 - t0)
+        timings["run_s"] = timings.get("run_s", 0.0) + (t2 - t1)
+    else:
+        out = shard_lib.run_sharded(jax.vmap(run_one), full_batch, mesh)
     out = {k: np.asarray(v) for k, v in out.items()}
 
     results = []
@@ -220,8 +434,9 @@ def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
 
 
 def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
-             mesh=None, eval_data=None,
-             verbose: bool = False) -> List[Dict[str, Any]]:
+             mesh=None, eval_data=None, verbose: bool = False,
+             timings: Optional[Dict[str, float]] = None
+             ) -> List[Dict[str, Any]]:
     """Run a whole grid: cache lookups, cohort batching, store writes.
 
     Returns one result per cell in grid order.  Cached cells are served
@@ -254,13 +469,16 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
               file=sys.stderr)
     for cohort in cohorts(pending_cells, pending_idx):
         if verbose:
-            print(f"# cohort x{len(cohort)}: "
+            u_vals = sorted({c["U"] for c in cohort.cells})
+            print(f"# cohort x{len(cohort)}"
+                  f"{' (ragged)' if cohort.ragged else ''}: "
                   f"policy={cohort.static['policy']} "
                   f"channel={cohort.static['channel']} "
-                  f"U={cohort.static['U']} rounds={cohort.static['rounds']}",
+                  f"U={u_vals if len(u_vals) > 1 else u_vals[0]} "
+                  f"rounds={cohort.static['rounds']}",
                   file=sys.stderr)
         outs = run_cohort(cohort, do_eval=spec.eval, tail=spec.tail,
-                          mesh=mesh, eval_data=eval_data)
+                          mesh=mesh, eval_data=eval_data, timings=timings)
         for idx, res in zip(cohort.indices, outs):
             results[idx] = res
             if store is not None:

@@ -24,7 +24,10 @@ from typing import Any, Dict, Iterable, List, Optional
 
 import numpy as np
 
-_SCHEMA = 1          # bump to invalidate every cached cell
+_SCHEMA = 2          # bump to invalidate every cached cell
+#   2: cells gained the eps / rho / L scalar fields (single-compile
+#      cohorts) and worker-axis randomness became restriction-stable,
+#      which changes every trajectory — old entries must not be served
 
 
 def jsonable(v: Any) -> Any:

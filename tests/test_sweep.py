@@ -86,10 +86,30 @@ def test_static_axes_partition_cohorts():
     cl = cells(spec)
     assert len(cl) == 8
     cos = cohorts(cl)
-    assert len(cos) == 4                       # policy x U static split
-    assert all(len(c) == 2 for c in cos)       # seeds ride together
+    assert len(cos) == 2                       # policy splits; U is ragged
+    assert all(len(c) == 4 for c in cos)       # seeds + U ride together
+    assert all(c.ragged for c in cos)
     # grid order is preserved through cohort execution order bookkeeping
     assert sorted(i for c in cos for i in c.indices) == list(range(8))
+    # the pre-ragged partitioning is still reachable (before/after bench)
+    legacy = cohorts(cl, legacy=True)
+    assert len(legacy) == 4                    # policy x U static split
+    assert not any(c.ragged for c in legacy)
+
+
+def test_ragged_exclusions_stay_shape_exact():
+    """Minibatch (k_b) cells and pathloss channels must not ragged-merge:
+    their numerics depend on the padded shapes."""
+    spec = SweepSpec(axes={"U": (4, 6)},
+                     base={"k_bar": K_BAR, "rounds": 2, "k_b": 4})
+    assert len(cohorts(cells(spec))) == 2
+    spec = SweepSpec(axes={"U": (4, 6)},
+                     base={"k_bar": K_BAR, "rounds": 2,
+                           "channel": "pathloss"})
+    assert len(cohorts(cells(spec))) == 2
+    # ... while the default channel merges
+    spec = SweepSpec(axes={"U": (4, 6)}, base={"k_bar": K_BAR, "rounds": 2})
+    assert len(cohorts(cells(spec))) == 1
 
 
 def test_unknown_field_rejected():

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Docs CI: markdown link check + extract-and-run fenced Python snippets.
+
+Two failure classes this guards against:
+
+  * rotted links — every relative link target in README.md and docs/
+    must exist in the tree (http(s)/mailto links are not fetched;
+    pure-anchor links are skipped);
+  * rotted examples — every ```python fence in docs/ runs in a fresh
+    subprocess with PYTHONPATH=src and must exit 0.  Put
+    ``<!-- docs: no-run -->`` on the line directly above a fence to
+    exempt it (e.g. deliberately partial protocol sketches).
+
+Usage: python tools/check_docs.py [--no-run] [FILES...]
+Exit code 0 = everything resolves and runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(
+    r"^(?P<indent>[ ]*)```(?P<lang>[A-Za-z0-9_+-]*)[^\n]*\n"
+    r"(?P<body>.*?)^(?P=indent)```[ ]*$",
+    re.DOTALL | re.MULTILINE)
+NO_RUN = "<!-- docs: no-run -->"
+
+
+def default_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def check_links(path: str, text: str) -> list[str]:
+    errors = []
+    # don't flag link-looking text inside code fences (CSV rows etc.)
+    prose = FENCE_RE.sub("", text)
+    for target in LINK_RE.findall(prose):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:                      # same-file anchor
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def python_snippets(path: str, text: str) -> list[tuple[int, str]]:
+    """(line, code) for each runnable ```python fence in ``text``."""
+    out = []
+    for m in FENCE_RE.finditer(text):
+        if m.group("lang") != "python":
+            continue
+        prefix = text[:m.start()].rstrip("\n")
+        if prefix.splitlines() and prefix.splitlines()[-1].strip() == NO_RUN:
+            continue
+        line = text[:m.start()].count("\n") + 1
+        body = m.group("body")
+        indent = m.group("indent")
+        if indent:
+            body = "".join(ln[len(indent):] if ln.startswith(indent) else ln
+                           for ln in body.splitlines(keepends=True))
+        out.append((line, body))
+    return out
+
+
+def run_snippet(path: str, line: int, code: str) -> str | None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", code], cwd=ROOT, env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        tail = proc.stderr.strip().splitlines()[-12:]
+        return (f"{os.path.relpath(path, ROOT)}:{line}: snippet failed "
+                f"(exit {proc.returncode})\n    " + "\n    ".join(tail))
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="markdown files "
+                    "(default: README.md + docs/*.md)")
+    ap.add_argument("--no-run", action="store_true",
+                    help="check links only, skip snippet execution")
+    args = ap.parse_args(argv)
+    files = [os.path.abspath(f) for f in args.files] or default_files()
+
+    errors: list[str] = []
+    n_links = n_snips = 0
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        errs = check_links(path, text)
+        prose = FENCE_RE.sub("", text)
+        n_links += len([t for t in LINK_RE.findall(prose)
+                        if not t.startswith(("http://", "https://"))])
+        errors += errs
+        if args.no_run or "/docs/" not in path + "/":
+            continue
+        if os.path.basename(os.path.dirname(path)) != "docs":
+            continue
+        for line, code in python_snippets(path, text):
+            n_snips += 1
+            print(f"running {os.path.relpath(path, ROOT)}:{line} ...",
+                  flush=True)
+            err = run_snippet(path, line, code)
+            if err:
+                errors.append(err)
+
+    print(f"checked {len(files)} file(s): {n_links} relative links, "
+          f"{n_snips} python snippet(s) run")
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
