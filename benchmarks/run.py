@@ -29,7 +29,11 @@ SECTIONS = {
     "theory": lambda r: theory_check.run(rounds=min(r, 60)),
     "csi": lambda r: csi_ablation.run(rounds=max(r * 4 // 5, 20)),
     "kernels": lambda r: kernels_micro.run(),
-    "sweep": lambda r: sweep_bench.run(rounds=min(r, 60)),
+    # async section: CI-speed runs get shorter grids and one rep; the
+    # committed BENCH numbers come from the module's own defaults
+    "sweep": lambda r: sweep_bench.run(
+        rounds=min(r, 60), async_rounds=min(r * 4, 400),
+        async_reps=1 if r <= 40 else 3),
     "roofline": lambda r: roofline_table.run(),
 }
 

@@ -25,11 +25,23 @@ from typing import Any, Callable, Dict, List, Tuple
 import numpy as np
 
 from repro.data import partition, synthetic
-from repro.fl.models import TaskModel, linreg_model, mlp_model
+from repro.fl.models import TaskModel, linreg_model, mlp_model, ridge_model
 
 TaskData = Tuple[TaskModel, List[Tuple[Any, Any]], Tuple[Any, Any]]
 
 _TASK_REGISTRY: Dict[str, Callable[..., TaskData]] = {}
+
+# Model dimension D per task — the cost-estimate input the async runtime
+# scheduler uses to order cohort dispatch (cells x rounds x U_max x D)
+# WITHOUT building any task data.  Unknown tasks fall back to 1: ordering
+# degrades gracefully, correctness never depends on it.
+_DIM_HINTS: Dict[str, int] = {"linreg": 3, "ridge": 8, "mlp": 50890}
+
+
+def dim_hint(name: Any, default: int = 1) -> int:
+    """Approximate flattened parameter count for a registered task."""
+    return _DIM_HINTS.get(name, default) if isinstance(name, str) \
+        else default
 
 
 def register_task(name: str):
@@ -62,6 +74,24 @@ def _linreg(U: int = 20, k_bar: int = 30, data_seed: int = 0,
     x, y = synthetic.linreg(int(np.sum(counts)) + n_test, seed=data_seed)
     workers = partition.partition(x, y, counts, seed=data_seed)
     return linreg_model(), workers, (x[-n_test:], y[-n_test:])
+
+
+@register_task("ridge")
+def _ridge(U: int = 10, k_bar: int = 40, data_seed: int = 0,
+           d: int = 8, lam: float = 0.05) -> TaskData:
+    """Theory-check workload: ridge least squares with uniform K_i = k_bar
+    per worker, so L / mu / F(w*) are exactly computable from the global
+    (X, y) — which is returned as the "test" split on purpose: evaluating
+    ``fval`` against it reads the global objective F(w_t) per round.
+    """
+    rng = np.random.default_rng(data_seed)
+    n = U * k_bar
+    X = rng.normal(size=(n, d)) / np.sqrt(d)
+    w_true = rng.normal(size=(d,))
+    y = X @ w_true + 0.1 * rng.normal(size=(n,))
+    workers = [(X[i * k_bar:(i + 1) * k_bar], y[i * k_bar:(i + 1) * k_bar])
+               for i in range(U)]
+    return ridge_model(d, lam), workers, (X, y)
 
 
 @register_task("mlp")

@@ -43,6 +43,36 @@ def linreg_model() -> TaskModel:
     return TaskModel(init=init, loss=loss, metrics=metrics)
 
 
+def ridge_model(d: int = 8, lam: float = 0.05) -> TaskModel:
+    """Ridge-regularized linear least squares with exactly computable
+    constants — the workload of ``benchmarks/theory_check.py``:
+
+        F(w) = ||Xw - y||^2 / K + lam ||w||^2
+
+    so L = 2 lambda_max(X^T X / K) + 2 lam, mu = 2 lambda_min + 2 lam and
+    F(w*) is closed-form.  ``init`` is the deterministic w_0 = 0 the
+    Lemma-1 check starts the bound recursion from; ``metrics`` reports the
+    objective value itself (``fval``) so the empirical expected gap
+    E[F(w_t) - F*] is directly readable from sweep histories.
+    """
+
+    def init(key):
+        del key
+        return {"w": jnp.zeros((d,))}
+
+    def predict(p, x):
+        return x @ p["w"]
+
+    def loss(p, x, y):
+        return (jnp.mean((predict(p, x) - y) ** 2)
+                + lam * jnp.sum(p["w"] ** 2))
+
+    def metrics(p, x, y):
+        return {"fval": loss(p, x, y)}
+
+    return TaskModel(init=init, loss=loss, metrics=metrics)
+
+
 def mlp_model(d_in: int = 784, hidden: int = 64,
               n_classes: int = 10) -> TaskModel:
     """Paper Sec. VI-B: 784-64-10 MLP, ReLU, cross-entropy (non-convex).

@@ -89,8 +89,11 @@ def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
     device-resident computation.
 
     Returns a dict of arrays: ``flat`` (final parameters, flattened),
-    ``selected`` / ``b`` per-round stats (rounds,), and — when ``eval_xy``
-    is given — one (rounds / eval_every,) history per task metric.
+    ``selected`` / ``b`` / ``a_t`` / ``b_t`` per-round stats (rounds,) —
+    the latter two are the realized Lemma-1 terms, letting callers
+    accumulate the paper's convergence bound (``conv.gap_recursion``)
+    cohort-wide — and, when ``eval_xy`` is given, one
+    (rounds / eval_every,) history per task metric.
     """
     kinit, kround = jax.random.split(key)
     params = task.init(kinit)
@@ -106,7 +109,7 @@ def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
     state, (stats, flats) = jax.lax.scan(body, state, None,
                                          length=cfg.rounds)
     out = {"flat": state.flat, "selected": stats.selected,
-           "b": stats.b_mean}
+           "b": stats.b_mean, "a_t": stats.a_t, "b_t": stats.b_t}
     if collect:
         ex, ey = (jnp.asarray(eval_xy[0]), jnp.asarray(eval_xy[1]))
         idx = jnp.arange(0, cfg.rounds, cfg.eval_every)
@@ -183,6 +186,8 @@ class FLTrainer:
             state, stats = step(state, None)
             history["selected"].append(float(stats.selected))
             history["b"].append(float(stats.b_mean))
+            history.setdefault("a_t", []).append(float(stats.a_t))
+            history.setdefault("b_t", []).append(float(stats.b_t))
             if eval_data is not None and t % cfg.eval_every == 0:
                 m = jit_metrics(engine.unravel(state.flat), ex, ey)
                 for k, v in m.items():

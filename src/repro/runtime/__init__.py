@@ -1,0 +1,30 @@
+"""Async sweep runtime: concurrent cohort scheduling, overlapped store
+I/O, and multi-host execution.
+
+The sweep engine (``repro.sweep``) turns a grid into a handful of
+single-compile cohort computations; this package decides WHEN and WHERE
+they run:
+
+  * ``scheduler`` — orders cohorts by cost estimate (cells x rounds x
+    U_max x D), dispatches them concurrently from a pool of ``jobs``
+    threads with a bounded in-flight window (``jobs + dispatch_ahead``),
+    and resolves completions as they become ready rather than in
+    submission order.
+  * ``writer`` — a background thread draining a completion queue:
+    ``device_get`` + result finalization + ``SweepStore.put`` happen off
+    the dispatch path, so store I/O overlaps device compute.
+  * ``multihost`` — under ``jax.distributed``, partitions the cohort
+    plan across hosts (deterministic cost-balanced assignment), runs
+    each host's slice through the same scheduler over its local mesh,
+    and merges the per-host stores into one result set.
+
+Scheduling never changes results: every cohort runs the exact prepared
+computation the serial path would (``repro.sweep.grid.prepare_cohort``),
+so ``jobs >= 2`` output is identical per cell — same store hashes, same
+metrics — to ``jobs = 1``.  Semantics guide: ``docs/runtime.md``.
+"""
+
+from repro.runtime.scheduler import run_cohorts, schedule
+from repro.runtime.writer import Completion, CompletionWriter
+
+__all__ = ["run_cohorts", "schedule", "Completion", "CompletionWriter"]

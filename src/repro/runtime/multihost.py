@@ -1,0 +1,228 @@
+"""Multi-host sweep execution: per-host cohort slices + a merged store.
+
+A grid's cohort plan is deterministic, so every host can compute it
+independently and agree on who runs what without any communication:
+cohorts are assigned by a cost-balanced LPT partition (costliest cohort
+to the least-loaded host, ties by host id), each host runs its slice
+through the SAME async scheduler (``repro.runtime.scheduler``) over its
+LOCAL device mesh (``repro.sweep.shard.local_sweep_mesh`` — never a
+global mesh, which would turn independent cohorts into cross-process
+collectives), and results land in a per-host store under the shared
+store root:
+
+    <root>/host0/<hash>.json      host 0's results
+    <root>/host1/<hash>.json      host 1's results
+    <root>/host0.done             completion sentinel (cells finished)
+    <root>/<hash>.json            merged result set (host 0 merges)
+
+Coordination model: when a ``coordinator`` address is given,
+``jax.distributed.initialize`` connects the processes first — it blocks
+until every host joins, doubling as a start barrier.  Without a
+coordinator the same partition runs purely filesystem-coordinated
+(launch N processes with ``--num-hosts N --host-id k`` by hand).
+Either way, sentinels are validated, not trusted: each carries the
+deterministic fingerprint of the assignment it completed
+(``_plan_signature``), so a sentinel left behind by a previous
+interrupted launch — whose pending set, and therefore partition,
+differed — is rejected as stale rather than merged as a finished host.
+
+Completion uses sentinel files rather than an XLA collective on purpose:
+the merged store already requires a shared filesystem, and a barrier via
+``psum`` would demand cross-process collective support (e.g. gloo) that
+plain CPU containers may lack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.sweep import grid as grid_lib
+from repro.sweep import shard as shard_lib
+from repro.sweep import store as store_lib
+from repro.runtime import scheduler as sched_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    """This process's place in the multi-host launch."""
+
+    num_hosts: int = 1
+    host_id: int = 0
+    coordinator: Optional[str] = None   # "host:port" -> jax.distributed
+
+    def __post_init__(self):
+        if not 0 <= self.host_id < self.num_hosts:
+            raise ValueError(
+                f"host_id {self.host_id} outside [0, {self.num_hosts})")
+
+
+def initialize(hs: HostSpec) -> None:
+    """Connect this process to the ``jax.distributed`` coordination
+    service (blocks until all ``num_hosts`` processes have joined)."""
+    if hs.coordinator is None:
+        return
+    import jax
+    jax.distributed.initialize(coordinator_address=hs.coordinator,
+                               num_processes=hs.num_hosts,
+                               process_id=hs.host_id)
+
+
+def partition(cohort_list: List[grid_lib.Cohort],
+              num_hosts: int) -> List[List[int]]:
+    """Cost-balanced cohort assignment: indices into ``cohort_list`` per
+    host (LPT: costliest first onto the least-loaded host).  Pure and
+    deterministic — every host computes the identical partition, so no
+    assignment message ever crosses the network."""
+    if num_hosts < 1:
+        raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
+    assign: List[List[int]] = [[] for _ in range(num_hosts)]
+    load = [0] * num_hosts
+    for entry in sched_lib.schedule(cohort_list):
+        h = min(range(num_hosts), key=lambda i: (load[i], i))
+        assign[h].append(entry.order)
+        load[h] += max(entry.cost, 1)
+    return [sorted(ids) for ids in assign]
+
+
+def _host_dir(root: str, host_id: int) -> str:
+    return os.path.join(root, f"host{host_id}")
+
+
+def _sentinel(root: str, host_id: int) -> str:
+    return os.path.join(root, f"host{host_id}.done")
+
+
+def _plan_signature(plan: List[grid_lib.Cohort], assigned: List[int],
+                    cache_key: Dict[str, Any]) -> str:
+    """Deterministic fingerprint of one host's assignment: the sorted
+    cell hashes of every cohort it runs.  Written into the sentinel and
+    validated by host 0, so a sentinel left behind by a PREVIOUS
+    interrupted launch (whose pending set — and therefore partition —
+    differed) is rejected as stale instead of being merged as if the
+    host had finished.  A stale sentinel that does match byte-for-byte
+    is safe to accept: sentinels are written only after every result of
+    that exact assignment landed in the host store."""
+    hashes = sorted(store_lib.cell_hash(c, cache_key)
+                    for i in assigned for c in plan[i].cells)
+    return hashlib.sha256("|".join(hashes).encode()).hexdigest()[:16]
+
+
+def _wait_for_hosts(root: str, expected: Dict[int, str],
+                    timeout: float) -> Dict[int, Dict[str, Any]]:
+    deadline = time.time() + timeout
+    done: Dict[int, Dict[str, Any]] = {}
+    while len(done) < len(expected):
+        for h, sig in expected.items():
+            if h in done or not os.path.exists(_sentinel(root, h)):
+                continue
+            with open(_sentinel(root, h)) as f:
+                doc = json.load(f)
+            if doc.get("plan") == sig:      # else stale: keep waiting
+                done[h] = doc
+        if len(done) < len(expected):
+            if time.time() > deadline:
+                missing = sorted(set(expected) - set(done))
+                raise TimeoutError(
+                    f"hosts {missing} did not finish within {timeout}s "
+                    f"(no sentinel for this launch's plan under {root})")
+            time.sleep(0.1)
+    return done
+
+
+def run_spec_multihost(spec: grid_lib.SweepSpec, *, store_root: str,
+                       hs: HostSpec, jobs: int = 1,
+                       dispatch_ahead: Optional[int] = None,
+                       devices: Optional[int] = None,
+                       verbose: bool = False, timeout: float = 3600.0
+                       ) -> Optional[List[Dict[str, Any]]]:
+    """Run this host's cohort slice; merge and return results on host 0.
+
+    Every host: computes the full (deterministic) plan, serves cache
+    hits from the already-merged root store, runs its assigned pending
+    cohorts through the async scheduler into ``<root>/host<k>``, then
+    writes its completion sentinel.  Host 0 additionally waits for every
+    sentinel, merges the per-host stores into the root, and returns the
+    full result list in grid order; other hosts return None.
+
+    ``jobs=1`` still uses the scheduler (a 1-thread pool with overlapped
+    writer I/O) — the serial fallback only matters in-process, where
+    ``run_spec`` keeps the exact legacy loop.
+    """
+    initialize(hs)
+    cache_key = grid_lib.spec_cache_key(spec)
+    cell_list = grid_lib.cells(spec)
+    root_store = store_lib.SweepStore(store_root)
+
+    # clear MY stale sentinel before any work (post-initialize: with a
+    # coordinator every host has passed the join barrier by now)
+    if os.path.exists(_sentinel(store_root, hs.host_id)):
+        os.unlink(_sentinel(store_root, hs.host_id))
+
+    pending_cells, pending_idx = [], []
+    for i, cell in enumerate(cell_list):
+        if root_store.get(cell, cache_key) is None:
+            pending_cells.append(cell)
+            pending_idx.append(i)
+    plan = grid_lib.cohorts(pending_cells, pending_idx)
+    parts = partition(plan, hs.num_hosts)
+    mine = parts[hs.host_id]
+    if verbose:
+        print(f"# host {hs.host_id}/{hs.num_hosts}: "
+              f"{len(mine)}/{len(plan)} pending cohort(s), "
+              f"{len(cell_list) - len(pending_cells)} cache hits",
+              file=sys.stderr)
+
+    host_store = store_lib.SweepStore(_host_dir(store_root, hs.host_id))
+    finished = 0
+
+    def sink(cohort: grid_lib.Cohort, outs: List[Dict[str, Any]]) -> None:
+        nonlocal finished
+        for res in outs:
+            host_store.put(res["cell"], res, cache_key)
+        finished += len(outs)
+
+    my_cohorts = [plan[i] for i in mine]
+    if my_cohorts:
+        sched_lib.run_cohorts(
+            my_cohorts, sink=sink, jobs=max(jobs, 1),
+            dispatch_ahead=dispatch_ahead, do_eval=spec.eval,
+            tail=spec.tail, mesh=shard_lib.local_sweep_mesh(devices),
+            verbose=verbose)
+    doc = {"host": hs.host_id, "cohorts": len(my_cohorts),
+           "cells": finished,
+           "plan": _plan_signature(plan, mine, cache_key)}
+    with open(_sentinel(store_root, hs.host_id) + ".tmp", "w") as f:
+        json.dump(doc, f)
+    os.replace(_sentinel(store_root, hs.host_id) + ".tmp",
+               _sentinel(store_root, hs.host_id))
+
+    if hs.host_id != 0:
+        return None
+
+    _wait_for_hosts(store_root,
+                    {h: _plan_signature(plan, parts[h], cache_key)
+                     for h in range(hs.num_hosts)}, timeout)
+    for h in range(hs.num_hosts):
+        hdir = _host_dir(store_root, h)
+        if os.path.isdir(hdir):
+            root_store.merge(store_lib.SweepStore(hdir))
+    results: List[Dict[str, Any]] = []
+    missing: List[int] = []
+    for i, cell in enumerate(cell_list):
+        res = root_store.get(cell, cache_key)
+        if res is None:
+            missing.append(i)
+        else:
+            results.append({**res, "cell": cell})
+    if missing:
+        raise RuntimeError(
+            f"merged store is missing {len(missing)} cell(s) "
+            f"(grid indices {missing[:10]}...): a host wrote its "
+            f"sentinel without all results")
+    return results

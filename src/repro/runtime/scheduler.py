@@ -1,0 +1,184 @@
+"""Concurrent cohort scheduler: cost-ordered dispatch with a bounded
+in-flight window.
+
+``run_cohorts`` executes a list of sweep cohorts through three
+overlapping stages instead of a serial loop:
+
+  dispatch (jobs threads)   prepare_cohort -> trace/compile -> async
+                            device dispatch (donated batches); the jit
+                            call returns while the computation runs
+  device                    up to ``jobs + dispatch_ahead`` cohorts in
+                            flight at once (window semaphore)
+  writer (1 thread)         device_get + finalize + sink (store writes)
+                            as completions become READY, not in
+                            submission order
+
+Cohorts are dispatched COSTLIEST FIRST (``repro.sweep.grid.cohort_cost``:
+cells x rounds x U_max x D) so the long compiles start immediately while
+cheaper cohorts fill the remaining dispatcher slots — the classic
+longest-processing-time heuristic.  Ordering and concurrency never touch
+numerics: every cohort runs the exact computation the serial path would,
+on explicit PRNG keys, so results are invariant to scheduling (tested in
+``tests/test_runtime.py``).
+
+Errors from any stage (trace, compile, resolve, sink) cancel the
+remaining dispatches, drain the window so no thread deadlocks, and
+re-raise on the calling thread.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import sys
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.launch import mesh as mesh_lib
+from repro.sweep import grid as grid_lib
+from repro.sweep import shard as shard_lib
+from repro.runtime.writer import Completion, CompletionWriter
+
+DEFAULT_DISPATCH_AHEAD = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledCohort:
+    """One cohort with its dispatch priority resolved."""
+
+    cohort: grid_lib.Cohort
+    cost: int         # cells x rounds x U_max x D estimate
+    order: int        # position in the original (grid) cohort list
+
+
+def schedule(cohort_list: List[grid_lib.Cohort]) -> List[ScheduledCohort]:
+    """Dispatch order: by cost estimate descending, original order as the
+    deterministic tie-break (scheduling must be reproducible — debugging
+    a concurrent run should never chase a shuffled plan)."""
+    entries = [ScheduledCohort(cohort=co, cost=grid_lib.cohort_cost(co),
+                               order=i)
+               for i, co in enumerate(cohort_list)]
+    return sorted(entries, key=lambda e: (-e.cost, e.order))
+
+
+def _tree_ready(out: Any) -> bool:
+    """Non-blocking: has every output leaf finished computing?"""
+    for leaf in jax.tree.leaves(out):
+        is_ready = getattr(leaf, "is_ready", None)
+        if is_ready is not None and not is_ready():
+            return False
+    return True
+
+
+class _Window:
+    """Counting semaphore whose waiters abort when the run fails."""
+
+    def __init__(self, slots: int):
+        self._sem = threading.Semaphore(slots)
+        self._stop = threading.Event()
+
+    def acquire(self) -> bool:
+        while not self._stop.is_set():
+            if self._sem.acquire(timeout=0.05):
+                return True
+        return False
+
+    def release(self) -> None:
+        self._sem.release()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
+
+
+def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
+                sink: Callable[[grid_lib.Cohort, List[Dict[str, Any]]],
+                               None],
+                jobs: int, dispatch_ahead: Optional[int] = None,
+                do_eval: bool = True, tail: int = 10, mesh=None,
+                eval_data=None, verbose: bool = False) -> None:
+    """Run every cohort concurrently; ``sink(cohort, results)`` fires on
+    the writer thread as each cohort's results reach host memory.
+
+    ``jobs`` dispatcher threads each drive prepare -> compile -> async
+    dispatch; at most ``jobs + dispatch_ahead`` cohorts hold device
+    buffers at once.  Raises the first error from any stage after
+    cancelling the rest; on success every cohort has been sunk exactly
+    once.
+    """
+    if jobs < 1:
+        raise ValueError(f"jobs must be >= 1, got {jobs}")
+    if dispatch_ahead is None:
+        dispatch_ahead = DEFAULT_DISPATCH_AHEAD
+    if dispatch_ahead < 0:
+        raise ValueError(
+            f"dispatch_ahead must be >= 0, got {dispatch_ahead}")
+    if not cohort_list:
+        return
+    entries = schedule(cohort_list)
+    window = _Window(jobs + dispatch_ahead)
+    writer = CompletionWriter()
+
+    def dispatch_one(entry: ScheduledCohort) -> None:
+        if window.stopped or writer.error is not None:
+            return
+        if not window.acquire():
+            return
+        if writer.error is not None:   # failed while we waited for a slot
+            window.release()
+            window.stop()
+            return
+        try:
+            co = entry.cohort
+            if verbose:
+                print(f"# dispatch cohort {entry.order} x{len(co)} "
+                      f"(cost={entry.cost})", file=sys.stderr)
+            prep = grid_lib.prepare_cohort(co, do_eval=do_eval,
+                                           eval_data=eval_data)
+            out, e = shard_lib.dispatch_sharded(
+                jax.vmap(prep.run_one), prep.batch, mesh, donate=True)
+        except BaseException:
+            window.release()
+            window.stop()
+            raise
+
+        def resolve_fn(out=out, e=e, co=co):
+            host = shard_lib.resolve(out, e)
+            host = {k: np.asarray(v) for k, v in host.items()}
+            return grid_lib.finalize_cohort(co, host, tail=tail)
+
+        writer.submit(Completion(
+            label=f"cohort-{entry.order}",
+            resolve=resolve_fn,
+            sink=lambda results, co=co: sink(co, results),
+            ready=lambda out=out: _tree_ready(out),
+            release=window.release))
+
+    errors: List[BaseException] = []
+    # hold the mesh context across the whole pool: per-dispatch nesting
+    # from worker threads then always restores to this same mesh, so one
+    # thread's context exit can never deactivate it under another
+    mesh_ctx = (mesh_lib.activate_mesh(mesh) if mesh is not None
+                else contextlib.nullcontext())
+    with mesh_ctx, ThreadPoolExecutor(
+            max_workers=jobs,
+            thread_name_prefix="sweep-dispatch") as pool:
+        futures = [pool.submit(dispatch_one, entry) for entry in entries]
+        for f in futures:
+            exc = f.exception()
+            if exc is not None:
+                errors.append(exc)
+                window.stop()
+    try:
+        writer.close()
+    except BaseException as e:   # noqa: BLE001 — surfaced below
+        errors.append(e)
+    if errors:
+        raise errors[0]

@@ -1,0 +1,130 @@
+"""Overlapped completion writer: result fetch + store I/O off the
+dispatch path.
+
+A ``CompletionWriter`` owns one background thread draining a queue of
+:class:`Completion` items.  Each item represents a dispatched (possibly
+still running) device computation; the writer
+
+  1. polls readiness (``ready()``) across every queued item and picks
+     the first COMPLETE one — completions resolve as they become ready,
+     not in submission order, so one slow cohort never delays the store
+     writes (or window-slot release) of faster ones;
+  2. calls ``resolve()`` (blocking ``jax.device_get`` + finalization)
+     and hands the value to ``sink`` — for sweep runs that is
+     ``SweepStore.put``, whose tmp+rename writes make concurrent writers
+     safe;
+  3. always runs ``release()`` afterwards, which returns the item's
+     in-flight window slot to the scheduler.
+
+Items whose ``ready`` is None (no readiness signal available) are
+treated as always-ready, degrading to FIFO.  The first error raised by
+``resolve``/``sink`` is captured; remaining and subsequent items are
+dropped (``release()`` only, so blocked dispatchers wake up) and the
+error re-raises from :meth:`CompletionWriter.close` on the caller's
+thread.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, List, NamedTuple, Optional
+
+
+class Completion(NamedTuple):
+    """One dispatched computation awaiting resolution."""
+
+    label: str
+    resolve: Callable[[], Any]            # blocking fetch -> value
+    sink: Callable[[Any], None]           # consume the resolved value
+    ready: Optional[Callable[[], bool]] = None   # non-blocking; None=FIFO
+    release: Optional[Callable[[], None]] = None  # always runs (cleanup)
+
+
+class CompletionWriter:
+    """Background thread resolving completions as they become ready."""
+
+    def __init__(self, poll_interval: float = 0.002):
+        self._queue: "queue.Queue[Optional[Completion]]" = queue.Queue()
+        self._poll = poll_interval
+        self._error: Optional[BaseException] = None
+        self._drained: List[str] = []
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="sweep-writer", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- public
+    def submit(self, completion: Completion) -> None:
+        self._queue.put(completion)
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    def drained(self) -> List[str]:
+        """Labels in RESOLUTION order (not submission order) — observable
+        evidence of out-of-order completion for tests and debugging."""
+        with self._lock:
+            return list(self._drained)
+
+    def close(self) -> None:
+        """Drain everything, stop the thread, re-raise the first error."""
+        self._queue.put(None)
+        self._thread.join()
+        if self._error is not None:
+            raise self._error
+
+    # ------------------------------------------------------------ internal
+    def _loop(self) -> None:
+        pending: List[Completion] = []
+        closing = False
+        while not (closing and not pending and self._queue.empty()):
+            # pull new submissions; block only when there is nothing to poll
+            try:
+                item = self._queue.get(
+                    timeout=None if not pending else self._poll)
+                if item is None:
+                    closing = True
+                else:
+                    pending.append(item)
+                continue   # keep draining the queue before polling
+            except queue.Empty:
+                pass
+            if not pending:
+                continue
+            if self._error is not None:
+                for c in pending:
+                    self._drop(c)
+                pending.clear()
+                continue
+            pick = next((i for i, c in enumerate(pending)
+                         if c.ready is None or self._is_ready(c)), None)
+            if pick is None:
+                continue    # nothing complete yet; poll again
+            self._run(pending.pop(pick))
+
+    def _is_ready(self, c: Completion) -> bool:
+        try:
+            return bool(c.ready())
+        except BaseException:
+            # a readiness probe must never wedge the writer: treat a
+            # failing probe as ready and let resolve() surface the error
+            return True
+
+    def _run(self, c: Completion) -> None:
+        try:
+            value = c.resolve()
+            c.sink(value)
+            with self._lock:
+                self._drained.append(c.label)
+        except BaseException as e:   # noqa: BLE001 — re-raised in close()
+            if self._error is None:
+                self._error = e
+        finally:
+            if c.release is not None:
+                c.release()
+
+    def _drop(self, c: Completion) -> None:
+        if c.release is not None:
+            c.release()

@@ -13,15 +13,22 @@ whole U x eps x sigma2 grid is one compile per backend.  Results are
 cached content-addressed (``repro.sweep.store``) so unchanged cells are
 cache hits on re-runs.
 
+Execution is pluggable: the default serial loop, or the async runtime
+(``run_spec(spec, jobs=2)`` / ``--jobs 2``: concurrent cost-ordered
+cohort dispatch, overlapped store I/O, multi-host slices via
+``repro.runtime``) — results are identical per cell either way.
+
 CLI: ``python -m repro.sweep --task linreg --axis seed=0:8
 --axis policy=inflota,random --rounds 100`` (``--dry-run`` prints the
-cohort plan).  Authoring guide: ``docs/sweeps.md``.
+cohort + scheduler plan).  Guides: ``docs/sweeps.md``,
+``docs/runtime.md``.
 """
 
-from repro.sweep.grid import (Cohort, SweepSpec, cells, cohorts,
-                              result_by, run_cohort, run_spec)
+from repro.sweep.grid import (Cohort, SweepSpec, cells, cohort_cost,
+                              cohorts, prepare_cohort, result_by,
+                              run_cohort, run_spec, spec_cache_key)
 from repro.sweep.store import SweepStore, cell_hash, long_rows
 
-__all__ = ["SweepSpec", "Cohort", "cells", "cohorts", "result_by",
-           "run_cohort", "run_spec", "SweepStore", "cell_hash",
-           "long_rows"]
+__all__ = ["SweepSpec", "Cohort", "cells", "cohorts", "cohort_cost",
+           "prepare_cohort", "result_by", "run_cohort", "run_spec",
+           "spec_cache_key", "SweepStore", "cell_hash", "long_rows"]

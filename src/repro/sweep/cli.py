@@ -11,6 +11,15 @@ Examples:
     # grid from a JSON spec file
     python -m repro.sweep --spec myspec.json --csv out.csv
 
+    # async runtime: dispatch cohorts from 2 threads, up to 4 in flight,
+    # store writes on a background writer thread (same results as serial)
+    python -m repro.sweep --spec myspec.json --store sweeps/store --jobs 2
+
+    # multi-host: one process per host against a shared store root;
+    # host 0 merges per-host results (see docs/runtime.md)
+    python -m repro.sweep --spec myspec.json --store /shared/store \
+        --coordinator head:8476 --num-hosts 4 --host-id $K --jobs 2
+
 Spec JSON mirrors ``SweepSpec``: {"axes": {...}, "base": {...},
 "eval": true, "tail": 10}.  Axis values on the command line are comma
 lists (``policy=inflota,random``) or integer ranges (``seed=0:8``);
@@ -21,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, List, Tuple
 
@@ -92,6 +102,28 @@ def build_spec(args) -> SweepSpec:
     if args.tail is not None:
         tail = args.tail
     return SweepSpec(axes=axes, base=base, eval=do_eval, tail=tail)
+
+
+def format_schedule(plan, jobs: int, dispatch_ahead,
+                    num_hosts: int = 1) -> List[str]:
+    """The async runtime's view of the plan: dispatch order by cost
+    estimate, the in-flight window, and (multi-host) which host runs
+    which cohorts — printed by ``--dry-run`` so a user can predict a
+    concurrent run before paying for it."""
+    from repro.runtime import multihost as mh
+    from repro.runtime import scheduler as sched_lib
+
+    ahead = sched_lib.DEFAULT_DISPATCH_AHEAD if dispatch_ahead is None \
+        else dispatch_ahead
+    lines = [f"# schedule: jobs={jobs}, in-flight window={jobs + ahead} "
+             f"(dispatch-ahead {ahead})"]
+    order = " ".join(f"{e.order}(cost={e.cost})"
+                     for e in sched_lib.schedule(plan))
+    lines.append(f"#   dispatch order: {order}")
+    if num_hosts > 1:
+        for h, ids in enumerate(mh.partition(plan, num_hosts)):
+            lines.append(f"#   host {h}: cohorts {_ranges(ids) or '(none)'}")
+    return lines
 
 
 def format_plan(cell_list, plan) -> List[str]:
@@ -177,8 +209,24 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the experiment axis over this many devices "
                          "(default: all visible; 1 disables sharding)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="concurrent cohort dispatch threads (async "
+                         "runtime; 1 = serial legacy path)")
+    ap.add_argument("--dispatch-ahead", type=int, default=None,
+                    help="extra cohorts allowed in flight beyond --jobs "
+                         "(default 2)")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator address "
+                         "(multi-host execution)")
+    ap.add_argument("--num-hosts", type=int, default=1,
+                    help="total hosts in a multi-host launch (requires "
+                         "--store on a shared filesystem)")
+    ap.add_argument("--host-id", type=int, default=None,
+                    help="this process's index in [0, --num-hosts) "
+                         "(default: $REPRO_HOST_ID or 0)")
     ap.add_argument("--dry-run", action="store_true",
-                    help="print the cohort plan without executing")
+                    help="print the cohort + scheduler plan without "
+                         "executing")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -188,6 +236,12 @@ def main(argv=None) -> int:
         spec = build_spec(args)
     except (ValueError, KeyError) as e:
         ap.error(str(e))
+    multihost = args.num_hosts > 1 or args.coordinator is not None
+    host_id = args.host_id if args.host_id is not None else \
+        int(os.environ.get("REPRO_HOST_ID", "0"))
+    if multihost and not args.store and not args.dry_run:
+        ap.error("--num-hosts/--coordinator need --store on a shared "
+                 "filesystem (per-host results merge there)")
 
     cell_list = cells(spec)
     plan = cohorts(cell_list)
@@ -197,12 +251,34 @@ def main(argv=None) -> int:
     if args.dry_run:
         for line in format_plan(cell_list, plan):
             print(line, file=sys.stderr)
+        if args.jobs > 1 or multihost:
+            for line in format_schedule(plan, args.jobs,
+                                        args.dispatch_ahead,
+                                        args.num_hosts):
+                print(line, file=sys.stderr)
         return 0
 
-    store = store_lib.SweepStore(args.store) if args.store else None
-    mesh = shard_lib.sweep_mesh(args.devices)
-    results = run_spec(spec, store=store, mesh=mesh,
-                       verbose=not args.quiet)
+    if multihost:
+        from repro.runtime import multihost as mh
+        results = mh.run_spec_multihost(
+            spec, store_root=args.store,
+            hs=mh.HostSpec(num_hosts=args.num_hosts, host_id=host_id,
+                           coordinator=args.coordinator),
+            jobs=args.jobs, dispatch_ahead=args.dispatch_ahead,
+            devices=args.devices, verbose=not args.quiet)
+        if results is None:     # non-zero hosts: results merge on host 0
+            if not args.quiet:
+                print(f"# host {host_id}: slice done (host 0 merges)",
+                      file=sys.stderr)
+            return 0
+        store = store_lib.SweepStore(args.store)   # merged root store
+    else:
+        store = store_lib.SweepStore(args.store) if args.store else None
+        mesh = shard_lib.sweep_mesh(args.devices)
+        results = run_spec(spec, store=store, mesh=mesh,
+                           jobs=args.jobs,
+                           dispatch_ahead=args.dispatch_ahead,
+                           verbose=not args.quiet)
 
     columns = list(spec.axes)
     rows = store_lib.long_rows(results, columns=columns)

@@ -51,7 +51,7 @@ from repro.core import channel as chan_lib
 from repro.core.channel import ChannelConfig
 from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case
-from repro.data.tasks import build_task_data
+from repro.data.tasks import build_task_data, dim_hint
 from repro.fl.trainer import FLConfig, pad_workers, scan_experiment
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
@@ -148,6 +148,20 @@ class Cohort:
     def ragged(self) -> bool:
         """True when the cohort spans more than one worker-fleet shape."""
         return len(self.data_keys()) > 1
+
+
+def cohort_cost(cohort: Cohort) -> int:
+    """Scheduler cost estimate: cells x rounds x U_max x D.
+
+    Deliberately cheap — no task data is built; D comes from
+    ``repro.data.tasks.dim_hint``.  The async runtime uses this only to
+    ORDER dispatch (costliest cohorts first, so the expensive compiles
+    start while cheaper cohorts fill the remaining slots); a bad estimate
+    costs wall clock, never correctness.
+    """
+    u_max = max(int(c["U"]) for c in cohort.cells)
+    return (len(cohort.cells) * int(cohort.static["rounds"]) * u_max
+            * dim_hint(cohort.static.get("task")))
 
 
 def cells(spec: SweepSpec) -> List[Dict[str, Any]]:
@@ -289,14 +303,24 @@ def _pad_worker_axis(a: jnp.ndarray, u_max: int) -> jnp.ndarray:
 
 
 def _ragged_batch(cohort: Cohort, built: Dict[Tuple, Any], do_eval: bool,
-                  eval_override) -> Tuple[Dict[str, jnp.ndarray], bool]:
-    """Per-experiment data arrays for a ragged cohort.
+                  eval_override
+                  ) -> Tuple[Dict[str, jnp.ndarray],
+                             Dict[str, jnp.ndarray], bool]:
+    """Deduplicated per-experiment data for a ragged cohort.
 
-    Every cell's (X, Y, mask, k_i) is padded to the cohort-wide
-    (U_max, K_max) and stacked on a leading experiment axis, with a
-    (U_max,) worker mask per experiment.  Returns (batch, batch_eval):
-    the per-cell test splits stack too (same per-task n_test) unless an
-    ``eval_override`` supplies one shared set.
+    Every UNIQUE dataset (``data_keys``: task x U x k_bar x data_seed) is
+    padded to the cohort-wide (U_max, K_max) exactly once and stacked
+    into ``uniques`` (leading axis = unique dataset, NOT experiment);
+    each experiment carries only an i32 index ``didx`` into that stack.
+    ``run_one`` gathers its cell's block by index, so an 8-seed x 3-U
+    cohort holds 3 padded copies of the worker data instead of 24 — the
+    gather returns the identical padded arrays, so results are unchanged
+    bit-for-bit.
+
+    Returns (batch, uniques, batch_eval): ``batch`` leaves have a leading
+    experiment axis (vmapped / sharded), ``uniques`` are closed over by
+    ``run_one`` (replicated).  Per-key test splits dedup the same way
+    unless an ``eval_override`` supplies one shared set.
     """
     if any(not isinstance(c["channel"], (str, type(None)))
            for c in cohort.cells):
@@ -304,12 +328,13 @@ def _ragged_batch(cohort: Cohort, built: Dict[Tuple, Any], do_eval: bool,
             "ragged cohorts need a registry channel name or None: an "
             "instance is sized for one worker count and cannot span "
             "cells with different U")
-    u_max = max(len(built[k][1]) for k in cohort.data_keys())
+    keys = cohort.data_keys()
+    u_max = max(len(built[k][1]) for k in keys)
     k_max = max(int(np.asarray(x).shape[0])
-                for key in cohort.data_keys()
+                for key in keys
                 for x, _ in built[key][1])
     per_key: Dict[Tuple, Tuple] = {}
-    for key in cohort.data_keys():
+    for key in keys:
         _, workers, test = built[key]
         X, Y, mask, k_i = pad_workers(workers, k_max=k_max)
         u = len(workers)
@@ -321,37 +346,43 @@ def _ragged_batch(cohort: Cohort, built: Dict[Tuple, Any], do_eval: bool,
             wmask, test)
 
     def stack(i):
-        return jnp.stack([per_key[_data_key(c)][i] for c in cohort.cells])
+        return jnp.stack([per_key[k][i] for k in keys])
 
-    batch = {"X": stack(0), "Y": stack(1), "mask": stack(2),
-             "k_i": stack(3), "wmask": stack(4)}
+    uniques = {"X": stack(0), "Y": stack(1), "mask": stack(2),
+               "k_i": stack(3), "wmask": stack(4)}
+    key_pos = {k: i for i, k in enumerate(keys)}
+    batch = {"didx": jnp.asarray(
+        [key_pos[_data_key(c)] for c in cohort.cells], jnp.int32)}
     batch_eval = do_eval and eval_override is None
     if batch_eval:
-        batch["ex"] = jnp.stack([
-            jnp.asarray(per_key[_data_key(c)][5][0]) for c in cohort.cells])
-        batch["ey"] = jnp.stack([
-            jnp.asarray(per_key[_data_key(c)][5][1]) for c in cohort.cells])
-    return batch, batch_eval
+        uniques["ex"] = jnp.stack(
+            [jnp.asarray(per_key[k][5][0]) for k in keys])
+        uniques["ey"] = jnp.stack(
+            [jnp.asarray(per_key[k][5][1]) for k in keys])
+    return batch, uniques, batch_eval
 
 
-def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
-               mesh=None, eval_data=None,
-               timings: Optional[Dict[str, float]] = None
-               ) -> List[Dict[str, Any]]:
-    """Execute one cohort as a single vmapped (and mesh-sharded) program.
+@dataclasses.dataclass
+class PreparedCohort:
+    """A cohort with its data built and its computation closed over.
 
-    Returns one result dict per cell (cohort order): ``cell``,
-    ``metrics`` (scalar summaries), ``history`` (per-round traces) and
-    ``flat`` (final parameters, in-memory only — the store persists
-    metrics + history).  ``eval_data`` overrides the task's own test
-    split (e.g. Fig. 4's fixed held-out set shared across U).
-
-    ``timings`` (single-device only): a dict whose ``compile_s`` /
-    ``run_s`` entries are INCREMENTED with this cohort's trace+compile
-    wall time and its post-compile execution wall time — the numbers
-    ``benchmarks/sweep_bench.py`` commits for the cohort-merge
-    before/after comparison.
+    ``jax.vmap(run_one)`` applied to ``batch`` IS the cohort's whole
+    computation; the split from :func:`run_cohort` exists so the async
+    runtime (``repro.runtime``) can stage host-side preparation, device
+    dispatch, and result finalization on different threads while the
+    serial path composes the same three pieces in order — per-cell
+    results are identical by construction.
     """
+
+    cohort: Cohort
+    run_one: Any                   # per-experiment fn of a batch slice
+    batch: Dict[str, jnp.ndarray]  # leaves lead with the experiment axis
+
+
+def prepare_cohort(cohort: Cohort, *, do_eval: bool = True,
+                   eval_data=None) -> PreparedCohort:
+    """Host-side phase: build task data, split scalars, close the
+    per-experiment function.  No device computation is dispatched."""
     st = cohort.static
     built = {key: build_task_data(key[0], U=key[1], k_bar=key[2],
                                   data_seed=key[3])
@@ -366,20 +397,21 @@ def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
                else len(built[cohort.data_keys()[0]][1]))
 
     if ragged:
-        data_batch, batch_eval = _ragged_batch(cohort, built, do_eval,
-                                               eval_data)
+        data_batch, uniq, batch_eval = _ragged_batch(cohort, built,
+                                                     do_eval, eval_data)
         shared_eval = (jnp.asarray(eval_data[0]), jnp.asarray(eval_data[1])
                        ) if (do_eval and eval_data is not None) else None
 
         def run_one(batch):
             s = {**uniform, **{n: batch[n] for n in varying}}
             cfg = _cohort_cfg(st, s, u_model)
-            eval_xy = ((batch["ex"], batch["ey"]) if batch_eval
+            d = batch["didx"]
+            eval_xy = ((uniq["ex"][d], uniq["ey"][d]) if batch_eval
                        else shared_eval)
-            return scan_experiment(task, batch["X"], batch["Y"],
-                                   batch["mask"], batch["k_i"], cfg,
+            return scan_experiment(task, uniq["X"][d], uniq["Y"][d],
+                                   uniq["mask"][d], uniq["k_i"][d], cfg,
                                    batch["key"], eval_xy=eval_xy,
-                                   wmask=batch["wmask"])
+                                   wmask=uniq["wmask"][d])
 
         full_batch = {"key": keys, **varying, **data_batch}
     else:
@@ -401,20 +433,13 @@ def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
 
         full_batch = {"key": keys, **varying}
 
-    if timings is not None and mesh is None:
-        import time
-        fn = jax.jit(jax.vmap(run_one))
-        t0 = time.time()
-        compiled = fn.lower(full_batch).compile()
-        t1 = time.time()
-        out = jax.block_until_ready(compiled(full_batch))
-        t2 = time.time()
-        timings["compile_s"] = timings.get("compile_s", 0.0) + (t1 - t0)
-        timings["run_s"] = timings.get("run_s", 0.0) + (t2 - t1)
-    else:
-        out = shard_lib.run_sharded(jax.vmap(run_one), full_batch, mesh)
-    out = {k: np.asarray(v) for k, v in out.items()}
+    return PreparedCohort(cohort=cohort, run_one=run_one, batch=full_batch)
 
+
+def finalize_cohort(cohort: Cohort, out: Dict[str, np.ndarray], *,
+                    tail: int = 10) -> List[Dict[str, Any]]:
+    """Host-side phase: per-cell result dicts from the cohort's output
+    arrays (already fetched to host memory)."""
     results = []
     for e, cell in enumerate(cohort.cells):
         history = {k: out[k][e].tolist() for k in out if k != "flat"}
@@ -433,9 +458,53 @@ def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
     return results
 
 
+def run_cohort(cohort: Cohort, *, do_eval: bool = True, tail: int = 10,
+               mesh=None, eval_data=None,
+               timings: Optional[Dict[str, float]] = None
+               ) -> List[Dict[str, Any]]:
+    """Execute one cohort as a single vmapped (and mesh-sharded) program.
+
+    Returns one result dict per cell (cohort order): ``cell``,
+    ``metrics`` (scalar summaries), ``history`` (per-round traces) and
+    ``flat`` (final parameters, in-memory only — the store persists
+    metrics + history).  ``eval_data`` overrides the task's own test
+    split (e.g. Fig. 4's fixed held-out set shared across U).
+
+    ``timings`` (single-device only): a dict whose ``compile_s`` /
+    ``run_s`` entries are INCREMENTED with this cohort's trace+compile
+    wall time and its post-compile execution wall time — the numbers
+    ``benchmarks/sweep_bench.py`` commits for the cohort-merge
+    before/after comparison.
+    """
+    prep = prepare_cohort(cohort, do_eval=do_eval, eval_data=eval_data)
+    if timings is not None and mesh is None:
+        import time
+        fn = jax.jit(jax.vmap(prep.run_one))
+        t0 = time.time()
+        compiled = fn.lower(prep.batch).compile()
+        t1 = time.time()
+        out = jax.block_until_ready(compiled(prep.batch))
+        t2 = time.time()
+        timings["compile_s"] = timings.get("compile_s", 0.0) + (t1 - t0)
+        timings["run_s"] = timings.get("run_s", 0.0) + (t2 - t1)
+    else:
+        out = shard_lib.run_sharded(jax.vmap(prep.run_one), prep.batch,
+                                    mesh)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    return finalize_cohort(cohort, out, tail=tail)
+
+
+def spec_cache_key(spec: SweepSpec) -> Dict[str, Any]:
+    """The run-level store-identity extras for ``spec`` — shared by the
+    serial path, the async runtime, and multi-host merging (all three
+    must agree or caches would silently miss across execution modes)."""
+    return {"eval": spec.eval, "tail": spec.tail}
+
+
 def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
              mesh=None, eval_data=None, verbose: bool = False,
-             timings: Optional[Dict[str, float]] = None
+             timings: Optional[Dict[str, float]] = None,
+             jobs: int = 1, dispatch_ahead: Optional[int] = None
              ) -> List[Dict[str, Any]]:
     """Run a whole grid: cache lookups, cohort batching, store writes.
 
@@ -444,13 +513,25 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
     cohorts and run.  The cache identity covers the spec's evaluation
     settings (``eval``, ``tail``) as well as the cell, so e.g. a
     ``--no-eval`` run never satisfies a later metrics-wanting run.
+
+    ``jobs >= 2`` routes the pending cohorts through the async runtime
+    (``repro.runtime.scheduler``): cohorts dispatch concurrently ordered
+    by cost estimate, with up to ``jobs + dispatch_ahead`` cohorts in
+    flight and store writes drained by a background writer thread.
+    Results are INVARIANT to scheduling — the async path runs the exact
+    same prepared computations per cohort, so every cell's result (and
+    store artifact) is identical to the serial ``jobs=1`` run.
     """
     if store is not None and eval_data is not None:
         # an eval_data override changes every metric without changing any
         # cell, so cached entries would be poisoned for ordinary runs
         raise ValueError("store and eval_data are mutually exclusive; "
                          "run eval-override sweeps uncached")
-    cache_key = {"eval": spec.eval, "tail": spec.tail}
+    if jobs > 1 and timings is not None:
+        raise ValueError("timings= requires the serial path (jobs=1): "
+                         "concurrent compile/run walls overlap and cannot "
+                         "be attributed per phase")
+    cache_key = spec_cache_key(spec)
     cell_list = cells(spec)
     results: List[Optional[Dict[str, Any]]] = [None] * len(cell_list)
     pending_cells, pending_idx = [], []
@@ -467,7 +548,24 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
         hits = len(cell_list) - len(pending_cells)
         print(f"# sweep: {len(cell_list)} cells, {hits} cache hits",
               file=sys.stderr)
-    for cohort in cohorts(pending_cells, pending_idx):
+    pending = cohorts(pending_cells, pending_idx)
+
+    def settle(cohort: Cohort, outs: List[Dict[str, Any]]) -> None:
+        for idx, res in zip(cohort.indices, outs):
+            results[idx] = res
+            if store is not None:
+                store.put(res["cell"], res, cache_key)
+
+    if jobs > 1:
+        from repro.runtime import scheduler as sched_lib
+        sched_lib.run_cohorts(pending, sink=settle, jobs=jobs,
+                              dispatch_ahead=dispatch_ahead,
+                              do_eval=spec.eval, tail=spec.tail,
+                              mesh=mesh, eval_data=eval_data,
+                              verbose=verbose)
+        return results   # type: ignore[return-value]
+
+    for cohort in pending:
         if verbose:
             u_vals = sorted({c["U"] for c in cohort.cells})
             print(f"# cohort x{len(cohort)}"
@@ -477,12 +575,9 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
                   f"U={u_vals if len(u_vals) > 1 else u_vals[0]} "
                   f"rounds={cohort.static['rounds']}",
                   file=sys.stderr)
-        outs = run_cohort(cohort, do_eval=spec.eval, tail=spec.tail,
-                          mesh=mesh, eval_data=eval_data, timings=timings)
-        for idx, res in zip(cohort.indices, outs):
-            results[idx] = res
-            if store is not None:
-                store.put(res["cell"], res, cache_key)
+        settle(cohort, run_cohort(cohort, do_eval=spec.eval,
+                                  tail=spec.tail, mesh=mesh,
+                                  eval_data=eval_data, timings=timings))
     return results   # type: ignore[return-value]
 
 

@@ -36,6 +36,24 @@ def sweep_mesh(n: Optional[int] = None):
     return mesh_lib.make_smoke_mesh(data=n, model=1)
 
 
+def local_sweep_mesh(n: Optional[int] = None):
+    """Like :func:`sweep_mesh`, but over THIS PROCESS's devices only.
+
+    Under ``jax.distributed`` every host sees the global device list, but
+    the multi-host sweep runtime (``repro.runtime.multihost``) runs each
+    host's cohort slice independently — a mesh spanning non-addressable
+    devices would turn every cohort into a cross-process collective.
+    Built directly from ``jax.local_devices()`` (``jax.make_mesh`` picks
+    from the global list).  None when this host has a single device.
+    """
+    devs = jax.local_devices()
+    n = len(devs) if n is None else min(n, len(devs))
+    if n <= 1:
+        return None
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(n, 1), ("data", "model"))
+
+
 def shard_count(mesh) -> int:
     """How many ways the experiment axis splits on ``mesh``."""
     if mesh is None:
@@ -89,6 +107,42 @@ def shard_batch(tree: Any, mesh) -> Any:
     return jax.tree.map(put, tree)
 
 
+def dispatch_sharded(batched_fn, batch: Any, mesh=None, *,
+                     donate: bool = False) -> Tuple[Any, Optional[int]]:
+    """Dispatch ``batched_fn`` over ``batch`` WITHOUT waiting for results.
+
+    Returns ``(out, e)``: ``out`` holds device arrays (jax's async
+    dispatch means the computation may still be running) and ``e`` is the
+    original experiment count to ``unpad`` to after fetching (None = no
+    padding was applied).  This is the async runtime's dispatch phase —
+    the completion writer calls :func:`resolve` on another thread, so
+    device compute overlaps the next cohort's trace/compile and the
+    previous cohort's store I/O.
+
+    ``donate=True`` donates the batch buffers to the computation (they
+    are never reused — each cohort builds a fresh batch), bounding the
+    memory held by a dispatch-ahead window; ignored on backends without
+    donation support (CPU) to avoid per-dispatch XLA warnings.
+    """
+    donate_argnums = (0,) if donate and jax.default_backend() != "cpu" \
+        else ()
+    fn = jax.jit(batched_fn, donate_argnums=donate_argnums)
+    if mesh is None:
+        return fn(batch), None
+    padded, e = pad_batch(batch, shard_count(mesh))
+    placed = shard_batch(padded, mesh)
+    with mesh_lib.activate_mesh(mesh):
+        out = fn(placed)
+    return out, e
+
+
+def resolve(out: Any, e: Optional[int]) -> Any:
+    """Blocking fetch of a :func:`dispatch_sharded` result to host numpy
+    (unpadding back to the original experiment count when sharded)."""
+    out = jax.device_get(out)
+    return out if e is None else unpad(out, e)
+
+
 def run_sharded(batched_fn, batch: Any, mesh=None) -> Any:
     """Run ``batched_fn`` (vmapped over the leading axis) with the
     experiment axis sharded across ``mesh``.
@@ -96,11 +150,7 @@ def run_sharded(batched_fn, batch: Any, mesh=None) -> Any:
     Handles pad -> place -> jit -> unpad; the single-device path is just
     ``jit(batched_fn)(batch)``.
     """
-    fn = jax.jit(batched_fn)
     if mesh is None:
-        return fn(batch)
-    padded, e = pad_batch(batch, shard_count(mesh))
-    placed = shard_batch(padded, mesh)
-    with mesh_lib.activate_mesh(mesh):
-        out = fn(placed)
-    return unpad(jax.device_get(out), e)
+        return jax.jit(batched_fn)(batch)
+    out, e = dispatch_sharded(batched_fn, batch, mesh)
+    return resolve(out, e)

@@ -20,14 +20,17 @@ import enum
 import hashlib
 import json
 import os
+import tempfile
 from typing import Any, Dict, Iterable, List, Optional
 
 import numpy as np
 
-_SCHEMA = 2          # bump to invalidate every cached cell
+_SCHEMA = 3          # bump to invalidate every cached cell
 #   2: cells gained the eps / rho / L scalar fields (single-compile
 #      cohorts) and worker-axis randomness became restriction-stable,
 #      which changes every trajectory — old entries must not be served
+#   3: histories gained the per-round realized Lemma-1 terms a_t / b_t
+#      (and their *_final / *_tail metrics) — old entries lack them
 
 
 def jsonable(v: Any) -> Any:
@@ -99,11 +102,39 @@ class SweepStore:
                "result": {"cell": jsonable(result.get("cell", cell)),
                           "metrics": jsonable(result["metrics"]),
                           "history": jsonable(result.get("history", {}))}}
-        tmp = p + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f)
-        os.replace(tmp, p)
+        self._atomic_write(p, json.dumps(doc))
         return p
+
+    def _atomic_write(self, path: str, payload: str) -> None:
+        """tmp file + ``os.replace``: readers never observe a partial
+        document, and concurrent writers (the async runtime's writer
+        thread, multiple hosts merging) each stage through a UNIQUE tmp
+        name, so the last complete write wins instead of two writers
+        interleaving into one tmp file."""
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def merge(self, other: "SweepStore") -> int:
+        """Copy every entry of ``other`` into this store (atomic per
+        entry, same-hash entries overwritten — identical by construction
+        since the hash names the canonical cell).  Returns the number of
+        entries merged.  This is how multi-host sweeps combine per-host
+        result sets into one store (``repro.runtime.multihost``)."""
+        n = 0
+        for fn in sorted(os.listdir(other.root)):
+            if not fn.endswith(".json"):
+                continue
+            with open(os.path.join(other.root, fn)) as f:
+                self._atomic_write(os.path.join(self.root, fn), f.read())
+            n += 1
+        return n
 
     def __len__(self) -> int:
         return len([f for f in os.listdir(self.root)

@@ -199,8 +199,9 @@ def test_padded_masked_round_op_exact():
         jnp.concatenate([W, jnp.tile(w_prev[None], (pad, 1))]),
         jnp.concatenate([k_i, jnp.zeros((pad,))]),
         jnp.asarray([1.0] * U + [0.0] * pad, jnp.float32))
-    for a, b, name in zip(plain, padded,
-                          ("flat", "delta", "carry", "sel", "b")):
+    names = ("flat", "delta", "carry", "sel", "b", "a_t", "b_t")
+    assert len(plain) == len(padded) == len(names)
+    for a, b, name in zip(plain, padded, names):
         if name == "carry":
             continue
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
