@@ -51,19 +51,31 @@ def _paths(tree) -> Tuple[list, Any]:
 
 def save(directory: str, step: int, tree: Any,
          extra: Optional[Dict[str, Any]] = None,
-         keep: Optional[int] = None) -> str:
-    """Write a checkpoint; returns its path. Atomic via tmp-dir rename."""
+         keep: Optional[int] = None,
+         arrays: Optional[Dict[str, np.ndarray]] = None) -> str:
+    """Write a checkpoint; returns its path. Atomic via tmp-dir rename.
+
+    ``arrays`` is an optional flat name -> ndarray side channel saved
+    next to the tree (read back with :func:`load_arrays`).  Unlike the
+    tree it needs no structure template on restore — the sweep runtime
+    uses it for accumulated per-round histories, whose key set isn't
+    known until the first block has run.
+    """
     names, _ = _paths(tree)
     leaves = jax.tree.leaves(tree)
     out = os.path.join(directory, f"step_{step}")
     tmp = out + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    arrays, dtypes = {}, []
+    packed, dtypes = {}, []
     for i, x in enumerate(leaves):
         a, dt = _to_numpy_safe(np.asarray(jax.device_get(x)))
-        arrays[f"a{i}"] = a
+        packed[f"a{i}"] = a
         dtypes.append(dt)
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    if arrays:
+        np.savez(os.path.join(tmp, "extra_arrays.npz"),
+                 **{k: np.asarray(jax.device_get(v))
+                    for k, v in arrays.items()})
     meta = {
         "step": step,
         "names": names,
@@ -78,6 +90,20 @@ def save(directory: str, step: int, tree: Any,
     if keep is not None:
         _gc(directory, keep)
     return out
+
+
+def load_arrays(directory: str, step: Optional[int] = None
+                ) -> Dict[str, np.ndarray]:
+    """The ``arrays`` side channel of a checkpoint ({} when none saved)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    p = os.path.join(directory, f"step_{step}", "extra_arrays.npz")
+    if not os.path.exists(p):
+        return {}
+    with np.load(p) as data:
+        return {k: data[k] for k in data.files}
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -35,7 +35,11 @@ def case_numerator(case: Case, k_i, c: LearningConstants,
     """The case-dependent constant C in R_t[d] (same for every entry d)."""
     k_i = jnp.asarray(k_i, dtype=jnp.float32)
     K = jnp.sum(k_i)
-    U = k_i.shape[0]
+    # count REAL workers (k_i > 0), not the array extent: ragged sweep
+    # cohorts pad the worker axis with k_i = 0 entries, and eq. 37's
+    # leading U must not inflate with the padding (bit-equal to the
+    # Python-int U on unpadded fleets, where every worker has samples)
+    U = jnp.sum(k_i > 0)
     if case == Case.GD_CONVEX:
         return K * c.rho1 + 2.0 * K * c.L * c.rho2 * delta_prev
     if case == Case.GD_NONCONVEX:

@@ -2,6 +2,13 @@
 
 Full-batch GD by default; mini-batch SGD when ``k_b`` is given (paper
 Sec. IV-C).  One gradient step per round, as in Algorithm 1 line 4.
+
+Minibatch draws are RESTRICTION-STABLE: each sample's selection priority
+derives from ``fold_in(key, sample_index)``, so a worker padded from K_i
+to any larger K_max (ragged sweep cohorts) draws exactly the samples —
+in exactly the order — its standalone run would.  This is the same
+per-index-key rule the worker axis uses (``repro.core.channel``), and it
+is what lets ``k_b`` / SGD cells join ragged cohort merges bit-exactly.
 """
 
 from __future__ import annotations
@@ -10,12 +17,34 @@ import jax
 import jax.numpy as jnp
 
 
+def minibatch_indices(key, mask, k_b: int) -> jax.Array:
+    """``k_b`` indices drawn uniformly without replacement from the real
+    samples of a (possibly padded) block.
+
+    Every sample gets a priority ``uniform(fold_in(key, i))`` — a
+    function of the key and the sample's INDEX only — and the ``k_b``
+    smallest-priority real samples win (padding is pushed to +inf).
+    Uniformity: the priorities of the real samples are iid continuous,
+    so their ranking is a uniform random permutation and its first
+    ``k_b`` elements are a uniform without-replacement draw.  Stability:
+    growing the block adds only +inf priorities, leaving both the chosen
+    set and its order untouched — unlike ``jax.random.choice``, whose
+    draw depends on the block length.
+    """
+    k_max = mask.shape[0]
+    pri = jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(
+            jnp.arange(k_max))
+    pri = jnp.where(mask > 0, pri, jnp.inf)
+    return jnp.argsort(pri)[:k_b]
+
+
 def local_update(task, params, x, y, lr: float, *, key=None,
                  k_b: int | None = None, steps: int = 1):
     """Returns the worker's updated local parameters w_i (pytree)."""
     def one_step(p, k):
         if k_b is not None:
-            idx = jax.random.choice(k, x.shape[0], (k_b,), replace=False)
+            idx = minibatch_indices(k, jnp.ones((x.shape[0],)), k_b)
             xb, yb = x[idx], y[idx]
         else:
             xb, yb = x, y
@@ -51,9 +80,8 @@ def local_update_masked(task, params, x, y, mask, lr: float, *, key,
 
     def one_step(p, k):
         if k_b is not None:
-            # uniform over the worker's real samples only
-            idx = jax.random.choice(k, x.shape[0], (k_b,), replace=False,
-                                    p=mask / jnp.sum(mask))
+            # restriction-stable draw over the worker's real samples only
+            idx = minibatch_indices(k, mask, k_b)
             xb, yb = x[idx], y[idx]
             mb = jnp.ones((k_b,), mask.dtype)
         else:

@@ -37,7 +37,8 @@ from repro.fl.engine import (Backend, Engine, FLConfig, RoundState,
 from repro.fl.models import TaskModel
 
 __all__ = ["Backend", "FLConfig", "FLTrainer", "pad_workers",
-           "scan_experiment"]
+           "scan_experiment", "scan_experiment_init",
+           "scan_experiment_block"]
 
 
 def _pad_axis0(a: jnp.ndarray, k_max: int) -> jnp.ndarray:
@@ -117,6 +118,64 @@ def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
             lambda f: task.metrics(engine.unravel(f), ex, ey))(flats[idx])
         out.update(ms)
     return out
+
+
+def scan_experiment_init(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
+                         key, wmask=None) -> RoundState:
+    """The pre-scan half of ``scan_experiment``: params init + engine init.
+
+    Splitting ``scan_experiment`` into init + round blocks is what lets
+    long cohorts checkpoint at scan boundaries: chaining
+    ``scan_experiment_block`` calls from this state is bit-identical to
+    one full-length scan (``lax.scan`` carries no cross-iteration
+    compiler state), so a resumed run reproduces the uninterrupted one
+    byte for byte.
+    """
+    kinit, kround = jax.random.split(key)
+    params = task.init(kinit)
+    engine = build_engine(task, X, Y, mask, k_i, cfg, params, wmask=wmask)
+    flat0, _ = ravel_pytree(params)
+    return engine.init(flat0, kround)
+
+
+def scan_experiment_block(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
+                          state: RoundState, length: int,
+                          eval_offsets: Tuple[int, ...] = (),
+                          eval_xy: Optional[Tuple[Any, Any]] = None,
+                          wmask=None
+                          ) -> Tuple[RoundState, Dict[str, jax.Array]]:
+    """``length`` rounds of ``scan_experiment`` from a carried state.
+
+    ``eval_offsets`` are the BLOCK-LOCAL round indices at which to
+    evaluate metrics (the caller maps the global ``t % eval_every == 0``
+    grid into each block), so concatenating per-block histories
+    reproduces the full-scan histories exactly.  Returns the carried
+    state plus the block's slice of every history key — ``flat`` is not
+    included; the final parameters live in the returned state.
+    """
+    # params values are irrelevant here (only the pytree structure feeds
+    # the engine's unravel); a constant key keeps the template unbatched
+    # under the sweep engine's vmap over experiments.
+    params = task.init(jax.random.PRNGKey(0))
+    engine = build_engine(task, X, Y, mask, k_i, cfg, params, wmask=wmask)
+    collect = eval_xy is not None
+
+    def body(s, _):
+        s2, stats = engine.step(s, None)
+        return s2, (stats, s2.flat if collect else None)
+
+    state, (stats, flats) = jax.lax.scan(body, state, None, length=length)
+    out = {"selected": stats.selected, "b": stats.b_mean,
+           "a_t": stats.a_t, "b_t": stats.b_t}
+    if collect:
+        ex, ey = (jnp.asarray(eval_xy[0]), jnp.asarray(eval_xy[1]))
+        idx = jnp.asarray(np.asarray(eval_offsets, np.int32))
+        # vmap over a zero-length axis is fine: a block with no eval
+        # rounds still emits every metric key, with a (0,) history
+        ms = jax.vmap(
+            lambda f: task.metrics(engine.unravel(f), ex, ey))(flats[idx])
+        out.update(ms)
+    return state, out
 
 
 class FLTrainer:

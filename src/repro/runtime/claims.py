@@ -1,0 +1,154 @@
+"""Work-stealing claim board: filesystem leases over sweep cohorts.
+
+Elastic multi-host sweeps coordinate through atomic claim files under
+the shared store root instead of a static partition:
+
+    <root>/.runtime/claims/<sig>.json     {"host": k, "acquired": ts}
+
+A host CLAIMS a cohort by creating its claim file with
+``O_CREAT | O_EXCL`` — the filesystem's only-one-winner primitive — and
+then heartbeats the file's mtime while it computes.  A claim whose mtime
+is older than the lease timeout belongs to a dead (or wedged) host and
+may be STOLEN: the stealer writes a fresh claim document to a unique tmp
+name and ``os.replace``s it over the stale file.  Two concurrent
+stealers simply both succeed — the cohort is computed twice, which is
+benign by construction: cohort results are deterministic and store
+writes are atomic whole-file replaces, so the second writer lands
+byte-identical files.
+
+This gives the elastic properties for free:
+
+  * late joiners need no announcement — they claim whatever is left;
+  * a killed host's work reappears after one lease timeout;
+  * zero coordination messages — every decision reads the filesystem.
+
+The claim's job is to prevent WASTE, not to guarantee exclusion;
+correctness never depends on a lease.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.runtime import faults
+
+CLAIMS_DIRNAME = os.path.join(".runtime", "claims")
+
+
+class ClaimBoard:
+    """Per-host view of the claim directory (one per store root)."""
+
+    def __init__(self, store_root: str, host_id: int,
+                 lease_timeout: float = 60.0):
+        if lease_timeout <= 0:
+            raise ValueError(
+                f"lease_timeout must be positive, got {lease_timeout}")
+        self.dir = os.path.join(store_root, CLAIMS_DIRNAME)
+        self.host_id = host_id
+        self.lease_timeout = lease_timeout
+        self._held: Set[str] = set()
+        self._lock = threading.Lock()
+        self._hb_stop: Optional[threading.Event] = None
+        self._hb_thread: Optional[threading.Thread] = None
+        os.makedirs(self.dir, exist_ok=True)
+
+    def _path(self, sig: str) -> str:
+        return os.path.join(self.dir, f"{sig}.json")
+
+    # ------------------------------------------------------------ claiming
+    def try_claim(self, sig: str) -> bool:
+        """Acquire the cohort: fresh claim, or steal a stale lease.
+
+        Returns True when this host now holds the claim.  False means a
+        live lease exists (another host is computing the cohort) — check
+        back after work or a poll interval.
+        """
+        doc = json.dumps({"host": self.host_id, "acquired": time.time()})
+        path = self._path(sig)
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            if not self._stale(path):
+                return False
+            # steal: replace the stale claim atomically; concurrent
+            # stealers both "win" (benign double-compute, see module doc)
+            fd2, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+            try:
+                with os.fdopen(fd2, "w") as f:
+                    f.write(doc)
+                os.replace(tmp, path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+        else:
+            with os.fdopen(fd, "w") as f:
+                f.write(doc)
+        with self._lock:
+            self._held.add(sig)
+        faults.fire("crash_after_claim")
+        return True
+
+    def _stale(self, path: str) -> bool:
+        try:
+            return time.time() - os.path.getmtime(path) > self.lease_timeout
+        except OSError:
+            # claim released between our existence check and the stat:
+            # report stale so the caller immediately retries the acquire
+            return True
+
+    def release(self, sig: str, *, completed: bool = True) -> None:
+        """Drop the claim.  Call AFTER the cohort's results are durable
+        (the gap between a result write and its release is covered by the
+        store's idempotent puts, not by the lease)."""
+        with self._lock:
+            self._held.discard(sig)
+        try:
+            os.unlink(self._path(sig))
+        except FileNotFoundError:
+            pass                          # a stealer replaced + released
+
+    def held(self) -> List[str]:
+        with self._lock:
+            return sorted(self._held)
+
+    # ----------------------------------------------------------- heartbeat
+    def start_heartbeat(self) -> None:
+        """Touch every held claim at lease/4 so live work is never
+        stolen; a host that dies stops touching and its claims go stale
+        one lease later."""
+        if self._hb_thread is not None:
+            return
+        self._hb_stop = threading.Event()
+
+        def beat(stop=self._hb_stop):
+            while not stop.wait(self.lease_timeout / 4.0):
+                for sig in self.held():
+                    try:
+                        os.utime(self._path(sig))
+                    except OSError:
+                        pass              # stolen or released: no claim
+
+        self._hb_thread = threading.Thread(target=beat, name="claim-beat",
+                                           daemon=True)
+        self._hb_thread.start()
+
+    def stop_heartbeat(self) -> None:
+        if self._hb_stop is not None:
+            self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join()
+        self._hb_stop = None
+        self._hb_thread = None
+
+    def __enter__(self) -> "ClaimBoard":
+        self.start_heartbeat()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop_heartbeat()

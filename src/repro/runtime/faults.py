@@ -1,0 +1,209 @@
+"""Deterministic fault injection for the sweep runtime.
+
+The paper's premise is surviving non-ideal conditions; this module makes
+the runtime's own failure modes *reproducible* so chaos tests and CI can
+assert recovery instead of hoping for it.  A :class:`FaultPlan` names
+injection points the runtime calls at well-defined sites
+(``fire(point, ...)``); a plan is selected per process via the
+``REPRO_FAULTS`` environment variable or the sweep CLI's ``--fault``
+flag, so a subprocess "host" can be killed at an exact cohort while the
+survivor's plan stays empty.
+
+Grammar (comma-separated specs):
+
+    point[:arg[:arg]][!]
+
+A trailing ``!`` hard-kills the process (``os._exit(43)``) instead of
+raising :class:`InjectedFault` — the difference between a crash the
+interpreter can unwind (exception propagation, tmp-file cleanup) and a
+power-cut/preemption (nothing runs afterwards).
+
+Points and their args:
+
+    crash_before_put:N        Nth ``SweepStore.put`` (1-based counter)
+    crash_mid_put:N           Nth put, AFTER the tmp file is written but
+                              BEFORE ``os.replace`` — the partial-write
+                              window.  Raise mode deliberately leaves the
+                              tmp file behind (see ``InjectedFault``).
+    corrupt_tmp_write:N       truncate the Nth store payload mid-write,
+                              simulating an interrupted writer whose tmp
+                              still got renamed (checksum must catch it)
+    delay_resolve:SECONDS     sleep in every cohort resolve (straggler)
+    crash_after_block:N       after the Nth checkpointed round block is
+                              saved (mid-cohort crash; resume must pick
+                              up from the block boundary)
+    crash_after_claim:N       after winning the Nth work-stealing claim
+    kill_at_cohort:K          when dispatching the cohort whose plan
+                              order is K (host-kill-at-cohort-k)
+    fail_cohort:K             raise on EVERY dispatch of cohort K
+                              (drives retry exhaustion -> quarantine)
+    flaky_cohort:K:M          fail the first M dispatches of cohort K,
+                              then succeed (drives retry-then-recover)
+
+Examples::
+
+    REPRO_FAULTS="crash_before_put:3!" python -m repro.sweep ...
+    python -m repro.sweep --fault kill_at_cohort:1! --host-id 1 ...
+
+Everything is counter-based and process-local, so a given plan fires at
+the same site on every run — determinism is the whole point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+_ENV = "REPRO_FAULTS"
+_EXIT_CODE = 43          # distinctive: "died by injected fault"
+
+_POINTS = ("crash_before_put", "crash_mid_put", "corrupt_tmp_write",
+           "delay_resolve", "crash_after_block", "crash_after_claim",
+           "kill_at_cohort", "fail_cohort", "flaky_cohort")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a soft (non-``!``) fault.
+
+    Sites that guard a partial-write window (``SweepStore._atomic_write``)
+    treat this exception as a HARD crash for cleanup purposes — they leave
+    their tmp file behind — so in-process tests exercise the same on-disk
+    aftermath a real kill would leave.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    point: str
+    args: Tuple[str, ...]
+    hard: bool                   # '!': os._exit instead of raising
+
+    @property
+    def n(self) -> int:
+        """First numeric arg (default 1): counter threshold or cohort id."""
+        return int(self.args[0]) if self.args else 1
+
+
+class FaultPlan:
+    """A set of specs plus the per-point invocation counters."""
+
+    def __init__(self, specs: List[FaultSpec]):
+        self.specs = specs
+        self._counts: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def __bool__(self) -> bool:
+        return bool(self.specs)
+
+    # ------------------------------------------------------------ triggers
+    def _bump(self, point: str) -> int:
+        with self._lock:
+            self._counts[point] = self._counts.get(point, 0) + 1
+            return self._counts[point]
+
+    def _trip(self, spec: FaultSpec) -> None:
+        if spec.hard:
+            # flush so the test harness sees output written before death
+            sys.stdout.flush()
+            sys.stderr.flush()
+            os._exit(_EXIT_CODE)
+        raise InjectedFault(f"injected fault: {spec.point}:"
+                            f"{':'.join(spec.args)}")
+
+    def fire(self, point: str, *, cohort: Optional[int] = None) -> None:
+        """Trip any spec matching ``point`` at this invocation.
+
+        Counter points (``crash_*``, ``corrupt_*``) trip on their Nth
+        call; cohort points (``kill_at_cohort`` / ``fail_cohort`` /
+        ``flaky_cohort``) match on the dispatched cohort's plan order.
+        """
+        specs = [s for s in self.specs if s.point == point]
+        if not specs:
+            return
+        if point in ("kill_at_cohort", "fail_cohort", "flaky_cohort"):
+            for s in specs:
+                if cohort is None or s.n != cohort:
+                    continue
+                if s.point == "flaky_cohort":
+                    m = int(s.args[1]) if len(s.args) > 1 else 1
+                    if self._bump(f"flaky:{cohort}") > m:
+                        continue
+                self._trip(s)
+            return
+        count = self._bump(point)
+        for s in specs:
+            if count == s.n:
+                self._trip(s)
+
+    def delay(self, point: str) -> None:
+        """Sleep for the spec's arg seconds (every invocation)."""
+        for s in self.specs:
+            if s.point == point:
+                time.sleep(float(s.args[0]) if s.args else 0.1)
+
+    def corrupt(self, point: str, payload: str) -> str:
+        """Return a truncated payload on the matching Nth call."""
+        if not any(s.point == point for s in self.specs):
+            return payload
+        count = self._bump(point)
+        for s in self.specs:
+            if s.point == point and count == s.n:
+                return payload[: max(len(payload) // 2, 1)]
+        return payload
+
+
+def parse(text: str) -> FaultPlan:
+    specs: List[FaultSpec] = []
+    for raw in text.split(","):
+        raw = raw.strip()
+        if not raw:
+            continue
+        hard = raw.endswith("!")
+        raw = raw[:-1] if hard else raw
+        point, *args = raw.split(":")
+        if point not in _POINTS:
+            raise ValueError(
+                f"unknown fault point {point!r}; known: {_POINTS}")
+        specs.append(FaultSpec(point=point, args=tuple(args), hard=hard))
+    return FaultPlan(specs)
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def active() -> FaultPlan:
+    """The process's plan: installed > $REPRO_FAULTS > empty."""
+    global _ACTIVE
+    if _ACTIVE is None:
+        _ACTIVE = parse(os.environ.get(_ENV, ""))
+    return _ACTIVE
+
+
+def install(plan: Optional[FaultPlan]) -> None:
+    """Install a plan programmatically (None re-reads the environment on
+    next use).  Tests use this to inject without spawning subprocesses."""
+    global _ACTIVE
+    _ACTIVE = plan
+
+
+# Call-site helpers: no-ops (one dict lookup) when no plan is active.
+
+def fire(point: str, *, cohort: Optional[int] = None) -> None:
+    plan = active()
+    if plan:
+        plan.fire(point, cohort=cohort)
+
+
+def delay(point: str) -> None:
+    plan = active()
+    if plan:
+        plan.delay(point)
+
+
+def corrupt(point: str, payload: str) -> str:
+    plan = active()
+    return plan.corrupt(point, payload) if plan else payload

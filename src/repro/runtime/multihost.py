@@ -1,35 +1,37 @@
-"""Multi-host sweep execution: per-host cohort slices + a merged store.
+"""Elastic multi-host sweep execution: work-stealing claims over a
+shared store.
 
-A grid's cohort plan is deterministic, so every host can compute it
-independently and agree on who runs what without any communication:
-cohorts are assigned by a cost-balanced LPT partition (costliest cohort
-to the least-loaded host, ties by host id), each host runs its slice
-through the SAME async scheduler (``repro.runtime.scheduler``) over its
-LOCAL device mesh (``repro.sweep.shard.local_sweep_mesh`` — never a
-global mesh, which would turn independent cohorts into cross-process
-collectives), and results land in a per-host store under the shared
-store root:
+Hosts coordinate through the filesystem only (``runtime.claims``):
 
-    <root>/host0/<hash>.json      host 0's results
-    <root>/host1/<hash>.json      host 1's results
-    <root>/host0.done             completion sentinel (cells finished)
-    <root>/<hash>.json            merged result set (host 0 merges)
+    <root>/<hash>.json               results — every host writes the
+                                     shared root store directly (atomic
+                                     whole-file puts)
+    <root>/.runtime/claims/<sig>.json  cohort leases (heartbeated mtime)
+    <root>/failed/<sig>.json         quarantine records
+    <root>/host<k>.done              completion sentinel (observability)
 
-Coordination model: when a ``coordinator`` address is given,
-``jax.distributed.initialize`` connects the processes first — it blocks
-until every host joins, doubling as a start barrier.  Without a
-coordinator the same partition runs purely filesystem-coordinated
-(launch N processes with ``--num-hosts N --host-id k`` by hand).
-Either way, sentinels are validated, not trusted: each carries the
-deterministic fingerprint of the assignment it completed
-(``_plan_signature``), so a sentinel left behind by a previous
-interrupted launch — whose pending set, and therefore partition,
-differed — is rejected as stale rather than merged as a finished host.
+Each host computes the same deterministic cohort plan, then loops:
+claim up to a working set of ``jobs + dispatch_ahead`` unfinished
+cohorts (preferring its LPT slice so hosts start on disjoint work), run
+them through the async scheduler over its LOCAL device mesh, release
+the claims, repeat.  When nothing is claimable the host polls: either
+everything is finished, or other hosts hold live leases — and if one of
+those hosts dies, its lease goes stale after ``lease_timeout`` seconds
+and a survivor STEALS the cohort.  Elasticity falls out: kill a host
+mid-sweep and the work reappears; launch an extra host late and it
+claims whatever is left; no assignment message ever crosses the
+network.
 
-Completion uses sentinel files rather than an XLA collective on purpose:
-the merged store already requires a shared filesystem, and a barrier via
-``psum`` would demand cross-process collective support (e.g. gloo) that
-plain CPU containers may lack.
+Determinism makes stealing safe: a cohort's result bytes are identical
+no matter which host computes them (explicit PRNG keys, canonical JSON,
+atomic replaces), so the worst case of a lease race is the same file
+written twice.  Completion is judged by CONTENT, not by roster: host 0
+returns once every grid cell is present in the root store (or covered
+by a quarantine record) — it never waits for a host that died.
+
+``jax.distributed`` (via ``coordinator``) remains optional and only
+provides a start barrier; sentinels are still written per host for
+observability and post-mortems, but nothing blocks on them.
 """
 
 from __future__ import annotations
@@ -38,6 +40,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import shutil
 import sys
 import time
 from typing import Any, Dict, List, Optional
@@ -45,12 +48,19 @@ from typing import Any, Dict, List, Optional
 from repro.sweep import grid as grid_lib
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
+from repro.runtime import claims as claims_lib
+from repro.runtime import resilience
 from repro.runtime import scheduler as sched_lib
 
 
 @dataclasses.dataclass(frozen=True)
 class HostSpec:
-    """This process's place in the multi-host launch."""
+    """This process's place in the multi-host launch.
+
+    ``num_hosts`` is a planning hint (LPT preference + sentinel roster),
+    not a membership contract: work-stealing lets fewer or more hosts
+    than planned finish the sweep.
+    """
 
     num_hosts: int = 1
     host_id: int = 0
@@ -77,21 +87,19 @@ def partition(cohort_list: List[grid_lib.Cohort],
               num_hosts: int) -> List[List[int]]:
     """Cost-balanced cohort assignment: indices into ``cohort_list`` per
     host (LPT: costliest first onto the least-loaded host).  Pure and
-    deterministic — every host computes the identical partition, so no
-    assignment message ever crosses the network."""
+    deterministic — every host computes the identical partition.  Under
+    work stealing this is a PREFERENCE (hosts start on disjoint slices
+    and steal across them only when idle), which keeps the no-failure
+    fast path contention-free."""
     if num_hosts < 1:
         raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
     assign: List[List[int]] = [[] for _ in range(num_hosts)]
-    load = [0] * num_hosts
+    load = [0.0] * num_hosts
     for entry in sched_lib.schedule(cohort_list):
         h = min(range(num_hosts), key=lambda i: (load[i], i))
         assign[h].append(entry.order)
         load[h] += max(entry.cost, 1)
     return [sorted(ids) for ids in assign]
-
-
-def _host_dir(root: str, host_id: int) -> str:
-    return os.path.join(root, f"host{host_id}")
 
 
 def _sentinel(root: str, host_id: int) -> str:
@@ -100,14 +108,12 @@ def _sentinel(root: str, host_id: int) -> str:
 
 def _plan_signature(plan: List[grid_lib.Cohort], assigned: List[int],
                     cache_key: Dict[str, Any]) -> str:
-    """Deterministic fingerprint of one host's assignment: the sorted
-    cell hashes of every cohort it runs.  Written into the sentinel and
-    validated by host 0, so a sentinel left behind by a PREVIOUS
-    interrupted launch (whose pending set — and therefore partition —
-    differed) is rejected as stale instead of being merged as if the
-    host had finished.  A stale sentinel that does match byte-for-byte
-    is safe to accept: sentinels are written only after every result of
-    that exact assignment landed in the host store."""
+    """Deterministic fingerprint of a set of cohorts: the sorted cell
+    hashes of every cohort in ``assigned``.  Written into sentinels so a
+    post-mortem can tell which launch a sentinel belonged to; stale
+    sentinels are harmless now that completion is store-content-based,
+    but :func:`_wait_for_hosts` still validates against it for callers
+    that want a roster-confirmed barrier."""
     hashes = sorted(store_lib.cell_hash(c, cache_key)
                     for i in assigned for c in plan[i].cells)
     return hashlib.sha256("|".join(hashes).encode()).hexdigest()[:16]
@@ -115,6 +121,11 @@ def _plan_signature(plan: List[grid_lib.Cohort], assigned: List[int],
 
 def _wait_for_hosts(root: str, expected: Dict[int, str],
                     timeout: float) -> Dict[int, Dict[str, Any]]:
+    """Block until every expected host's sentinel (matching its plan
+    signature) exists.  A roster-confirmed barrier for launches that
+    want every planned host to check in — the elastic sweep path itself
+    does NOT call this (a dead host would block it forever); it judges
+    completion by store content instead."""
     deadline = time.time() + timeout
     done: Dict[int, Dict[str, Any]] = {}
     while len(done) < len(expected):
@@ -139,25 +150,33 @@ def run_spec_multihost(spec: grid_lib.SweepSpec, *, store_root: str,
                        hs: HostSpec, jobs: int = 1,
                        dispatch_ahead: Optional[int] = None,
                        devices: Optional[int] = None,
-                       verbose: bool = False, timeout: float = 3600.0
-                       ) -> Optional[List[Dict[str, Any]]]:
-    """Run this host's cohort slice; merge and return results on host 0.
+                       verbose: bool = False, timeout: float = 3600.0,
+                       lease_timeout: float = 60.0,
+                       checkpoint_every: Optional[int] = None,
+                       max_retries: int = 0, retry_backoff: float = 0.5,
+                       quarantine: bool = False
+                       ) -> Optional[List[Optional[Dict[str, Any]]]]:
+    """Run the grid elastically; collect and return results on host 0.
 
     Every host: computes the full (deterministic) plan, serves cache
-    hits from the already-merged root store, runs its assigned pending
-    cohorts through the async scheduler into ``<root>/host<k>``, then
-    writes its completion sentinel.  Host 0 additionally waits for every
-    sentinel, merges the per-host stores into the root, and returns the
-    full result list in grid order; other hosts return None.
+    hits from the shared root store, then work-steals pending cohorts
+    via claim leases (see module doc), writing results DIRECTLY to the
+    root store.  Host 0 returns the full result list in grid order once
+    every cell is present (or quarantined — those cells yield ``None``
+    and a ``failed/`` record); other hosts return None.
 
-    ``jobs=1`` still uses the scheduler (a 1-thread pool with overlapped
-    writer I/O) — the serial fallback only matters in-process, where
-    ``run_spec`` keeps the exact legacy loop.
+    ``lease_timeout`` bounds how long a dead host's claim blocks its
+    cohorts.  ``checkpoint_every`` additionally checkpoints the scan
+    carry under the SHARED ``.runtime/ckpt/`` tree, so a stolen cohort
+    resumes from the dead host's last block instead of restarting.
+    Retry/quarantine semantics match ``run_spec``.
     """
     initialize(hs)
     cache_key = grid_lib.spec_cache_key(spec)
     cell_list = grid_lib.cells(spec)
     root_store = store_lib.SweepStore(store_root)
+    # tmp debris older than the lease has no live writer behind it
+    root_store.gc_tmp(lease_timeout)
 
     # clear MY stale sentinel before any work (post-initialize: with a
     # coordinator every host has passed the join barrier by now)
@@ -170,33 +189,107 @@ def run_spec_multihost(spec: grid_lib.SweepSpec, *, store_root: str,
             pending_cells.append(cell)
             pending_idx.append(i)
     plan = grid_lib.cohorts(pending_cells, pending_idx)
+    costs = store_lib.CostBook(store_root)
+    entries = sched_lib.schedule(plan, costs=costs)
     parts = partition(plan, hs.num_hosts)
-    mine = parts[hs.host_id]
+    prefer = set(parts[hs.host_id]) if hs.host_id < len(parts) else set()
+    ordered = ([e for e in entries if e.order in prefer]
+               + [e for e in entries if e.order not in prefer])
+    sigs = {e.order: grid_lib.cohort_signature(e.cohort, cache_key)
+            for e in entries}
+    cell_paths = {e.order: [root_store.path(c, cache_key)
+                            for c in e.cohort.cells] for e in entries}
     if verbose:
-        print(f"# host {hs.host_id}/{hs.num_hosts}: "
-              f"{len(mine)}/{len(plan)} pending cohort(s), "
+        print(f"# host {hs.host_id}/{hs.num_hosts}: {len(plan)} pending "
+              f"cohort(s) ({len(prefer)} preferred), "
               f"{len(cell_list) - len(pending_cells)} cache hits",
               file=sys.stderr)
 
-    host_store = store_lib.SweepStore(_host_dir(store_root, hs.host_id))
-    finished = 0
+    def cohort_done(order: int) -> bool:
+        # results are durable the instant they exist (atomic puts), so
+        # presence IS completion; a quarantine record also accounts for
+        # the cohort (host 0 reports it instead of hanging)
+        if all(os.path.exists(p) for p in cell_paths[order]):
+            return True
+        return os.path.exists(os.path.join(
+            store_root, resilience.FAILED_DIRNAME,
+            f"{sigs[order]}.json"))
+
+    computed = 0
 
     def sink(cohort: grid_lib.Cohort, outs: List[Dict[str, Any]]) -> None:
-        nonlocal finished
+        nonlocal computed
         for res in outs:
-            host_store.put(res["cell"], res, cache_key)
-        finished += len(outs)
+            root_store.put(res["cell"], res, cache_key)
+        computed += len(outs)
+        if checkpoint_every is not None:
+            sig = grid_lib.cohort_signature(cohort, cache_key)
+            shutil.rmtree(grid_lib.ckpt_dir_for(store_root, sig),
+                          ignore_errors=True)
 
-    my_cohorts = [plan[i] for i in mine]
-    if my_cohorts:
-        sched_lib.run_cohorts(
-            my_cohorts, sink=sink, jobs=max(jobs, 1),
-            dispatch_ahead=dispatch_ahead, do_eval=spec.eval,
-            tail=spec.tail, mesh=shard_lib.local_sweep_mesh(devices),
-            verbose=verbose)
-    doc = {"host": hs.host_id, "cohorts": len(my_cohorts),
-           "cells": finished,
-           "plan": _plan_signature(plan, mine, cache_key)}
+    window = max(jobs, 1) + (dispatch_ahead if dispatch_ahead is not None
+                             else sched_lib.DEFAULT_DISPATCH_AHEAD)
+    mesh = shard_lib.local_sweep_mesh(devices)
+    deadline = time.time() + timeout
+    done_orders: set = set()
+    board = claims_lib.ClaimBoard(store_root, hs.host_id,
+                                  lease_timeout=lease_timeout)
+    with board:
+        while True:
+            batch: List[sched_lib.ScheduledCohort] = []
+            for e in ordered:
+                if e.order in done_orders:
+                    continue
+                if cohort_done(e.order):
+                    done_orders.add(e.order)
+                    continue
+                if board.try_claim(sigs[e.order]):
+                    batch.append(e)
+                    if len(batch) >= window:
+                        break
+            if batch:
+                if verbose:
+                    stolen = [e.order for e in batch
+                              if e.order not in prefer]
+                    note = f" (stolen: {stolen})" if stolen else ""
+                    print(f"# host {hs.host_id}: claimed "
+                          f"{[e.order for e in batch]}{note}",
+                          file=sys.stderr)
+                try:
+                    sched_lib.run_cohorts(
+                        [e.cohort for e in batch], sink=sink,
+                        jobs=max(jobs, 1), dispatch_ahead=dispatch_ahead,
+                        do_eval=spec.eval, tail=spec.tail, mesh=mesh,
+                        verbose=verbose, costs=costs,
+                        store_root=store_root, cache_key=cache_key,
+                        resume=checkpoint_every is not None,
+                        checkpoint_every=checkpoint_every,
+                        max_retries=max_retries,
+                        retry_backoff=retry_backoff,
+                        quarantine=quarantine)
+                finally:
+                    # even on failure: finished results are durable, and
+                    # unfinished cohorts should be stealable immediately
+                    for e in batch:
+                        board.release(sigs[e.order])
+                continue            # claim the next working set at once
+            remaining = [e.order for e in ordered
+                         if e.order not in done_orders
+                         and not cohort_done(e.order)]
+            if not remaining:
+                break
+            if time.time() > deadline:
+                raise TimeoutError(
+                    f"host {hs.host_id}: {len(remaining)} cohort(s) "
+                    f"still unfinished after {timeout}s (live leases "
+                    f"held elsewhere?)")
+            # other hosts hold live leases: poll for their results (or
+            # for their leases to go stale and become stealable)
+            time.sleep(min(1.0, lease_timeout / 4.0))
+
+    doc = {"host": hs.host_id, "cohorts": len(plan), "cells": computed,
+           "plan": _plan_signature(plan, [e.order for e in entries],
+                                   cache_key)}
     with open(_sentinel(store_root, hs.host_id) + ".tmp", "w") as f:
         json.dump(doc, f)
     os.replace(_sentinel(store_root, hs.host_id) + ".tmp",
@@ -205,24 +298,26 @@ def run_spec_multihost(spec: grid_lib.SweepSpec, *, store_root: str,
     if hs.host_id != 0:
         return None
 
-    _wait_for_hosts(store_root,
-                    {h: _plan_signature(plan, parts[h], cache_key)
-                     for h in range(hs.num_hosts)}, timeout)
-    for h in range(hs.num_hosts):
-        hdir = _host_dir(store_root, h)
-        if os.path.isdir(hdir):
-            root_store.merge(store_lib.SweepStore(hdir))
-    results: List[Dict[str, Any]] = []
-    missing: List[int] = []
+    failed_hashes = resilience.failed_cell_hashes(store_root)
+    results: List[Optional[Dict[str, Any]]] = []
+    quarantined, missing = 0, []
     for i, cell in enumerate(cell_list):
         res = root_store.get(cell, cache_key)
-        if res is None:
-            missing.append(i)
-        else:
+        if res is not None:
             results.append({**res, "cell": cell})
+        elif store_lib.cell_hash(cell, cache_key) in failed_hashes:
+            results.append(None)
+            quarantined += 1
+        else:
+            missing.append(i)
     if missing:
         raise RuntimeError(
-            f"merged store is missing {len(missing)} cell(s) "
-            f"(grid indices {missing[:10]}...): a host wrote its "
-            f"sentinel without all results")
+            f"root store is missing {len(missing)} cell(s) "
+            f"(grid indices {missing[:10]}...) with no quarantine "
+            f"record: completion loop exited early?")
+    if quarantined:
+        print(f"# multihost: {quarantined} cell(s) quarantined — see "
+              f"{os.path.join(store_root, resilience.FAILED_DIRNAME)}/",
+              file=sys.stderr)
+    grid_lib.runtime_gc(store_root)
     return results

@@ -1,0 +1,165 @@
+"""Retry, backoff, and quarantine for failing cohorts.
+
+A cohort that raises is retried up to ``RetryPolicy.max_retries`` times
+with exponential backoff; one that exhausts its retries is either
+re-raised (the historical fail-fast default) or — with quarantine
+enabled — recorded as a structured ``<store>/failed/<sig>.json`` document
+and skipped, so one poisoned configuration cannot sink a thousand-cell
+sweep.  The record names the cohort's cells (and their store hashes), the
+exception, and the traceback, so the failure is diagnosable and re-runnable
+after the fix: quarantined cells simply stay store misses, and the next
+sweep over the same grid recomputes exactly them.
+
+Shared by the serial path (``sweep.grid.run_spec``), the async runtime
+(``runtime.scheduler``), and multi-host work stealing
+(``runtime.multihost``) so all three report failures identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.sweep import grid as grid_lib
+from repro.sweep import store as store_lib
+
+FAILED_DIRNAME = "failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff.
+
+    ``max_retries=0`` (default) preserves fail-fast: the first error
+    propagates.  Attempt k (0-based) sleeps ``backoff_s * 2**k`` before
+    re-running, capped at ``max_backoff_s``.
+    """
+
+    max_retries: int = 0
+    backoff_s: float = 0.5
+    max_backoff_s: float = 30.0
+
+    def sleep_for(self, attempt: int) -> float:
+        return min(self.backoff_s * (2.0 ** attempt), self.max_backoff_s)
+
+
+class QuarantineLog:
+    """``<root>/failed/<sig>.json`` records for cohorts that exhausted
+    their retries.  Atomic per record (tmp + replace), latest wins."""
+
+    def __init__(self, store_root: str):
+        self.dir = os.path.join(store_root, FAILED_DIRNAME)
+
+    def record(self, cohort, sig: str, exc: BaseException,
+               attempts: int, cache_key=None) -> str:
+        os.makedirs(self.dir, exist_ok=True)
+        doc = {
+            "signature": sig,
+            "static": store_lib.jsonable(cohort.static),
+            "cells": [store_lib.jsonable(c) for c in cohort.cells],
+            "cell_hashes": [store_lib.cell_hash(c, cache_key)
+                            for c in cohort.cells],
+            "attempts": attempts,
+            "error": {
+                "type": type(exc).__name__,
+                "message": str(exc),
+                "traceback": traceback.format_exc(),
+            },
+        }
+        path = os.path.join(self.dir, f"{sig}.json")
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    def clear(self, sig: str) -> None:
+        """Drop a record (the cohort later succeeded, e.g. on another
+        host or a resumed run)."""
+        try:
+            os.unlink(os.path.join(self.dir, f"{sig}.json"))
+        except FileNotFoundError:
+            pass
+
+
+def failed_records(store_root: str) -> List[Dict[str, Any]]:
+    """Every quarantine record under a store root (sorted by signature)."""
+    d = os.path.join(store_root, FAILED_DIRNAME)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(d, fn)) as f:
+                out.append(json.load(f))
+        except (json.JSONDecodeError, OSError):
+            continue
+    return out
+
+
+def failed_cell_hashes(store_root: str) -> set:
+    """The store hashes of every quarantined cell — what multi-host
+    completion treats as 'accounted for' next to finished results."""
+    hashes: set = set()
+    for rec in failed_records(store_root):
+        hashes.update(rec.get("cell_hashes", []))
+    return hashes
+
+
+def run_with_retry(execute: Callable[[int], Any], *, policy: RetryPolicy,
+                   quarantine: Optional[QuarantineLog], cohort,
+                   cache_key=None, label: str = "cohort",
+                   verbose: bool = False,
+                   clear_log: Optional[QuarantineLog] = None
+                   ) -> Optional[Any]:
+    """Run ``execute(attempt)`` under ``policy``.
+
+    Returns the result, or ``None`` when the cohort was quarantined.
+    Without a quarantine log the final error propagates (fail-fast).
+    ``clear_log`` (defaults to ``quarantine``) is consulted on success to
+    drop a stale record from an earlier failed run — pass it even when
+    quarantining is off, so a healing re-run clears old records.
+    """
+    import sys
+    attempt = 0
+    while True:
+        try:
+            result = execute(attempt)
+        except Exception as e:
+            if attempt < policy.max_retries:
+                pause = policy.sleep_for(attempt)
+                if verbose:
+                    print(f"# runtime: {label} failed "
+                          f"({type(e).__name__}: {e}); retry "
+                          f"{attempt + 1}/{policy.max_retries} "
+                          f"in {pause:.1f}s", file=sys.stderr)
+                time.sleep(pause)
+                attempt += 1
+                continue
+            if quarantine is None:
+                raise
+            sig = grid_lib.cohort_signature(cohort, cache_key)
+            path = quarantine.record(cohort, sig, e, attempt + 1,
+                                     cache_key)
+            print(f"# runtime: {label} quarantined after "
+                  f"{attempt + 1} attempt(s) -> {path}", file=sys.stderr)
+            return None
+        else:
+            clearer = clear_log if clear_log is not None else quarantine
+            if clearer is not None:
+                # a stale record from an earlier failed run is obsolete
+                clearer.clear(
+                    grid_lib.cohort_signature(cohort, cache_key))
+            return result

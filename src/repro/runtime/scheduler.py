@@ -1,5 +1,5 @@
 """Concurrent cohort scheduler: cost-ordered dispatch with a bounded
-in-flight window.
+in-flight window, bounded retries, and quarantine.
 
 ``run_cohorts`` executes a list of sweep cohorts through three
 overlapping stages instead of a serial loop:
@@ -13,17 +13,29 @@ overlapping stages instead of a serial loop:
                             as completions become READY, not in
                             submission order
 
-Cohorts are dispatched COSTLIEST FIRST (``repro.sweep.grid.cohort_cost``:
-cells x rounds x U_max x D) so the long compiles start immediately while
-cheaper cohorts fill the remaining dispatcher slots — the classic
-longest-processing-time heuristic.  Ordering and concurrency never touch
-numerics: every cohort runs the exact computation the serial path would,
-on explicit PRNG keys, so results are invariant to scheduling (tested in
-``tests/test_runtime.py``).
+Cohorts are dispatched COSTLIEST FIRST.  The cost is the measured
+per-cell wall clock from previous runs when the store's ``CostBook`` has
+the cohort's static key (reality beats any model — walls persist across
+runs and hosts), falling back to the static ``grid.cohort_cost``
+estimate (cells x rounds x U_max x D) rescaled by the median
+measured/static ratio so mixed lists compare on one axis.  Ordering and
+concurrency never touch numerics: every cohort runs the exact
+computation the serial path would, on explicit PRNG keys, so results are
+invariant to scheduling (tested in ``tests/test_runtime.py``).
 
-Errors from any stage (trace, compile, resolve, sink) cancel the
-remaining dispatches, drain the window so no thread deadlocks, and
-re-raise on the calling thread.
+Failure handling is per cohort: an error from any stage (trace, compile,
+resolve, sink) is retried up to ``max_retries`` times with exponential
+backoff; a cohort that exhausts its retries is either quarantined
+(structured ``failed/<sig>.json`` record, the REST of the sweep
+completes) or — the default, preserving the historical contract — cancels
+the remaining dispatches, drains the window so no thread deadlocks, and
+re-raises on the calling thread.
+
+With ``checkpoint_every=R`` cohorts execute through
+``grid.run_cohort_blocks`` on the dispatcher thread (R-round blocks,
+scan-carry checkpoints under ``<store>/.runtime/ckpt/``), so a killed
+process resumes mid-cohort and a retried cohort re-runs only its
+unfinished blocks.
 """
 
 from __future__ import annotations
@@ -32,6 +44,7 @@ import contextlib
 import dataclasses
 import sys
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional
 
@@ -41,6 +54,8 @@ import numpy as np
 from repro.launch import mesh as mesh_lib
 from repro.sweep import grid as grid_lib
 from repro.sweep import shard as shard_lib
+from repro.runtime import faults
+from repro.runtime import resilience
 from repro.runtime.writer import Completion, CompletionWriter
 
 DEFAULT_DISPATCH_AHEAD = 2
@@ -51,17 +66,35 @@ class ScheduledCohort:
     """One cohort with its dispatch priority resolved."""
 
     cohort: grid_lib.Cohort
-    cost: int         # cells x rounds x U_max x D estimate
+    cost: float       # measured wall (s) or scaled static estimate
     order: int        # position in the original (grid) cohort list
 
 
-def schedule(cohort_list: List[grid_lib.Cohort]) -> List[ScheduledCohort]:
-    """Dispatch order: by cost estimate descending, original order as the
+def schedule(cohort_list: List[grid_lib.Cohort],
+             costs=None) -> List[ScheduledCohort]:
+    """Dispatch order: by cost descending, original order as the
     deterministic tie-break (scheduling must be reproducible — debugging
-    a concurrent run should never chase a shuffled plan)."""
-    entries = [ScheduledCohort(cohort=co, cost=grid_lib.cohort_cost(co),
-                               order=i)
-               for i, co in enumerate(cohort_list)]
+    a concurrent run should never chase a shuffled plan).
+
+    ``costs`` (a ``sweep.store.CostBook``) supplies measured per-cell
+    walls by cohort static key; measured cohorts use wall x cells
+    directly, unmeasured ones use the static estimate rescaled by the
+    median measured/static ratio (identity when nothing is measured).
+    """
+    static = [float(grid_lib.cohort_cost(co)) for co in cohort_list]
+    measured: List[Optional[float]] = []
+    for co in cohort_list:
+        w = (costs.per_cell_wall(grid_lib.cohort_static_hash(co))
+             if costs is not None else None)
+        measured.append(None if w is None else w * len(co))
+    ratios = sorted(m / s for m, s in zip(measured, static)
+                    if m is not None and s > 0)
+    scale = ratios[len(ratios) // 2] if ratios else 1.0
+    entries = [ScheduledCohort(
+        cohort=co,
+        cost=(measured[i] if measured[i] is not None
+              else static[i] * scale),
+        order=i) for i, co in enumerate(cohort_list)]
     return sorted(entries, key=lambda e: (-e.cost, e.order))
 
 
@@ -103,15 +136,26 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
                                None],
                 jobs: int, dispatch_ahead: Optional[int] = None,
                 do_eval: bool = True, tail: int = 10, mesh=None,
-                eval_data=None, verbose: bool = False) -> None:
+                eval_data=None, verbose: bool = False,
+                costs=None, store_root: Optional[str] = None,
+                cache_key=None, resume: bool = False,
+                checkpoint_every: Optional[int] = None,
+                max_retries: int = 0, retry_backoff: float = 0.5,
+                quarantine: bool = False) -> None:
     """Run every cohort concurrently; ``sink(cohort, results)`` fires on
     the writer thread as each cohort's results reach host memory.
 
     ``jobs`` dispatcher threads each drive prepare -> compile -> async
     dispatch; at most ``jobs + dispatch_ahead`` cohorts hold device
-    buffers at once.  Raises the first error from any stage after
-    cancelling the rest; on success every cohort has been sunk exactly
-    once.
+    buffers at once.  A failing cohort is retried ``max_retries`` times
+    (backoff ``retry_backoff * 2**attempt`` seconds) and then either
+    quarantined (``quarantine=True`` + ``store_root``) or — the default —
+    the first error cancels the rest and re-raises here.  On success
+    every cohort has been sunk exactly once.
+
+    Fault-plan cohort points (``kill_at_cohort`` etc.) address cohorts
+    by their 1-based position in ``cohort_list`` — the PLAN order, which
+    is identical for the serial path and any ``jobs`` setting.
     """
     if jobs < 1:
         raise ValueError(f"jobs must be >= 1, got {jobs}")
@@ -120,48 +164,171 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
     if dispatch_ahead < 0:
         raise ValueError(
             f"dispatch_ahead must be >= 0, got {dispatch_ahead}")
+    if checkpoint_every is not None and store_root is None:
+        raise ValueError("checkpoint_every requires store_root")
     if not cohort_list:
         return
-    entries = schedule(cohort_list)
+    entries = schedule(cohort_list, costs=costs)
     window = _Window(jobs + dispatch_ahead)
-    writer = CompletionWriter()
+    policy = resilience.RetryPolicy(max_retries=max_retries,
+                                    backoff_s=retry_backoff)
+    qclear = (resilience.QuarantineLog(store_root)
+              if store_root is not None else None)
+    qlog = qclear if quarantine else None
+
+    lock = threading.Lock()
+    outstanding = [len(entries)]
+    all_done = threading.Event()
+    attempts: Dict[int, int] = {}
+    fatal: List[BaseException] = []
+    by_label = {f"cohort-{e.order}": e for e in entries}
+    pool_box: List[Any] = []
+
+    def task_finished() -> None:
+        with lock:
+            outstanding[0] -= 1
+            if outstanding[0] <= 0:
+                all_done.set()
+
+    def fail_fatal(exc: BaseException) -> None:
+        with lock:
+            fatal.append(exc)
+        window.stop()
+        all_done.set()      # wake the main wait even with work outstanding
+
+    def resubmit(entry: ScheduledCohort) -> None:
+        if window.stopped:
+            task_finished()
+            return
+        try:
+            pool_box[0].submit(dispatch_one, entry)
+        except RuntimeError:            # pool already shut down (fatal)
+            task_finished()
+
+    def handle_failure(entry: ScheduledCohort,
+                       exc: BaseException) -> bool:
+        """Retry, quarantine, or declare fatal.  True = handled."""
+        with lock:
+            attempts[entry.order] = attempts.get(entry.order, 0) + 1
+            n = attempts[entry.order]
+        if n <= policy.max_retries and not window.stopped:
+            pause = policy.sleep_for(n - 1)
+            if verbose:
+                print(f"# runtime: cohort {entry.order + 1} failed "
+                      f"({type(exc).__name__}: {exc}); retry "
+                      f"{n}/{policy.max_retries} in {pause:.1f}s",
+                      file=sys.stderr)
+            timer = threading.Timer(pause, resubmit, args=(entry,))
+            timer.daemon = True
+            timer.start()
+            return True
+        if qlog is not None:
+            sig = grid_lib.cohort_signature(entry.cohort, cache_key)
+            path = qlog.record(entry.cohort, sig, exc, n, cache_key)
+            print(f"# runtime: cohort {entry.order + 1} quarantined "
+                  f"after {n} attempt(s) -> {path}", file=sys.stderr)
+            task_finished()
+            return True
+        fail_fatal(exc)
+        task_finished()
+        return False
+
+    def on_error(completion: Completion, exc: BaseException) -> bool:
+        entry = by_label.get(completion.label)
+        if entry is None:
+            return False
+        try:
+            return handle_failure(entry, exc)
+        except BaseException as cb_exc:   # noqa: BLE001 — must not wedge
+            fail_fatal(cb_exc)
+            return False
+
+    writer = CompletionWriter(on_error=on_error)
+
+    def record_cost(co: grid_lib.Cohort, t0: float) -> None:
+        # dispatch-start -> resolve-end: includes compile + any queueing
+        # overlap, which is exactly the wall a future scheduler pays
+        if costs is not None:
+            costs.record(grid_lib.cohort_static_hash(co),
+                         wall_s=time.time() - t0, cells=len(co))
 
     def dispatch_one(entry: ScheduledCohort) -> None:
         if window.stopped or writer.error is not None:
+            task_finished()
             return
         if not window.acquire():
+            task_finished()
             return
         if writer.error is not None:   # failed while we waited for a slot
             window.release()
             window.stop()
+            task_finished()
             return
+        co = entry.cohort
+        t0 = time.time()
         try:
-            co = entry.cohort
+            plan_order = entry.order + 1
+            faults.fire("kill_at_cohort", cohort=plan_order)
+            faults.fire("fail_cohort", cohort=plan_order)
+            faults.fire("flaky_cohort", cohort=plan_order)
             if verbose:
                 print(f"# dispatch cohort {entry.order} x{len(co)} "
-                      f"(cost={entry.cost})", file=sys.stderr)
-            prep = grid_lib.prepare_cohort(co, do_eval=do_eval,
-                                           eval_data=eval_data)
-            out, e = shard_lib.dispatch_sharded(
-                jax.vmap(prep.run_one), prep.batch, mesh, donate=True)
-        except BaseException:
-            window.release()
-            window.stop()
-            raise
+                      f"(cost={entry.cost:.3g})", file=sys.stderr)
+            if checkpoint_every is not None:
+                with lock:
+                    prior = attempts.get(entry.order, 0)
+                sig = grid_lib.cohort_signature(co, cache_key)
+                results = grid_lib.run_cohort_blocks(
+                    co, every=checkpoint_every,
+                    ckpt_dir=grid_lib.ckpt_dir_for(store_root, sig),
+                    resume=resume or prior > 0, do_eval=do_eval,
+                    tail=tail, eval_data=eval_data, verbose=verbose)
 
-        def resolve_fn(out=out, e=e, co=co):
-            host = shard_lib.resolve(out, e)
-            host = {k: np.asarray(v) for k, v in host.items()}
-            return grid_lib.finalize_cohort(co, host, tail=tail)
+                def resolve_fn(results=results, co=co, t0=t0):
+                    faults.delay("delay_resolve")
+                    record_cost(co, t0)
+                    return results
+
+                ready_fn = None             # already on host: FIFO-ready
+            else:
+                prep = grid_lib.prepare_cohort(co, do_eval=do_eval,
+                                               eval_data=eval_data)
+                out, e = shard_lib.dispatch_sharded(
+                    jax.vmap(prep.run_one), prep.batch, mesh, donate=True)
+
+                def resolve_fn(out=out, e=e, co=co, t0=t0):
+                    faults.delay("delay_resolve")
+                    host = shard_lib.resolve(out, e)
+                    host = {k: np.asarray(v) for k, v in host.items()}
+                    res = grid_lib.finalize_cohort(co, host, tail=tail)
+                    record_cost(co, t0)
+                    return res
+
+                ready_fn = (lambda out=out: _tree_ready(out))
+        except BaseException as exc:   # noqa: BLE001 — routed per policy
+            window.release()
+            if isinstance(exc, Exception):
+                handle_failure(entry, exc)
+            else:
+                fail_fatal(exc)
+                task_finished()
+            return
+
+        def sink_fn(results, co=co):
+            sink(co, results)
+            if qclear is not None:
+                # the cohort succeeded; a record from an earlier run or
+                # another host's exhausted retries is obsolete
+                qclear.clear(grid_lib.cohort_signature(co, cache_key))
+            task_finished()
 
         writer.submit(Completion(
             label=f"cohort-{entry.order}",
             resolve=resolve_fn,
-            sink=lambda results, co=co: sink(co, results),
-            ready=lambda out=out: _tree_ready(out),
+            sink=sink_fn,
+            ready=ready_fn,
             release=window.release))
 
-    errors: List[BaseException] = []
     # hold the mesh context across the whole pool: per-dispatch nesting
     # from worker threads then always restores to this same mesh, so one
     # thread's context exit can never deactivate it under another
@@ -170,15 +337,14 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
     with mesh_ctx, ThreadPoolExecutor(
             max_workers=jobs,
             thread_name_prefix="sweep-dispatch") as pool:
-        futures = [pool.submit(dispatch_one, entry) for entry in entries]
-        for f in futures:
-            exc = f.exception()
-            if exc is not None:
-                errors.append(exc)
-                window.stop()
+        pool_box.append(pool)
+        for entry in entries:
+            pool.submit(dispatch_one, entry)
+        all_done.wait()
     try:
         writer.close()
     except BaseException as e:   # noqa: BLE001 — surfaced below
-        errors.append(e)
-    if errors:
-        raise errors[0]
+        with lock:
+            fatal.append(e)
+    if fatal:
+        raise fatal[0]

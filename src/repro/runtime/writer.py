@@ -17,8 +17,12 @@ still running) device computation; the writer
      in-flight window slot to the scheduler.
 
 Items whose ``ready`` is None (no readiness signal available) are
-treated as always-ready, degrading to FIFO.  The first error raised by
-``resolve``/``sink`` is captured; remaining and subsequent items are
+treated as always-ready, degrading to FIFO.  Error handling is
+per-completion when an ``on_error`` callback is installed: the callback
+sees (completion, exception) and returns True to mark the failure
+HANDLED (the scheduler retries or quarantines that one cohort; the
+writer keeps draining).  Unhandled errors keep the historical fail-fast
+contract — the first one is captured, remaining and subsequent items are
 dropped (``release()`` only, so blocked dispatchers wake up) and the
 error re-raises from :meth:`CompletionWriter.close` on the caller's
 thread.
@@ -44,9 +48,12 @@ class Completion(NamedTuple):
 class CompletionWriter:
     """Background thread resolving completions as they become ready."""
 
-    def __init__(self, poll_interval: float = 0.002):
+    def __init__(self, poll_interval: float = 0.002,
+                 on_error: Optional[Callable[[Completion, BaseException],
+                                             bool]] = None):
         self._queue: "queue.Queue[Optional[Completion]]" = queue.Queue()
         self._poll = poll_interval
+        self._on_error = on_error
         self._error: Optional[BaseException] = None
         self._drained: List[str] = []
         self._lock = threading.Lock()
@@ -119,7 +126,15 @@ class CompletionWriter:
             with self._lock:
                 self._drained.append(c.label)
         except BaseException as e:   # noqa: BLE001 — re-raised in close()
-            if self._error is None:
+            handled = False
+            if self._on_error is not None and isinstance(e, Exception):
+                # the callback owns recovery (retry / quarantine); if IT
+                # fails, that failure is the fatal one
+                try:
+                    handled = bool(self._on_error(c, e))
+                except BaseException as cb_err:  # noqa: BLE001
+                    e = cb_err
+            if not handled and self._error is None:
                 self._error = e
         finally:
             if c.release is not None:

@@ -16,9 +16,17 @@ Examples:
     python -m repro.sweep --spec myspec.json --store sweeps/store --jobs 2
 
     # multi-host: one process per host against a shared store root;
-    # host 0 merges per-host results (see docs/runtime.md)
+    # hosts work-steal cohorts, host 0 collects (see docs/runtime.md)
     python -m repro.sweep --spec myspec.json --store /shared/store \
         --coordinator head:8476 --num-hosts 4 --host-id $K --jobs 2
+
+    # fault tolerance: checkpoint the scan carry every 50 rounds,
+    # retry flaky cohorts twice, quarantine persistent failures; after
+    # a crash, --resume picks up from the last checkpoint
+    python -m repro.sweep --spec myspec.json --store sweeps/store \
+        --checkpoint-every 50 --max-retries 2 --quarantine
+    python -m repro.sweep --spec myspec.json --store sweeps/store \
+        --checkpoint-every 50 --resume
 
 Spec JSON mirrors ``SweepSpec``: {"axes": {...}, "base": {...},
 "eval": true, "tail": 10}.  Axis values on the command line are comma
@@ -224,6 +232,36 @@ def main(argv=None) -> int:
     ap.add_argument("--host-id", type=int, default=None,
                     help="this process's index in [0, --num-hosts) "
                          "(default: $REPRO_HOST_ID or 0)")
+    ap.add_argument("--resume", action="store_true",
+                    help="pick up a crashed run: sweep tmp debris from "
+                         "the store and resume partial cohorts from "
+                         "their checkpoints (requires --store)")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    metavar="R",
+                    help="checkpoint each cohort's scan carry every R "
+                         "rounds under <store>/.runtime/ckpt (requires "
+                         "--store; enables --resume to restart "
+                         "mid-cohort)")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="re-run a failing cohort up to N times with "
+                         "exponential backoff (default 0 = fail fast)")
+    ap.add_argument("--retry-backoff", type=float, default=0.5,
+                    metavar="SECONDS",
+                    help="base backoff before retry k is 2**k times "
+                         "this (default 0.5s)")
+    ap.add_argument("--quarantine", action="store_true",
+                    help="after retries are exhausted, record the "
+                         "cohort under <store>/failed/ and keep going "
+                         "instead of aborting the sweep (exit code 3 "
+                         "when anything was quarantined)")
+    ap.add_argument("--lease-timeout", type=float, default=60.0,
+                    metavar="SECONDS",
+                    help="multi-host: a claim not heartbeated for this "
+                         "long is stale and may be stolen (default 60)")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="POINT[:ARG..][!]",
+                    help="inject a deterministic fault (repeatable; "
+                         "testing only — see repro.runtime.faults)")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the cohort + scheduler plan without "
                          "executing")
@@ -241,7 +279,21 @@ def main(argv=None) -> int:
         int(os.environ.get("REPRO_HOST_ID", "0"))
     if multihost and not args.store and not args.dry_run:
         ap.error("--num-hosts/--coordinator need --store on a shared "
-                 "filesystem (per-host results merge there)")
+                 "filesystem (every host writes it directly)")
+    if not args.store and not args.dry_run:
+        for flag, on in (("--resume", args.resume),
+                         ("--checkpoint-every",
+                          args.checkpoint_every is not None),
+                         ("--quarantine", args.quarantine)):
+            if on:
+                ap.error(f"{flag} needs --store (it operates on the "
+                         f"result store on disk)")
+    if args.fault:
+        from repro.runtime import faults
+        try:
+            faults.install(faults.parse(",".join(args.fault)))
+        except ValueError as e:
+            ap.error(str(e))
 
     cell_list = cells(spec)
     plan = cohorts(cell_list)
@@ -265,23 +317,34 @@ def main(argv=None) -> int:
             hs=mh.HostSpec(num_hosts=args.num_hosts, host_id=host_id,
                            coordinator=args.coordinator),
             jobs=args.jobs, dispatch_ahead=args.dispatch_ahead,
-            devices=args.devices, verbose=not args.quiet)
-        if results is None:     # non-zero hosts: results merge on host 0
+            devices=args.devices, verbose=not args.quiet,
+            lease_timeout=args.lease_timeout,
+            checkpoint_every=args.checkpoint_every,
+            max_retries=args.max_retries,
+            retry_backoff=args.retry_backoff,
+            quarantine=args.quarantine)
+        if results is None:     # non-zero hosts: host 0 collects
             if not args.quiet:
-                print(f"# host {host_id}: slice done (host 0 merges)",
+                print(f"# host {host_id}: done (host 0 collects)",
                       file=sys.stderr)
             return 0
-        store = store_lib.SweepStore(args.store)   # merged root store
+        store = store_lib.SweepStore(args.store)   # shared root store
     else:
         store = store_lib.SweepStore(args.store) if args.store else None
         mesh = shard_lib.sweep_mesh(args.devices)
         results = run_spec(spec, store=store, mesh=mesh,
                            jobs=args.jobs,
                            dispatch_ahead=args.dispatch_ahead,
-                           verbose=not args.quiet)
+                           verbose=not args.quiet, resume=args.resume,
+                           checkpoint_every=args.checkpoint_every,
+                           max_retries=args.max_retries,
+                           retry_backoff=args.retry_backoff,
+                           quarantine=args.quarantine)
 
+    quarantined = sum(1 for r in results if r is None)
     columns = list(spec.axes)
-    rows = store_lib.long_rows(results, columns=columns)
+    rows = store_lib.long_rows([r for r in results if r is not None],
+                               columns=columns)
     if args.csv:
         with open(args.csv, "w") as f:
             store_lib.write_long_csv(rows, f)
@@ -293,6 +356,22 @@ def main(argv=None) -> int:
     if store is not None and not args.quiet:
         print(f"# store: {store.root} now holds {len(store)} cells",
               file=sys.stderr)
+    if quarantined:
+        from repro.runtime import resilience
+        recs = resilience.failed_records(store.root)
+        print(f"# FAILED: {quarantined} cell(s) in {len(recs)} "
+              f"quarantined cohort(s):", file=sys.stderr)
+        for rec in recs:
+            err = rec.get("error", {})
+            print(f"#   {rec.get('signature')}: "
+                  f"{len(rec.get('cells', []))} cell(s), "
+                  f"{rec.get('attempts')} attempt(s) — "
+                  f"{err.get('type')}: {err.get('message')}",
+                  file=sys.stderr)
+        print(f"#   records: "
+              f"{os.path.join(store.root, resilience.FAILED_DIRNAME)}/ "
+              f"(fix and re-run with --resume to heal)", file=sys.stderr)
+        return 3
     return 0
 
 

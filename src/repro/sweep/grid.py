@@ -25,10 +25,12 @@ Two families of axes vectorize inside a cohort:
     restriction-stable (``repro.core.channel.worker_keys``), so a padded
     cell is BIT-EXACT against its standalone ``FLTrainer`` run.
 
-Cells that can't be ragged-merged stay shape-exact: minibatch cells
-(``k_b``: the sample draw depends on the padded K_max), the SGD case
-(its numerator counts workers by shape), and channels whose model
-reports ``ragged_exact = False`` (e.g. pathloss — ensemble-normalized).
+Cells that can't be ragged-merged stay shape-exact: only channels whose
+model reports ``ragged_exact = False`` (e.g. pathloss — ensemble-
+normalized) remain excluded.  Minibatch (``k_b``) and SGD cells merge
+too: sample draws are restriction-stable per-sample ``fold_in``
+(``fl.client.minibatch_indices``) and the SGD numerator counts real
+workers, not the padded array extent.
 
 Compared to the old benchmark drivers (one ``FLTrainer`` per cell: a
 fresh trace + compile + U-round dispatch chain each), a cohort of E
@@ -40,7 +42,10 @@ full U x eps x sigma2 grid is ONE compile per backend instead of one per
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
 import sys
+import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -52,7 +57,8 @@ from repro.core.channel import ChannelConfig
 from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case
 from repro.data.tasks import build_task_data, dim_hint
-from repro.fl.trainer import FLConfig, pad_workers, scan_experiment
+from repro.fl.trainer import (FLConfig, pad_workers, scan_experiment,
+                              scan_experiment_block, scan_experiment_init)
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
 
@@ -187,18 +193,17 @@ def _data_key(cell: Dict[str, Any]) -> Tuple:
 def ragged_mergeable(cell: Dict[str, Any]) -> bool:
     """Whether this cell may join a ragged (padded-worker-axis) cohort.
 
-    Three exclusions, each because padding would NOT be bit-exact against
-    the cell's standalone run:
+    One exclusion remains: channel models that report
+    ``ragged_exact = False`` (cross-worker coupling, e.g. pathloss
+    ensemble normalization), where padding would not be bit-exact against
+    the cell's standalone run.
 
-      * ``k_b`` minibatch sampling draws from the padded sample block, so
-        the draw depends on the cohort's K_max;
-      * the SGD objective's numerator counts workers by array shape
-        (eq. 37's leading U), which padding would inflate;
-      * channel models that report ``ragged_exact = False`` (cross-worker
-        coupling, e.g. pathloss ensemble normalization).
+    The historical ``k_b`` / SGD exclusions are LIFTED: minibatch draws
+    are restriction-stable (``fl.client.minibatch_indices`` derives each
+    sample's priority from ``fold_in(key, sample_index)``, so K_max
+    padding never shifts a draw) and eq. 37's leading U counts real
+    workers (``k_i > 0``) rather than the padded array extent.
     """
-    if cell["k_b"] is not None or _resolved_case(cell["case"]) is Case.SGD:
-        return False
     return chan_lib.ragged_exact(cell["channel"])
 
 
@@ -379,16 +384,44 @@ class PreparedCohort:
     batch: Dict[str, jnp.ndarray]  # leaves lead with the experiment axis
 
 
-def prepare_cohort(cohort: Cohort, *, do_eval: bool = True,
-                   eval_data=None) -> PreparedCohort:
-    """Host-side phase: build task data, split scalars, close the
-    per-experiment function.  No device computation is dispatched."""
+@dataclasses.dataclass
+class _CohortContext:
+    """The shared host-side preparation behind both execution styles.
+
+    ``data_of(batch_slice)`` -> (X, Y, mask, k_i, wmask, eval_xy) and
+    ``cfg_of(batch_slice)`` -> FLConfig are the two closures every
+    per-experiment function composes; factoring them out guarantees the
+    whole-scan path (:func:`prepare_cohort`) and the checkpointed block
+    path (:func:`prepare_cohort_phases`) feed ``scan_experiment*`` the
+    exact same operands — the root of the blocked-run bit-identity
+    guarantee.
+    """
+
+    task: Any
+    batch: Dict[str, jnp.ndarray]   # leaves lead with the experiment axis
+    data_of: Any
+    cfg_of: Any
+
+
+def _cohort_context(cohort: Cohort, *, do_eval: bool = True,
+                    eval_data=None) -> _CohortContext:
     st = cohort.static
     built = {key: build_task_data(key[0], U=key[1], k_bar=key[2],
                                   data_seed=key[3])
              for key in cohort.data_keys()}
     task = next(iter(built.values()))[0]
     ragged = cohort.ragged
+    if st["k_b"] is not None:
+        # the engine's own k_b guard is skipped under trace (ragged
+        # cohorts pass traced masks), so validate against the concrete
+        # fleets here — before any compile is paid
+        min_k = min(int(np.asarray(x).shape[0])
+                    for key in cohort.data_keys()
+                    for x, _ in built[key][1])
+        if int(st["k_b"]) > min_k:
+            raise ValueError(
+                f"k_b={st['k_b']} exceeds the smallest worker's sample "
+                f"count ({min_k}) in this cohort")
 
     keys = jnp.stack([jax.random.PRNGKey(int(c["seed"]))
                       for c in cohort.cells])
@@ -396,22 +429,22 @@ def prepare_cohort(cohort: Cohort, *, do_eval: bool = True,
     u_model = (max(len(built[k][1]) for k in cohort.data_keys()) if ragged
                else len(built[cohort.data_keys()[0]][1]))
 
+    def cfg_of(batch):
+        s = {**uniform, **{n: batch[n] for n in varying}}
+        return _cohort_cfg(st, s, u_model)
+
     if ragged:
         data_batch, uniq, batch_eval = _ragged_batch(cohort, built,
                                                      do_eval, eval_data)
         shared_eval = (jnp.asarray(eval_data[0]), jnp.asarray(eval_data[1])
                        ) if (do_eval and eval_data is not None) else None
 
-        def run_one(batch):
-            s = {**uniform, **{n: batch[n] for n in varying}}
-            cfg = _cohort_cfg(st, s, u_model)
+        def data_of(batch):
             d = batch["didx"]
             eval_xy = ((uniq["ex"][d], uniq["ey"][d]) if batch_eval
                        else shared_eval)
-            return scan_experiment(task, uniq["X"][d], uniq["Y"][d],
-                                   uniq["mask"][d], uniq["k_i"][d], cfg,
-                                   batch["key"], eval_xy=eval_xy,
-                                   wmask=uniq["wmask"][d])
+            return (uniq["X"][d], uniq["Y"][d], uniq["mask"][d],
+                    uniq["k_i"][d], uniq["wmask"][d], eval_xy)
 
         full_batch = {"key": keys, **varying, **data_batch}
     else:
@@ -425,15 +458,178 @@ def prepare_cohort(cohort: Cohort, *, do_eval: bool = True,
         eval_xy = ((jnp.asarray(test[0]), jnp.asarray(test[1]))
                    if do_eval else None)
 
-        def run_one(batch):
-            s = {**uniform, **{n: batch[n] for n in varying}}
-            cfg = _cohort_cfg(st, s, u_model)
-            return scan_experiment(task, X, Y, mask, k_i, cfg,
-                                   batch["key"], eval_xy=eval_xy)
+        def data_of(batch):
+            return (X, Y, mask, k_i, None, eval_xy)
 
         full_batch = {"key": keys, **varying}
 
-    return PreparedCohort(cohort=cohort, run_one=run_one, batch=full_batch)
+    return _CohortContext(task=task, batch=full_batch, data_of=data_of,
+                          cfg_of=cfg_of)
+
+
+def prepare_cohort(cohort: Cohort, *, do_eval: bool = True,
+                   eval_data=None) -> PreparedCohort:
+    """Host-side phase: build task data, split scalars, close the
+    per-experiment function.  No device computation is dispatched."""
+    ctx = _cohort_context(cohort, do_eval=do_eval, eval_data=eval_data)
+
+    def run_one(batch):
+        X, Y, mask, k_i, wmask, eval_xy = ctx.data_of(batch)
+        return scan_experiment(ctx.task, X, Y, mask, k_i,
+                               ctx.cfg_of(batch), batch["key"],
+                               eval_xy=eval_xy, wmask=wmask)
+
+    return PreparedCohort(cohort=cohort, run_one=run_one, batch=ctx.batch)
+
+
+@dataclasses.dataclass
+class CohortPhases:
+    """A cohort decomposed for checkpointed (blocked) execution.
+
+    ``jax.vmap(init_one)(batch)`` yields the cohort's initial engine
+    states; ``jax.vmap(block_one(n, offs))(state, batch)`` advances every
+    experiment ``n`` rounds and returns that block's history slice.
+    Chaining blocks reproduces :class:`PreparedCohort`'s whole-scan
+    output bit for bit (``lax.scan`` carries no cross-iteration compiler
+    state), which is what makes mid-cohort checkpoints safe to resume.
+    """
+
+    cohort: Cohort
+    batch: Dict[str, jnp.ndarray]
+    init_one: Any        # batch slice -> RoundState
+    block_one: Any       # (length, eval_offsets) -> f(state, slice)
+
+
+def prepare_cohort_phases(cohort: Cohort, *, do_eval: bool = True,
+                          eval_data=None) -> CohortPhases:
+    """Host-side phase for blocked execution (same prep as
+    :func:`prepare_cohort`; the computation is split at scan
+    boundaries)."""
+    ctx = _cohort_context(cohort, do_eval=do_eval, eval_data=eval_data)
+
+    def init_one(batch):
+        X, Y, mask, k_i, wmask, _ = ctx.data_of(batch)
+        return scan_experiment_init(ctx.task, X, Y, mask, k_i,
+                                    ctx.cfg_of(batch), batch["key"],
+                                    wmask=wmask)
+
+    def block_one(length: int, eval_offsets: Tuple[int, ...]):
+        def f(state, batch):
+            X, Y, mask, k_i, wmask, eval_xy = ctx.data_of(batch)
+            return scan_experiment_block(ctx.task, X, Y, mask, k_i,
+                                         ctx.cfg_of(batch), state, length,
+                                         eval_offsets=eval_offsets,
+                                         eval_xy=eval_xy, wmask=wmask)
+        return f
+
+    return CohortPhases(cohort=cohort, batch=ctx.batch, init_one=init_one,
+                        block_one=block_one)
+
+
+def cohort_signature(cohort: Cohort,
+                     extra: Optional[Dict[str, Any]] = None) -> str:
+    """Content id of a cohort's pending work: the sorted hashes of its
+    cells (plus the run-level cache extras).  Names checkpoint
+    directories, work-stealing claims, and quarantine records — any two
+    hosts that would compute the same cells agree on it."""
+    import hashlib
+    hs = sorted(store_lib.cell_hash(c, extra) for c in cohort.cells)
+    return hashlib.sha256("|".join(hs).encode()).hexdigest()[:16]
+
+
+def cohort_static_hash(cohort: Cohort) -> str:
+    """Stable id of a cohort's STATIC key (its compiled structure) — the
+    key under which measured walls are persisted (``store.CostBook``).
+    Cell-independent: an 8-seed cohort and a 64-seed cohort of the same
+    structure share it (costs normalize per cell)."""
+    import hashlib
+    import json
+    doc = json.dumps(store_lib.jsonable(cohort.static), sort_keys=True)
+    return hashlib.sha256(doc.encode()).hexdigest()[:16]
+
+
+def run_cohort_blocks(cohort: Cohort, *, every: int, ckpt_dir: str,
+                      resume: bool = False, do_eval: bool = True,
+                      tail: int = 10, eval_data=None,
+                      verbose: bool = False) -> List[Dict[str, Any]]:
+    """Execute one cohort in checkpointed round blocks.
+
+    Rounds run ``every`` at a time; after each block the engine state
+    (the scan carry) and the accumulated histories land in ``ckpt_dir``
+    via ``repro.checkpoint.store`` (atomic, ``keep=1``).  With
+    ``resume=True`` a matching checkpoint short-circuits the completed
+    blocks — the resumed run is byte-identical to an uninterrupted one.
+    The caller owns ``ckpt_dir`` cleanup (delete AFTER results are
+    persisted, so a crash in the window costs recompute, not
+    correctness).
+
+    Runs unsharded (single jit per block shape); mesh-sharded cohorts
+    use the whole-scan path.
+    """
+    from repro.checkpoint import store as ckpt
+    from repro.runtime import faults
+
+    if every <= 0:
+        raise ValueError(f"checkpoint interval must be positive: {every}")
+    phases = prepare_cohort_phases(cohort, do_eval=do_eval,
+                                   eval_data=eval_data)
+    rounds = int(cohort.static["rounds"])
+    eval_every = int(cohort.static["eval_every"])
+    sig = cohort_signature(cohort, {"eval": do_eval, "tail": tail})
+
+    state = jax.jit(jax.vmap(phases.init_one))(phases.batch)
+    hist: Dict[str, np.ndarray] = {}
+    r_done = 0
+    restored = False
+    if resume:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is not None:
+            try:
+                cand, extra = ckpt.restore(ckpt_dir, state, step)
+            except Exception as e:        # corrupt/alien checkpoint: redo
+                print(f"# sweep: unusable checkpoint under {ckpt_dir} "
+                      f"({type(e).__name__}: {e}); restarting cohort",
+                      file=sys.stderr)
+            else:
+                if extra.get("sig") == sig:
+                    state = cand
+                    hist = ckpt.load_arrays(ckpt_dir, step)
+                    r_done = int(extra["r_done"])
+                    restored = True
+                    if verbose:
+                        print(f"# cohort resume: {r_done}/{rounds} rounds "
+                              f"from checkpoint", file=sys.stderr)
+    if not restored:
+        # a stale dir (older spec, mismatched signature, or a fresh
+        # non-resume start) must go: ``save(keep=1)`` keeps the HIGHEST
+        # step, and a leftover later step would shadow this run's saves
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    fns: Dict[Tuple, Any] = {}   # (length, offsets) -> compiled block
+    while r_done < rounds:
+        n = min(every, rounds - r_done)
+        offs = tuple(j for j in range(n)
+                     if (r_done + j) % eval_every == 0)
+        fn_key = (n, offs)
+        if fn_key not in fns:
+            fns[fn_key] = jax.jit(jax.vmap(phases.block_one(n, offs)))
+        state, out = jax.block_until_ready(fns[fn_key](state,
+                                                       phases.batch))
+        out = {k: np.asarray(v) for k, v in out.items()}
+        hist = {k: (np.concatenate([hist[k], out[k]], axis=1)
+                    if k in hist else out[k]) for k in out}
+        r_done += n
+        # checkpoint every boundary incl. the last: a crash between the
+        # final block and the store write then resumes from here instead
+        # of recomputing the whole cohort
+        ckpt.save(ckpt_dir, r_done, state,
+                  extra={"sig": sig, "r_done": r_done}, keep=1,
+                  arrays=hist)
+        faults.fire("crash_after_block")
+
+    final = dict(hist)
+    final["flat"] = np.asarray(state.flat)
+    return finalize_cohort(cohort, final, tail=tail)
 
 
 def finalize_cohort(cohort: Cohort, out: Dict[str, np.ndarray], *,
@@ -501,11 +697,33 @@ def spec_cache_key(spec: SweepSpec) -> Dict[str, Any]:
     return {"eval": spec.eval, "tail": spec.tail}
 
 
+def ckpt_dir_for(store_root: str, sig: str) -> str:
+    """Checkpoint directory for a cohort signature (shared layout between
+    the serial path, the async runtime, and multi-host work stealing)."""
+    return os.path.join(store_root, ".runtime", "ckpt", sig)
+
+
+def runtime_gc(store_root: str) -> None:
+    """Drop the transient ``.runtime`` tree when it is empty of work —
+    called after a fully successful sweep so a clean store stays
+    byte-comparable against any other clean run of the same grid."""
+    root = os.path.join(store_root, ".runtime")
+    for sub in ("ckpt", "claims"):
+        p = os.path.join(root, sub)
+        if os.path.isdir(p) and not os.listdir(p):
+            shutil.rmtree(p, ignore_errors=True)
+    if os.path.isdir(root) and not os.listdir(root):
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
              mesh=None, eval_data=None, verbose: bool = False,
              timings: Optional[Dict[str, float]] = None,
-             jobs: int = 1, dispatch_ahead: Optional[int] = None
-             ) -> List[Dict[str, Any]]:
+             jobs: int = 1, dispatch_ahead: Optional[int] = None,
+             resume: bool = False, checkpoint_every: Optional[int] = None,
+             max_retries: int = 0, retry_backoff: float = 0.5,
+             quarantine: bool = False
+             ) -> List[Optional[Dict[str, Any]]]:
     """Run a whole grid: cache lookups, cohort batching, store writes.
 
     Returns one result per cell in grid order.  Cached cells are served
@@ -521,6 +739,22 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
     Results are INVARIANT to scheduling — the async path runs the exact
     same prepared computations per cohort, so every cell's result (and
     store artifact) is identical to the serial ``jobs=1`` run.
+
+    Fault tolerance (see ``docs/runtime.md``):
+
+    * ``checkpoint_every=R`` executes cohorts in R-round blocks with the
+      scan carry checkpointed under ``<store>/.runtime/ckpt/`` after
+      every block (requires ``store``; incompatible with ``mesh``).
+    * ``resume=True`` sweeps orphaned store tmp files and picks partial
+      cohorts up from their last block boundary.  Results are
+      byte-identical to an uninterrupted run.
+    * ``max_retries=N`` re-runs a failed cohort up to N times with
+      exponential backoff (``retry_backoff * 2**attempt`` seconds).
+    * ``quarantine=True`` converts a cohort that exhausts its retries
+      into a structured ``<store>/failed/<sig>.json`` record — its
+      cells' results stay ``None`` and the REST of the grid completes —
+      instead of aborting the sweep.  Defaults keep the historical
+      fail-fast behavior.
     """
     if store is not None and eval_data is not None:
         # an eval_data override changes every metric without changing any
@@ -531,6 +765,21 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
         raise ValueError("timings= requires the serial path (jobs=1): "
                          "concurrent compile/run walls overlap and cannot "
                          "be attributed per phase")
+    if checkpoint_every is not None:
+        if store is None:
+            raise ValueError("checkpoint_every requires a store (the "
+                             "checkpoints live under its root)")
+        if mesh is not None:
+            raise ValueError("checkpoint_every is incompatible with an "
+                             "explicit mesh: blocked cohorts run "
+                             "unsharded")
+    if (resume or quarantine) and store is None:
+        raise ValueError("resume/quarantine require a store")
+    if resume:
+        # exclusive access is the --resume contract: any tmp file is
+        # debris from the dead run, not a live writer's staging file
+        store.gc_tmp(0.0)
+
     cache_key = spec_cache_key(spec)
     cell_list = cells(spec)
     results: List[Optional[Dict[str, Any]]] = [None] * len(cell_list)
@@ -549,12 +798,18 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
         print(f"# sweep: {len(cell_list)} cells, {hits} cache hits",
               file=sys.stderr)
     pending = cohorts(pending_cells, pending_idx)
+    costs = (store_lib.CostBook(store.root) if store is not None else None)
 
     def settle(cohort: Cohort, outs: List[Dict[str, Any]]) -> None:
         for idx, res in zip(cohort.indices, outs):
             results[idx] = res
             if store is not None:
                 store.put(res["cell"], res, cache_key)
+        if checkpoint_every is not None:
+            # results are durable; the cohort's checkpoints are now dead
+            sig = cohort_signature(cohort, cache_key)
+            shutil.rmtree(ckpt_dir_for(store.root, sig),
+                          ignore_errors=True)
 
     if jobs > 1:
         from repro.runtime import scheduler as sched_lib
@@ -562,10 +817,25 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
                               dispatch_ahead=dispatch_ahead,
                               do_eval=spec.eval, tail=spec.tail,
                               mesh=mesh, eval_data=eval_data,
-                              verbose=verbose)
-        return results   # type: ignore[return-value]
+                              verbose=verbose, costs=costs,
+                              store_root=(store.root if store is not None
+                                          else None),
+                              resume=resume,
+                              checkpoint_every=checkpoint_every,
+                              max_retries=max_retries,
+                              retry_backoff=retry_backoff,
+                              quarantine=quarantine)
+        if store is not None:
+            runtime_gc(store.root)
+        return results
 
-    for cohort in pending:
+    from repro.runtime import faults, resilience
+    policy = resilience.RetryPolicy(max_retries=max_retries,
+                                    backoff_s=retry_backoff)
+    qclear = (resilience.QuarantineLog(store.root)
+              if store is not None else None)
+    qlog = qclear if quarantine else None
+    for order, cohort in enumerate(pending, start=1):
         if verbose:
             u_vals = sorted({c["U"] for c in cohort.cells})
             print(f"# cohort x{len(cohort)}"
@@ -575,10 +845,36 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
                   f"U={u_vals if len(u_vals) > 1 else u_vals[0]} "
                   f"rounds={cohort.static['rounds']}",
                   file=sys.stderr)
-        settle(cohort, run_cohort(cohort, do_eval=spec.eval,
-                                  tail=spec.tail, mesh=mesh,
-                                  eval_data=eval_data, timings=timings))
-    return results   # type: ignore[return-value]
+
+        def execute(attempt: int) -> List[Dict[str, Any]]:
+            faults.fire("kill_at_cohort", cohort=order)
+            faults.fire("fail_cohort", cohort=order)
+            faults.fire("flaky_cohort", cohort=order)
+            if checkpoint_every is not None:
+                sig = cohort_signature(cohort, cache_key)
+                return run_cohort_blocks(
+                    cohort, every=checkpoint_every,
+                    ckpt_dir=ckpt_dir_for(store.root, sig),
+                    resume=resume or attempt > 0, do_eval=spec.eval,
+                    tail=spec.tail, eval_data=eval_data, verbose=verbose)
+            return run_cohort(cohort, do_eval=spec.eval, tail=spec.tail,
+                              mesh=mesh, eval_data=eval_data,
+                              timings=timings)
+
+        t0 = time.time()
+        outs = resilience.run_with_retry(
+            execute, policy=policy, quarantine=qlog, cohort=cohort,
+            cache_key=cache_key, label=f"cohort {order}/{len(pending)}",
+            verbose=verbose, clear_log=qclear)
+        if outs is None:
+            continue                       # quarantined; rest of the grid runs
+        if costs is not None:
+            costs.record(cohort_static_hash(cohort),
+                         wall_s=time.time() - t0, cells=len(cohort))
+        settle(cohort, outs)
+    if store is not None:
+        runtime_gc(store.root)
+    return results
 
 
 def result_by(results: List[Dict[str, Any]],

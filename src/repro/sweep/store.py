@@ -20,17 +20,33 @@ import enum
 import hashlib
 import json
 import os
+import sys
 import tempfile
+import time
 from typing import Any, Dict, Iterable, List, Optional
 
 import numpy as np
 
-_SCHEMA = 3          # bump to invalidate every cached cell
+_SCHEMA = 4          # bump to invalidate every cached cell
 #   2: cells gained the eps / rho / L scalar fields (single-compile
 #      cohorts) and worker-axis randomness became restriction-stable,
 #      which changes every trajectory — old entries must not be served
 #   3: histories gained the per-round realized Lemma-1 terms a_t / b_t
 #      (and their *_final / *_tail metrics) — old entries lack them
+#   4: minibatch (k_b) sampling moved to the restriction-stable
+#      per-sample fold_in sampler (ragged-mergeable SGD cells), which
+#      changes every k_b trajectory; result docs gained a checksum
+
+
+def _faults():
+    # lazy: repro.runtime imports repro.sweep at module level, so a
+    # top-level import here would be circular
+    from repro.runtime import faults
+    return faults
+
+
+def _warn(msg: str) -> None:
+    print(f"# store: {msg}", file=sys.stderr)
 
 
 def jsonable(v: Any) -> Any:
@@ -72,6 +88,19 @@ def cell_hash(cell: Dict[str, Any],
         canonical_cell(cell, extra).encode()).hexdigest()[:20]
 
 
+def payload_checksum(doc: Dict[str, Any]) -> str:
+    """Checksum of a store document MINUS its ``checksum`` field.
+
+    Serialized exactly as :meth:`SweepStore.put` writes the body (same
+    key order, default separators), so a reader can recompute it from the
+    loaded document and detect a partially-replaced file: JSON floats
+    round-trip byte-identically (``repr`` shortest form) and ``json.load``
+    preserves key order.
+    """
+    body = {k: v for k, v in doc.items() if k != "checksum"}
+    return hashlib.sha256(json.dumps(body).encode()).hexdigest()[:16]
+
+
 class SweepStore:
     """Directory of ``<hash>.json`` files: {"cell", "metrics", "history"}."""
 
@@ -84,24 +113,56 @@ class SweepStore:
 
     def get(self, cell: Dict[str, Any],
             extra=None) -> Optional[Dict[str, Any]]:
+        """Cached result, or None on a miss.
+
+        Corrupt entries — truncated/garbled JSON (a writer died mid-way
+        on a filesystem without atomic rename semantics), a checksum
+        mismatch (an ``os.replace`` race landed a partial payload), or a
+        wrong document shape — are MISSES, not errors: the runtime
+        recomputes the cell and the next ``put`` heals the file.  A raise
+        here would kill a whole resumed sweep over one bad byte.
+        """
         p = self.path(cell, extra)
-        if not os.path.exists(p):
+        doc = self._load(p)
+        if doc is None:
             return None
-        with open(p) as f:
-            doc = json.load(f)
         # guard against hash-prefix collisions / schema drift
         if doc.get("canonical") != canonical_cell(cell, extra):
             return None
         return doc["result"]
 
+    def _load(self, p: str) -> Optional[Dict[str, Any]]:
+        """Read + validate one store file; None when absent or corrupt."""
+        try:
+            with open(p) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            return None
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            _warn(f"corrupt entry {os.path.basename(p)} "
+                  f"({type(e).__name__}: {e}); treating as a miss")
+            return None
+        if not isinstance(doc, dict) or "result" not in doc:
+            _warn(f"malformed entry {os.path.basename(p)}; "
+                  f"treating as a miss")
+            return None
+        want = doc.get("checksum")
+        if want is not None and want != payload_checksum(doc):
+            _warn(f"checksum mismatch in {os.path.basename(p)} "
+                  f"(partial write?); treating as a miss")
+            return None
+        return doc
+
     def put(self, cell: Dict[str, Any], result: Dict[str, Any],
             extra=None) -> str:
+        _faults().fire("crash_before_put")
         p = self.path(cell, extra)
         doc = {"canonical": canonical_cell(cell, extra),
                "cell": jsonable(cell),
                "result": {"cell": jsonable(result.get("cell", cell)),
                           "metrics": jsonable(result["metrics"]),
                           "history": jsonable(result.get("history", {}))}}
+        doc = {"checksum": payload_checksum(doc), **doc}
         self._atomic_write(p, json.dumps(doc))
         return p
 
@@ -111,27 +172,62 @@ class SweepStore:
         thread, multiple hosts merging) each stage through a UNIQUE tmp
         name, so the last complete write wins instead of two writers
         interleaving into one tmp file."""
+        faults = _faults()
+        payload = faults.corrupt("corrupt_tmp_write", payload)
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
                 f.write(payload)
+            faults.fire("crash_mid_put")
             os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
+        except BaseException as e:
+            # an InjectedFault in the partial-write window simulates a
+            # hard crash: leave the tmp behind, exactly as a killed
+            # process would (gc_tmp / resume must cope with it)
+            if not isinstance(e, faults.InjectedFault) \
+                    and os.path.exists(tmp):
                 os.unlink(tmp)
             raise
+
+    def gc_tmp(self, max_age_s: float = 0.0) -> int:
+        """Remove orphaned ``*.tmp`` staging files older than
+        ``max_age_s`` seconds — the debris a process killed mid-write
+        leaves behind.  ``0`` sweeps everything and is only safe when no
+        other writer is live on this store (the ``--resume`` contract);
+        concurrent multi-host launches pass their lease timeout, which no
+        healthy writer holds a tmp for.  Returns the number removed."""
+        now = time.time()
+        n = 0
+        for fn in os.listdir(self.root):
+            if not fn.endswith(".tmp"):
+                continue
+            p = os.path.join(self.root, fn)
+            try:
+                if now - os.path.getmtime(p) >= max_age_s:
+                    os.unlink(p)
+                    n += 1
+            except OSError:
+                pass        # another gc raced us; nothing to do
+        if n:
+            _warn(f"removed {n} orphaned tmp file(s) under {self.root}")
+        return n
 
     def merge(self, other: "SweepStore") -> int:
         """Copy every entry of ``other`` into this store (atomic per
         entry, same-hash entries overwritten — identical by construction
-        since the hash names the canonical cell).  Returns the number of
-        entries merged.  This is how multi-host sweeps combine per-host
-        result sets into one store (``repro.runtime.multihost``)."""
+        since the hash names the canonical cell).  Corrupt source entries
+        are skipped with a warning (the cell reads as missing and gets
+        recomputed).  Returns the number of entries merged.  This is how
+        multi-host sweeps combine per-host result sets into one store
+        (``repro.runtime.multihost``)."""
         n = 0
         for fn in sorted(os.listdir(other.root)):
             if not fn.endswith(".json"):
                 continue
-            with open(os.path.join(other.root, fn)) as f:
+            src = os.path.join(other.root, fn)
+            if other._load(src) is None:
+                continue                       # corrupt: already warned
+            with open(src) as f:
                 self._atomic_write(os.path.join(self.root, fn), f.read())
             n += 1
         return n
@@ -145,9 +241,69 @@ class SweepStore:
         for fn in sorted(os.listdir(self.root)):
             if not fn.endswith(".json"):
                 continue
-            with open(os.path.join(self.root, fn)) as f:
-                out.append(json.load(f)["result"])
+            doc = self._load(os.path.join(self.root, fn))
+            if doc is not None:
+                out.append(doc["result"])
         return out
+
+
+# ---------------------------------------------------------- measured costs
+
+class CostBook:
+    """Measured per-cohort walls, persisted as ``<store>/meta/costs.json``.
+
+    The static ``grid.cohort_cost`` estimate (cells x rounds x U_max x D)
+    only has to ORDER dispatch, but measured reality beats any model: the
+    book records the wall-clock seconds each cohort *static key* actually
+    took (prepare -> dispatch -> resolve), normalized per cell, and
+    ``runtime.scheduler.schedule`` prefers these walls over the static
+    estimate whenever a cohort's key has been measured — including across
+    runs and across hosts, since the book lives in the shared store.
+
+    Concurrency: updates are read-merge-replace on one JSON file; a lost
+    update under racing writers costs a measurement, never correctness
+    (costs only order work).
+    """
+
+    def __init__(self, store_root: str):
+        self.dir = os.path.join(store_root, "meta")
+        self.path = os.path.join(self.dir, "costs.json")
+        self._cache: Optional[Dict[str, Dict[str, float]]] = None
+
+    def load(self) -> Dict[str, Dict[str, float]]:
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except (json.JSONDecodeError, OSError) as e:
+            _warn(f"unreadable costs.json ({e}); starting fresh")
+            return {}
+        return doc if isinstance(doc, dict) else {}
+
+    def per_cell_wall(self, static_key: str) -> Optional[float]:
+        if self._cache is None:
+            self._cache = self.load()
+        rec = self._cache.get(static_key)
+        if not rec or not rec.get("cells"):
+            return None
+        return float(rec["wall_s"]) / float(rec["cells"])
+
+    def record(self, static_key: str, *, wall_s: float, cells: int) -> None:
+        """Merge one measurement (latest wins per key) and persist."""
+        os.makedirs(self.dir, exist_ok=True)
+        book = self.load()
+        book[static_key] = {"wall_s": float(wall_s), "cells": int(cells)}
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(book, f, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._cache = book
 
 
 # ------------------------------------------------------------- long format

@@ -69,8 +69,10 @@ def _sequential(cell, *, eval_data=None):
     chanc = ChannelConfig(sigma2=cell["sigma2"], p_max=cell["p_max"])
     if kw:
         model = chan.resolve_model(model, u, chanc, **kw)
+    case = cell["case"] if isinstance(cell["case"], Case) \
+        else Case(cell["case"])
     cfg = FLConfig(rounds=cell["rounds"], lr=cell["lr"],
-                   policy=cell["policy"], case=Case.GD_CONVEX,
+                   policy=cell["policy"], case=case, k_b=cell["k_b"],
                    channel=chanc, channel_model=model,
                    constants=LearningConstants(sigma2=cell["sigma2"]),
                    backend=cell["backend"], scan=True)
@@ -239,6 +241,27 @@ def test_mostly_padded_cell():
     results = run_spec(spec)
     small = result_by(results, U=2)
     assert np.all(np.asarray(small["history"]["selected"]) <= 2.0 + 1e-6)
+    for r in results:
+        h, flat = _sequential(r["cell"])
+        np.testing.assert_allclose(r["flat"], flat, rtol=RAGGED_RTOL,
+                                   atol=1e-7)
+        np.testing.assert_allclose(
+            np.asarray(r["history"]["selected"]),
+            np.asarray(h["selected"]), atol=1e-6)
+
+
+def test_minibatch_cells_ride_ragged_cohorts():
+    """SGD / k_b cells ragged-merge now (ISSUE 6): the per-sample
+    ``fold_in`` minibatch sampler draws each sample's inclusion from a
+    key that ignores the padded worker- and sample-axis extents, so a
+    cell's batch picks are identical inside any cohort.  Every cell must
+    match its standalone trainer run."""
+    spec = SweepSpec(axes={"U": (4, 6)},
+                     base={"k_bar": 12, "rounds": ROUNDS, "k_b": 3,
+                           "case": "sgd", "backend": "jnp"})
+    cos = cohorts(cells(spec))
+    assert len(cos) == 1 and cos[0].ragged
+    results = run_spec(spec)
     for r in results:
         h, flat = _sequential(r["cell"])
         np.testing.assert_allclose(r["flat"], flat, rtol=RAGGED_RTOL,

@@ -1,0 +1,370 @@
+"""Fault tolerance (ISSUE 6): checkpoint/resume, retry/quarantine,
+work-stealing claims, and the deterministic fault-injection harness.
+
+The load-bearing guarantee extends the runtime's: no failure mode may
+change result BYTES.  A sweep that crashes mid-put, mid-cohort, or loses
+a whole host must — after gc + resume/steal — land a store
+byte-identical to an uninterrupted serial run.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import faults
+from repro.runtime import resilience
+from repro.runtime.claims import ClaimBoard
+from repro.runtime.scheduler import schedule
+from repro.sweep import SweepSpec, SweepStore, cells, cohorts, run_spec
+from repro.sweep.grid import (cohort_signature, cohort_static_hash,
+                              run_cohort, run_cohort_blocks)
+from repro.sweep.store import CostBook
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _float32_mode():
+    """Byte-identity compares against subprocess runs (default f32)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_faults():
+    """Each test installs exactly the plan it wants; none leaks out."""
+    faults.install(faults.parse(""))
+    yield
+    faults.install(None)
+
+
+U, K_BAR, ROUNDS = 4, 6, 5
+
+SPEC = SweepSpec(axes={"seed": (0, 1), "policy": ("inflota", "random")},
+                 base={"U": U, "k_bar": K_BAR, "rounds": ROUNDS,
+                       "backend": "jnp"})
+
+_ENV = dict(os.environ, JAX_PLATFORMS="cpu",
+            PYTHONPATH=os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", "src")]
+                + sys.path))
+
+
+def _store_files(root):
+    return {f: open(os.path.join(root, f), "rb").read()
+            for f in sorted(os.listdir(root)) if f.endswith(".json")}
+
+
+def _serial(tmp_path):
+    """Uninterrupted serial reference store for SPEC."""
+    d = str(tmp_path / "serial")
+    run_spec(SPEC, store=SweepStore(d))
+    return d
+
+
+# ------------------------------------------------------------ fault plans
+
+def test_fault_grammar():
+    plan = faults.parse("crash_mid_put:2!, flaky_cohort:1:3,"
+                        "delay_resolve:0.5")
+    assert [s.point for s in plan.specs] == \
+        ["crash_mid_put", "flaky_cohort", "delay_resolve"]
+    assert plan.specs[0].hard and plan.specs[0].n == 2
+    assert not plan.specs[1].hard and plan.specs[1].args == ("1", "3")
+    assert not faults.parse("")          # empty plan is falsy -> no-op
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.parse("reboot_everything:1")
+
+
+def test_fault_counters_and_cohort_match():
+    plan = faults.parse("crash_before_put:3")
+    plan.fire("crash_before_put")        # 1st: below threshold
+    plan.fire("crash_before_put")        # 2nd
+    with pytest.raises(faults.InjectedFault):
+        plan.fire("crash_before_put")    # 3rd trips
+    plan.fire("crash_before_put")        # 4th: past it, silent again
+
+    plan = faults.parse("fail_cohort:2")
+    plan.fire("fail_cohort", cohort=1)   # wrong cohort: silent
+    with pytest.raises(faults.InjectedFault):
+        plan.fire("fail_cohort", cohort=2)
+    with pytest.raises(faults.InjectedFault):
+        plan.fire("fail_cohort", cohort=2)   # every dispatch
+
+
+def test_flaky_cohort_fails_then_recovers():
+    plan = faults.parse("flaky_cohort:1:2")
+    for _ in range(2):
+        with pytest.raises(faults.InjectedFault):
+            plan.fire("flaky_cohort", cohort=1)
+    plan.fire("flaky_cohort", cohort=1)  # 3rd attempt succeeds
+
+
+# -------------------------------------------------------- retry/quarantine
+
+def test_retry_policy_backoff():
+    p = resilience.RetryPolicy(max_retries=5, backoff_s=0.5,
+                               max_backoff_s=3.0)
+    assert [p.sleep_for(k) for k in range(4)] == [0.5, 1.0, 2.0, 3.0]
+
+
+def test_run_with_retry_recovers_and_quarantines(tmp_path):
+    plan = cohorts(cells(SPEC))
+    root = str(tmp_path)
+    qlog = resilience.QuarantineLog(root)
+    attempts = []
+
+    def execute(attempt):
+        attempts.append(attempt)
+        if len(attempts) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    policy = resilience.RetryPolicy(max_retries=2, backoff_s=0.0)
+    assert resilience.run_with_retry(
+        execute, policy=policy, quarantine=qlog, cohort=plan[0]) == "ok"
+    assert attempts == [0, 1, 2]
+
+    def always_fail(attempt):
+        raise RuntimeError("poisoned")
+
+    assert resilience.run_with_retry(
+        always_fail, policy=policy, quarantine=qlog,
+        cohort=plan[0]) is None
+    recs = resilience.failed_records(root)
+    assert len(recs) == 1
+    assert recs[0]["error"]["type"] == "RuntimeError"
+    assert recs[0]["attempts"] == 3
+    assert len(recs[0]["cells"]) == len(plan[0])
+    assert resilience.failed_cell_hashes(root) == \
+        set(recs[0]["cell_hashes"])
+    # without a quarantine log the error propagates (fail-fast default)
+    with pytest.raises(RuntimeError, match="poisoned"):
+        resilience.run_with_retry(always_fail, policy=policy,
+                                  quarantine=None, cohort=plan[0])
+    # success clears the stale record
+    resilience.run_with_retry(execute, policy=policy, quarantine=qlog,
+                              cohort=plan[0])
+    assert resilience.failed_records(root) == []
+
+
+@pytest.mark.parametrize("jobs", [1, 2])
+def test_quarantine_completes_grid_and_heals(tmp_path, jobs):
+    """A poisoned cohort yields None cells + a failed/ record; the sweep
+    still completes.  A later healthy run recomputes exactly those cells,
+    clears the record, and lands the serial bytes."""
+    serial = _serial(tmp_path)
+    d = str(tmp_path / "quar")
+    faults.install(faults.parse("fail_cohort:1"))
+    results = run_spec(SPEC, store=SweepStore(d), jobs=jobs,
+                       max_retries=1, retry_backoff=0.0, quarantine=True)
+    faults.install(faults.parse(""))
+    assert sum(1 for r in results if r is None) == 2
+    assert len(resilience.failed_records(d)) == 1
+    healed = run_spec(SPEC, store=SweepStore(d), jobs=jobs, resume=True)
+    assert all(r is not None for r in healed)
+    assert resilience.failed_records(d) == []
+    assert _store_files(serial) == _store_files(d)
+
+
+def test_retry_recovers_flaky_cohort(tmp_path):
+    serial = _serial(tmp_path)
+    d = str(tmp_path / "flaky")
+    faults.install(faults.parse("flaky_cohort:1:2"))
+    results = run_spec(SPEC, store=SweepStore(d), jobs=2, max_retries=2,
+                       retry_backoff=0.0)
+    assert all(r is not None for r in results)
+    assert _store_files(serial) == _store_files(d)
+
+
+# ------------------------------------------------------- checkpoint/resume
+
+def test_blocked_cohort_bitexact_vs_one_shot():
+    """Splitting the round scan at checkpoint boundaries is an execution
+    layout change only: identical history and final params."""
+    co = cohorts(cells(SPEC))[0]
+    one = run_cohort(co)
+    import tempfile
+    with tempfile.TemporaryDirectory() as ck:
+        blocked = run_cohort_blocks(co, every=2, ckpt_dir=ck)
+    assert len(one) == len(blocked)
+    for a, b in zip(one, blocked):
+        np.testing.assert_array_equal(np.asarray(a["flat"]),
+                                      np.asarray(b["flat"]))
+        assert a["history"].keys() == b["history"].keys()
+        for k in a["history"]:
+            np.testing.assert_array_equal(np.asarray(a["history"][k]),
+                                          np.asarray(b["history"][k]),
+                                          err_msg=k)
+        assert a["metrics"] == b["metrics"]
+
+
+def test_crash_after_block_then_resume_bitexact(tmp_path):
+    """An in-process crash after the first saved block leaves a
+    checkpoint; --resume finishes the cohort from it, byte-identically."""
+    serial = _serial(tmp_path)
+    d = str(tmp_path / "ckpt")
+    faults.install(faults.parse("crash_after_block:1"))
+    with pytest.raises(faults.InjectedFault):
+        run_spec(SPEC, store=SweepStore(d), checkpoint_every=2)
+    faults.install(faults.parse(""))
+    sigs = os.listdir(os.path.join(d, ".runtime", "ckpt"))
+    assert len(sigs) == 1                    # first cohort left a carry
+    results = run_spec(SPEC, store=SweepStore(d), checkpoint_every=2,
+                       resume=True)
+    assert all(r is not None for r in results)
+    assert _store_files(serial) == _store_files(d)
+    assert not os.path.isdir(os.path.join(d, ".runtime"))
+
+
+def test_crash_mid_put_subprocess_then_resume(tmp_path):
+    """A hard kill inside the put window (tmp written, not yet renamed)
+    must leave debris that resume gc-sweeps, never a half-readable
+    result.  The healed store matches an uninterrupted run."""
+    serial = _serial(tmp_path)
+    d = str(tmp_path / "killed")
+    prog = """
+import jax
+jax.config.update("jax_platform_name", "cpu")
+from repro.sweep import SweepSpec, SweepStore, run_spec
+spec = SweepSpec(axes={"seed": (0, 1), "policy": ("inflota", "random")},
+                 base={"U": %d, "k_bar": %d, "rounds": %d,
+                       "backend": "jnp"})
+run_spec(spec, store=SweepStore(%r))
+""" % (U, K_BAR, ROUNDS, d)
+    env = dict(_ENV, REPRO_FAULTS="crash_mid_put:3!")
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 43, (out.returncode, out.stderr[-2000:])
+    debris = [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert debris, "kill inside the put window must leave a tmp file"
+    assert len(_store_files(d)) == 2         # puts 1-2 landed, 3 died
+    results = run_spec(SPEC, store=SweepStore(d), resume=True)
+    assert all(r is not None for r in results)
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert _store_files(serial) == _store_files(d)
+
+
+def test_corrupt_store_entry_is_recomputed(tmp_path):
+    """Hardened get: a truncated/garbage result file reads as a MISS and
+    the cell is recomputed in place, restoring the original bytes."""
+    serial = _serial(tmp_path)
+    d = str(tmp_path / "corrupt")
+    run_spec(SPEC, store=SweepStore(d))
+    victim = sorted(_store_files(d))[0]
+    good = open(os.path.join(d, victim), "rb").read()
+    with open(os.path.join(d, victim), "wb") as f:
+        f.write(good[: len(good) // 2])
+    results = run_spec(SPEC, store=SweepStore(d))
+    assert all(r is not None for r in results)
+    assert _store_files(serial) == _store_files(d)
+
+
+# ------------------------------------------------------- claims + stealing
+
+def test_claim_board_exclusion_and_steal(tmp_path):
+    root = str(tmp_path)
+    a = ClaimBoard(root, host_id=0, lease_timeout=60.0)
+    b = ClaimBoard(root, host_id=1, lease_timeout=60.0)
+    assert a.try_claim("sig1")
+    assert not b.try_claim("sig1")           # live lease: refused
+    assert b.try_claim("sig2")
+    assert a.held() == ["sig1"] and b.held() == ["sig2"]
+    a.release("sig1")
+    assert b.try_claim("sig1")               # released -> claimable
+    # stale steal: age the claim past a short lease
+    c = ClaimBoard(root, host_id=2, lease_timeout=0.05)
+    old = time.time() - 1.0
+    os.utime(os.path.join(root, ".runtime", "claims", "sig2.json"),
+             (old, old))
+    assert c.try_claim("sig2")               # stolen from b
+    doc = json.load(open(os.path.join(root, ".runtime", "claims",
+                                      "sig2.json")))
+    assert doc["host"] == 2
+    with pytest.raises(ValueError):
+        ClaimBoard(root, host_id=0, lease_timeout=0.0)
+
+
+def test_claim_heartbeat_keeps_lease_fresh(tmp_path):
+    root = str(tmp_path)
+    with ClaimBoard(root, host_id=0, lease_timeout=0.4) as a:
+        assert a.try_claim("sig1")
+        time.sleep(1.0)                      # > lease; heartbeat refreshes
+        b = ClaimBoard(root, host_id=1, lease_timeout=0.4)
+        assert not b.try_claim("sig1")       # still live, not stealable
+
+
+def test_kill_host_at_cohort_survivor_steals(tmp_path):
+    """The ISSUE-6 acceptance scenario: host 1 is hard-killed while
+    dispatching its first cohort; host 0 steals the orphaned work after
+    the lease expires and the shared store matches a clean serial run."""
+    serial = _serial(tmp_path)
+    root = str(tmp_path / "shared")
+    prog = """
+import sys, jax
+jax.config.update("jax_platform_name", "cpu")
+from repro.sweep import SweepSpec
+from repro.runtime import multihost as mh
+spec = SweepSpec(axes={"seed": (0, 1), "policy": ("inflota", "random")},
+                 base={"U": %d, "k_bar": %d, "rounds": %d,
+                       "backend": "jnp"})
+hs = mh.HostSpec(num_hosts=2, host_id=int(sys.argv[1]))
+res = mh.run_spec_multihost(spec, store_root=sys.argv[2], hs=hs,
+                            jobs=1, lease_timeout=2.0, timeout=240.0)
+if hs.host_id == 0:
+    assert len(res) == 4 and all(r is not None for r in res)
+print("HOST-DONE", hs.host_id)
+""" % (U, K_BAR, ROUNDS)
+    env1 = dict(_ENV, REPRO_FAULTS="kill_at_cohort:1!,kill_at_cohort:2!")
+    out1 = subprocess.run([sys.executable, "-c", prog, "1", root],
+                          env=env1, capture_output=True, text=True,
+                          timeout=300)
+    assert out1.returncode == 43, (out1.returncode, out1.stderr[-2000:])
+    claims = os.listdir(os.path.join(root, ".runtime", "claims"))
+    assert claims, "killed host must leave its claims behind"
+    out0 = subprocess.run([sys.executable, "-c", prog, "0", root],
+                          env=_ENV, capture_output=True, text=True,
+                          timeout=300)
+    assert out0.returncode == 0, out0.stderr[-2000:]
+    assert "HOST-DONE 0" in out0.stdout
+    assert _store_files(serial) == _store_files(root)
+
+
+# ---------------------------------------------------------- measured costs
+
+def test_cost_book_roundtrip_and_schedule_preference(tmp_path):
+    root = str(tmp_path)
+    spec = SweepSpec(axes={"seed": (0, 1), "rounds": (2, 8)},
+                     base={"U": U, "k_bar": K_BAR})
+    plan = cohorts(cells(spec))              # rounds is static: 2 cohorts
+    assert len(plan) == 2
+    by_rounds = {co.static["rounds"]: co for co in plan}
+    book = CostBook(root)
+    assert book.per_cell_wall("nope") is None
+    # static estimate says rounds=8 is costlier...
+    assert [e.cohort.static["rounds"] for e in schedule(plan)] == [8, 2]
+    # ...but measurement says the rounds=2 cohort is (say, compile-bound)
+    # 100x slower per cell: measured walls beat the model
+    book.record(cohort_static_hash(by_rounds[2]), wall_s=40.0, cells=2)
+    book.record(cohort_static_hash(by_rounds[8]), wall_s=0.4, cells=2)
+    fresh = CostBook(root)                   # re-read from disk
+    assert fresh.per_cell_wall(cohort_static_hash(by_rounds[2])) == 20.0
+    assert [e.cohort.static["rounds"]
+            for e in schedule(plan, costs=fresh)] == [2, 8]
+
+
+def test_run_spec_records_costs(tmp_path):
+    d = str(tmp_path / "store")
+    run_spec(SPEC, store=SweepStore(d))
+    book = CostBook(d)
+    for co in cohorts(cells(SPEC)):
+        w = book.per_cell_wall(cohort_static_hash(co))
+        assert w is not None and w > 0.0

@@ -98,16 +98,19 @@ def test_static_axes_partition_cohorts():
 
 
 def test_ragged_exclusions_stay_shape_exact():
-    """Minibatch (k_b) cells and pathloss channels must not ragged-merge:
-    their numerics depend on the padded shapes."""
+    """Channels whose numerics depend on the padded worker-axis extent
+    (``ragged_exact = False``, e.g. ensemble-normalized pathloss) must
+    not ragged-merge.  Minibatch (k_b) cells DO merge now: the
+    per-sample ``fold_in`` sampler and the k_i>0 worker count made their
+    draws restriction-stable (ISSUE 6)."""
     spec = SweepSpec(axes={"U": (4, 6)},
                      base={"k_bar": K_BAR, "rounds": 2, "k_b": 4})
-    assert len(cohorts(cells(spec))) == 2
+    assert len(cohorts(cells(spec))) == 1
     spec = SweepSpec(axes={"U": (4, 6)},
                      base={"k_bar": K_BAR, "rounds": 2,
                            "channel": "pathloss"})
     assert len(cohorts(cells(spec))) == 2
-    # ... while the default channel merges
+    # ... and the default channel merges as before
     spec = SweepSpec(axes={"U": (4, 6)}, base={"k_bar": K_BAR, "rounds": 2})
     assert len(cohorts(cells(spec))) == 1
 
