@@ -3,6 +3,11 @@
 Serving has no over-the-air aggregation (DESIGN.md §4): these paths
 exercise the framework's inference side for the assigned decode shapes.
 
+NOTE: this is MODEL INFERENCE serving (token generation).  Serving
+experiment grids — the long-lived sweep daemon answering SweepSpec
+requests from the result store — is the separate ``repro.serve``
+package (``python -m repro.serve``, docs/service.md).
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \\
       --batch 4 --prompt-len 32 --gen 16

@@ -51,6 +51,7 @@ class ClaimBoard:
         self.dir = os.path.join(store_root, CLAIMS_DIRNAME)
         self.host_id = host_id
         self.lease_timeout = lease_timeout
+        self.steals = 0          # stale leases taken over (observability)
         self._held: Set[str] = set()
         self._lock = threading.Lock()
         self._hb_stop: Optional[threading.Event] = None
@@ -70,6 +71,10 @@ class ClaimBoard:
         """
         doc = json.dumps({"host": self.host_id, "acquired": time.time()})
         path = self._path(sig)
+        # a runtime_gc on an idle store may have pruned the empty claims
+        # dir since __init__; recreate lazily so a long-lived board
+        # (the service daemon) survives it
+        os.makedirs(self.dir, exist_ok=True)
         try:
             fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
         except FileExistsError:
@@ -86,6 +91,8 @@ class ClaimBoard:
                 if os.path.exists(tmp):
                     os.unlink(tmp)
                 raise
+            with self._lock:
+                self.steals += 1
         else:
             with os.fdopen(fd, "w") as f:
                 f.write(doc)

@@ -1,6 +1,18 @@
 """Concurrent cohort scheduler: cost-ordered dispatch with a bounded
 in-flight window, bounded retries, and quarantine.
 
+Two entry points share one machinery:
+
+* :func:`run_cohorts` — the one-shot path: create an engine, submit the
+  cohort list as a single batch, wait, tear down.  This is what
+  ``run_spec(jobs>=2)`` and the multi-host claim loop call.
+* :class:`CohortEngine` — the LONG-LIVED path: a persistent dispatch
+  pool + completion writer that accepts many independent batches over
+  its lifetime.  The sweep service daemon (``repro.serve``) keeps one
+  engine open for days and feeds it a batch per scheduled cohort, so
+  repeat grid requests never pay pool/writer startup, and a persistent
+  process keeps its jit compile cache warm across requests.
+
 ``run_cohorts`` executes a list of sweep cohorts through three
 overlapping stages instead of a serial loop:
 
@@ -23,13 +35,15 @@ concurrency never touch numerics: every cohort runs the exact
 computation the serial path would, on explicit PRNG keys, so results are
 invariant to scheduling (tested in ``tests/test_runtime.py``).
 
-Failure handling is per cohort: an error from any stage (trace, compile,
-resolve, sink) is retried up to ``max_retries`` times with exponential
-backoff; a cohort that exhausts its retries is either quarantined
-(structured ``failed/<sig>.json`` record, the REST of the sweep
-completes) or — the default, preserving the historical contract — cancels
-the remaining dispatches, drains the window so no thread deadlocks, and
-re-raises on the calling thread.
+Failure handling is per cohort AND per batch: an error from any stage
+(trace, compile, resolve, sink) is retried up to ``max_retries`` times
+with exponential backoff; a cohort that exhausts its retries is either
+quarantined (structured ``failed/<sig>.json`` record, the REST of the
+batch completes) or — the default, preserving the historical contract —
+cancels the batch's remaining dispatches, drains its window slots so no
+thread deadlocks, and re-raises from :meth:`_Batch.wait`.  A fatal batch
+never poisons the engine: other batches (other daemon requests) keep
+running on the same pool and writer.
 
 With ``checkpoint_every=R`` cohorts execute through
 ``grid.run_cohort_blocks`` on the dispatcher thread (R-round blocks,
@@ -42,11 +56,12 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import itertools
 import sys
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -107,15 +122,40 @@ def _tree_ready(out: Any) -> bool:
     return True
 
 
+class Counters:
+    """Thread-safe monotonic event counters (observability only — no
+    control flow reads them)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._c: Dict[str, int] = {}
+
+    def bump(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._c[name] = self._c.get(name, 0) + n
+
+    def get(self, name: str) -> int:
+        with self._lock:
+            return self._c.get(name, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._c)
+
+
 class _Window:
-    """Counting semaphore whose waiters abort when the run fails."""
+    """Counting semaphore whose waiters abort on engine shutdown or when
+    their batch is cancelled (the ``cancelled`` probe)."""
 
     def __init__(self, slots: int):
         self._sem = threading.Semaphore(slots)
         self._stop = threading.Event()
 
-    def acquire(self) -> bool:
+    def acquire(self, cancelled: Optional[Callable[[], bool]] = None
+                ) -> bool:
         while not self._stop.is_set():
+            if cancelled is not None and cancelled():
+                return False
             if self._sem.acquire(timeout=0.05):
                 return True
         return False
@@ -129,6 +169,369 @@ class _Window:
     @property
     def stopped(self) -> bool:
         return self._stop.is_set()
+
+
+class _Batch:
+    """Bookkeeping for one submitted cohort list.
+
+    The batch owns everything request-scoped — retry counts, quarantine
+    routing, the fatal error, the done event — while the engine owns the
+    shared resources (pool, window, writer, mesh context).  A batch that
+    fails fast cancels only ITS remaining dispatches; the engine and any
+    sibling batches keep running.
+    """
+
+    def __init__(self, engine: "CohortEngine", tag: str,
+                 entries: List[ScheduledCohort], *,
+                 sink: Callable[[grid_lib.Cohort, List[Dict[str, Any]]],
+                                None],
+                 do_eval: bool, tail: int, eval_data,
+                 costs, store_root: Optional[str], cache_key,
+                 resume: bool, checkpoint_every: Optional[int],
+                 policy: resilience.RetryPolicy,
+                 qlog: Optional[resilience.QuarantineLog],
+                 qclear: Optional[resilience.QuarantineLog],
+                 verbose: bool,
+                 on_quarantine: Optional[Callable[[grid_lib.Cohort,
+                                                   BaseException, int],
+                                                  None]] = None,
+                 on_fatal: Optional[Callable[[BaseException],
+                                             None]] = None):
+        self.engine = engine
+        self.tag = tag
+        self.entries = entries
+        self.sink = sink
+        self.do_eval, self.tail, self.eval_data = do_eval, tail, eval_data
+        self.costs = costs
+        self.store_root, self.cache_key = store_root, cache_key
+        self.resume, self.checkpoint_every = resume, checkpoint_every
+        self.policy, self.qlog, self.qclear = policy, qlog, qclear
+        self.verbose = verbose
+        self.on_quarantine, self.on_fatal = on_quarantine, on_fatal
+
+        self._lock = threading.Lock()
+        self._outstanding = len(entries)
+        self._attempts: Dict[int, int] = {}
+        self._fatal: List[BaseException] = []
+        self._stop = threading.Event()
+        self.done = threading.Event()
+        if not entries:
+            self.done.set()
+
+    # ----------------------------------------------------------- lifecycle
+    def label_of(self, entry: ScheduledCohort) -> str:
+        return f"{self.tag}:cohort-{entry.order}"
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
+
+    def error(self) -> Optional[BaseException]:
+        with self._lock:
+            return self._fatal[0] if self._fatal else None
+
+    def task_finished(self) -> None:
+        with self._lock:
+            self._outstanding -= 1
+            if self._outstanding <= 0:
+                self.done.set()
+
+    def fail_fatal(self, exc: BaseException) -> None:
+        with self._lock:
+            self._fatal.append(exc)
+        self._stop.set()
+        self.done.set()     # wake waiters even with work outstanding
+        self.engine.counters.bump("batches_failed")
+        if self.on_fatal is not None:
+            try:
+                self.on_fatal(exc)
+            except Exception:       # noqa: BLE001 — observability only
+                pass
+
+    def wait(self) -> None:
+        """Block until every cohort settled; re-raise the first fatal
+        error (retry-exhausted without quarantine, or a BaseException)."""
+        self.done.wait()
+        err = self.error()
+        if err is not None:
+            raise err
+
+    # ------------------------------------------------------------- failure
+    def handle_failure(self, entry: ScheduledCohort,
+                       exc: BaseException) -> bool:
+        """Retry, quarantine, or declare fatal.  True = handled."""
+        with self._lock:
+            self._attempts[entry.order] = \
+                self._attempts.get(entry.order, 0) + 1
+            n = self._attempts[entry.order]
+        if n <= self.policy.max_retries and not self.stopped \
+                and not self.engine.closed:
+            pause = self.policy.sleep_for(n - 1)
+            if self.verbose:
+                print(f"# runtime: cohort {entry.order + 1} failed "
+                      f"({type(exc).__name__}: {exc}); retry "
+                      f"{n}/{self.policy.max_retries} in {pause:.1f}s",
+                      file=sys.stderr)
+            self.engine.counters.bump("cohorts_retried")
+            timer = threading.Timer(pause, self.engine._resubmit,
+                                    args=(self, entry))
+            timer.daemon = True
+            timer.start()
+            return True
+        if self.qlog is not None:
+            sig = grid_lib.cohort_signature(entry.cohort, self.cache_key)
+            path = self.qlog.record(entry.cohort, sig, exc, n,
+                                    self.cache_key)
+            print(f"# runtime: cohort {entry.order + 1} quarantined "
+                  f"after {n} attempt(s) -> {path}", file=sys.stderr)
+            self.engine.counters.bump("cohorts_quarantined")
+            if self.on_quarantine is not None:
+                try:
+                    self.on_quarantine(entry.cohort, exc, n)
+                except Exception:   # noqa: BLE001 — observability only
+                    pass
+            self.engine._forget(self.label_of(entry))
+            self.task_finished()
+            return True
+        self.fail_fatal(exc)
+        self.engine._forget(self.label_of(entry))
+        self.task_finished()
+        return False
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch_one(self, entry: ScheduledCohort) -> None:
+        engine = self.engine
+        if self.stopped or self.error() is not None:
+            self.task_finished()
+            return
+        if not engine._window.acquire(cancelled=lambda: self.stopped):
+            self.task_finished()
+            return
+        if self.stopped:        # failed while we waited for a slot
+            engine._window.release()
+            self.task_finished()
+            return
+        co = entry.cohort
+        t0 = time.time()
+        try:
+            plan_order = entry.order + 1
+            faults.fire("kill_at_cohort", cohort=plan_order)
+            faults.fire("fail_cohort", cohort=plan_order)
+            faults.fire("flaky_cohort", cohort=plan_order)
+            if self.verbose:
+                print(f"# dispatch cohort {entry.order} x{len(co)} "
+                      f"(cost={entry.cost:.3g})", file=sys.stderr)
+            engine.counters.bump("cohorts_dispatched")
+            if self.checkpoint_every is not None:
+                with self._lock:
+                    prior = self._attempts.get(entry.order, 0)
+                sig = grid_lib.cohort_signature(co, self.cache_key)
+                results = grid_lib.run_cohort_blocks(
+                    co, every=self.checkpoint_every,
+                    ckpt_dir=grid_lib.ckpt_dir_for(self.store_root, sig),
+                    resume=self.resume or prior > 0, do_eval=self.do_eval,
+                    tail=self.tail, eval_data=self.eval_data,
+                    verbose=self.verbose)
+
+                def resolve_fn(results=results, co=co, t0=t0):
+                    if self.stopped:
+                        return None
+                    faults.delay("delay_resolve")
+                    self._record_cost(co, t0)
+                    return results
+
+                ready_fn = None             # already on host: FIFO-ready
+            else:
+                prep = grid_lib.prepare_cohort(co, do_eval=self.do_eval,
+                                               eval_data=self.eval_data)
+                out, e = shard_lib.dispatch_sharded(
+                    jax.vmap(prep.run_one), prep.batch, engine._mesh,
+                    donate=True)
+
+                def resolve_fn(out=out, e=e, co=co, t0=t0):
+                    if self.stopped:
+                        return None
+                    faults.delay("delay_resolve")
+                    host = shard_lib.resolve(out, e)
+                    host = {k: np.asarray(v) for k, v in host.items()}
+                    res = grid_lib.finalize_cohort(co, host,
+                                                   tail=self.tail)
+                    self._record_cost(co, t0)
+                    return res
+
+                ready_fn = (lambda out=out: _tree_ready(out))
+        except BaseException as exc:   # noqa: BLE001 — routed per policy
+            engine._window.release()
+            if isinstance(exc, Exception):
+                self.handle_failure(entry, exc)
+            else:
+                self.fail_fatal(exc)
+                self.task_finished()
+            return
+
+        def sink_fn(results, co=co, entry=entry):
+            if results is None or self.stopped:   # cancelled in flight
+                self.engine._forget(self.label_of(entry))
+                self.task_finished()
+                return
+            self.sink(co, results)
+            if self.qclear is not None:
+                # the cohort succeeded; a record from an earlier run or
+                # another host's exhausted retries is obsolete
+                self.qclear.clear(
+                    grid_lib.cohort_signature(co, self.cache_key))
+            self.engine.counters.bump("cohorts_completed")
+            self.engine._forget(self.label_of(entry))
+            self.task_finished()
+
+        engine._writer.submit(Completion(
+            label=self.label_of(entry),
+            resolve=resolve_fn,
+            sink=sink_fn,
+            ready=ready_fn,
+            release=engine._window.release))
+
+    def _record_cost(self, co: grid_lib.Cohort, t0: float) -> None:
+        # dispatch-start -> resolve-end: includes compile + any queueing
+        # overlap, which is exactly the wall a future scheduler pays
+        if self.costs is not None:
+            self.costs.record(grid_lib.cohort_static_hash(co),
+                              wall_s=time.time() - t0, cells=len(co))
+
+
+class CohortEngine:
+    """A reusable cohort execution engine: one dispatch pool, one
+    in-flight window, one completion writer — shared by every batch
+    submitted over the engine's lifetime.
+
+    ``run_cohorts`` opens one for a single batch and closes it; the
+    sweep service daemon (``repro.serve.session``) keeps one open for
+    its whole life, so concurrent grid requests share the concurrency
+    bound (``jobs + dispatch_ahead`` cohorts holding device buffers,
+    daemon-wide) and the process-level jit cache stays warm across
+    requests.
+    """
+
+    def __init__(self, *, jobs: int,
+                 dispatch_ahead: Optional[int] = None,
+                 mesh=None, verbose: bool = False):
+        if jobs < 1:
+            raise ValueError(f"jobs must be >= 1, got {jobs}")
+        if dispatch_ahead is None:
+            dispatch_ahead = DEFAULT_DISPATCH_AHEAD
+        if dispatch_ahead < 0:
+            raise ValueError(
+                f"dispatch_ahead must be >= 0, got {dispatch_ahead}")
+        self.jobs = jobs
+        self.dispatch_ahead = dispatch_ahead
+        self.counters = Counters()
+        self.closed = False
+        self._mesh = mesh
+        self._window = _Window(jobs + dispatch_ahead)
+        self._writer = CompletionWriter(on_error=self._route_error)
+        self._labels: Dict[str, Tuple[_Batch, ScheduledCohort]] = {}
+        self._labels_lock = threading.Lock()
+        self._seq = itertools.count()
+        # hold the mesh context across the whole pool: per-dispatch
+        # nesting from worker threads then always restores to this same
+        # mesh, so one thread's context exit can never deactivate it
+        # under another
+        self._stack = contextlib.ExitStack()
+        if mesh is not None:
+            self._stack.enter_context(mesh_lib.activate_mesh(mesh))
+        self._pool = ThreadPoolExecutor(
+            max_workers=jobs, thread_name_prefix="sweep-dispatch")
+
+    # -------------------------------------------------------------- public
+    def submit(self, cohort_list: List[grid_lib.Cohort], *,
+               sink: Callable[[grid_lib.Cohort, List[Dict[str, Any]]],
+                              None],
+               do_eval: bool = True, tail: int = 10, eval_data=None,
+               costs=None, store_root: Optional[str] = None,
+               cache_key=None, resume: bool = False,
+               checkpoint_every: Optional[int] = None,
+               max_retries: int = 0, retry_backoff: float = 0.5,
+               quarantine: bool = False, verbose: bool = False,
+               on_quarantine=None, on_fatal=None) -> _Batch:
+        """Schedule ``cohort_list`` as one batch; returns its handle.
+
+        ``sink(cohort, results)`` fires on the writer thread as each
+        cohort's results reach host memory; ``on_quarantine(cohort, exc,
+        attempts)`` / ``on_fatal(exc)`` are optional observability hooks
+        for callers that cannot block in :meth:`_Batch.wait` (the
+        daemon).  On success every cohort has been sunk exactly once.
+        """
+        if self.closed:
+            raise RuntimeError("engine is closed")
+        if checkpoint_every is not None and store_root is None:
+            raise ValueError("checkpoint_every requires store_root")
+        entries = schedule(cohort_list, costs=costs)
+        policy = resilience.RetryPolicy(max_retries=max_retries,
+                                        backoff_s=retry_backoff)
+        qclear = (resilience.QuarantineLog(store_root)
+                  if store_root is not None else None)
+        batch = _Batch(self, f"b{next(self._seq)}", entries, sink=sink,
+                       do_eval=do_eval, tail=tail, eval_data=eval_data,
+                       costs=costs, store_root=store_root,
+                       cache_key=cache_key, resume=resume,
+                       checkpoint_every=checkpoint_every, policy=policy,
+                       qlog=(qclear if quarantine else None),
+                       qclear=qclear, verbose=verbose,
+                       on_quarantine=on_quarantine, on_fatal=on_fatal)
+        with self._labels_lock:
+            for e in entries:
+                self._labels[batch.label_of(e)] = (batch, e)
+        self.counters.bump("batches_submitted")
+        for e in entries:
+            self._pool.submit(batch.dispatch_one, e)
+        return batch
+
+    def pending(self) -> int:
+        """Completions submitted to the writer but not yet retired."""
+        return self._writer.pending()
+
+    def close(self) -> None:
+        """Join the pool, drain the writer, release the mesh context.
+        Re-raises a writer-level fatal (BaseException) if one occurred."""
+        self.closed = True
+        self._window.stop()
+        self._pool.shutdown(wait=True)
+        try:
+            self._writer.close()
+        finally:
+            self._stack.close()
+
+    # ------------------------------------------------------------ internal
+    def _resubmit(self, batch: _Batch, entry: ScheduledCohort) -> None:
+        if batch.stopped or self.closed:
+            batch.task_finished()
+            return
+        try:
+            self._pool.submit(batch.dispatch_one, entry)
+        except RuntimeError:            # pool already shut down
+            batch.task_finished()
+
+    def _forget(self, label: str) -> None:
+        with self._labels_lock:
+            self._labels.pop(label, None)
+
+    def _route_error(self, completion: Completion,
+                     exc: BaseException) -> bool:
+        """Writer ``on_error``: route to the owning batch.  Always
+        returns True for a known label — even a batch-fatal error is
+        recorded on the BATCH (re-raised from its ``wait``), so the
+        shared writer never goes sticky and sibling batches survive."""
+        with self._labels_lock:
+            item = self._labels.get(completion.label)
+        if item is None:
+            return False    # unknown label: engine bug, fail loudly
+        batch, entry = item
+        try:
+            batch.handle_failure(entry, exc)
+        except BaseException as cb_exc:  # noqa: BLE001 — must not wedge
+            batch.fail_fatal(cb_exc)
+            batch.task_finished()
+        return True
 
 
 def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
@@ -145,13 +548,14 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
     """Run every cohort concurrently; ``sink(cohort, results)`` fires on
     the writer thread as each cohort's results reach host memory.
 
-    ``jobs`` dispatcher threads each drive prepare -> compile -> async
-    dispatch; at most ``jobs + dispatch_ahead`` cohorts hold device
-    buffers at once.  A failing cohort is retried ``max_retries`` times
-    (backoff ``retry_backoff * 2**attempt`` seconds) and then either
-    quarantined (``quarantine=True`` + ``store_root``) or — the default —
-    the first error cancels the rest and re-raises here.  On success
-    every cohort has been sunk exactly once.
+    One-shot wrapper over :class:`CohortEngine`: ``jobs`` dispatcher
+    threads each drive prepare -> compile -> async dispatch; at most
+    ``jobs + dispatch_ahead`` cohorts hold device buffers at once.  A
+    failing cohort is retried ``max_retries`` times (backoff
+    ``retry_backoff * 2**attempt`` seconds) and then either quarantined
+    (``quarantine=True`` + ``store_root``) or — the default — the first
+    error cancels the rest and re-raises here.  On success every cohort
+    has been sunk exactly once.
 
     Fault-plan cohort points (``kill_at_cohort`` etc.) address cohorts
     by their 1-based position in ``cohort_list`` — the PLAN order, which
@@ -159,192 +563,28 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
     """
     if jobs < 1:
         raise ValueError(f"jobs must be >= 1, got {jobs}")
-    if dispatch_ahead is None:
-        dispatch_ahead = DEFAULT_DISPATCH_AHEAD
-    if dispatch_ahead < 0:
-        raise ValueError(
-            f"dispatch_ahead must be >= 0, got {dispatch_ahead}")
     if checkpoint_every is not None and store_root is None:
         raise ValueError("checkpoint_every requires store_root")
     if not cohort_list:
         return
-    entries = schedule(cohort_list, costs=costs)
-    window = _Window(jobs + dispatch_ahead)
-    policy = resilience.RetryPolicy(max_retries=max_retries,
-                                    backoff_s=retry_backoff)
-    qclear = (resilience.QuarantineLog(store_root)
-              if store_root is not None else None)
-    qlog = qclear if quarantine else None
-
-    lock = threading.Lock()
-    outstanding = [len(entries)]
-    all_done = threading.Event()
-    attempts: Dict[int, int] = {}
-    fatal: List[BaseException] = []
-    by_label = {f"cohort-{e.order}": e for e in entries}
-    pool_box: List[Any] = []
-
-    def task_finished() -> None:
-        with lock:
-            outstanding[0] -= 1
-            if outstanding[0] <= 0:
-                all_done.set()
-
-    def fail_fatal(exc: BaseException) -> None:
-        with lock:
-            fatal.append(exc)
-        window.stop()
-        all_done.set()      # wake the main wait even with work outstanding
-
-    def resubmit(entry: ScheduledCohort) -> None:
-        if window.stopped:
-            task_finished()
-            return
-        try:
-            pool_box[0].submit(dispatch_one, entry)
-        except RuntimeError:            # pool already shut down (fatal)
-            task_finished()
-
-    def handle_failure(entry: ScheduledCohort,
-                       exc: BaseException) -> bool:
-        """Retry, quarantine, or declare fatal.  True = handled."""
-        with lock:
-            attempts[entry.order] = attempts.get(entry.order, 0) + 1
-            n = attempts[entry.order]
-        if n <= policy.max_retries and not window.stopped:
-            pause = policy.sleep_for(n - 1)
-            if verbose:
-                print(f"# runtime: cohort {entry.order + 1} failed "
-                      f"({type(exc).__name__}: {exc}); retry "
-                      f"{n}/{policy.max_retries} in {pause:.1f}s",
-                      file=sys.stderr)
-            timer = threading.Timer(pause, resubmit, args=(entry,))
-            timer.daemon = True
-            timer.start()
-            return True
-        if qlog is not None:
-            sig = grid_lib.cohort_signature(entry.cohort, cache_key)
-            path = qlog.record(entry.cohort, sig, exc, n, cache_key)
-            print(f"# runtime: cohort {entry.order + 1} quarantined "
-                  f"after {n} attempt(s) -> {path}", file=sys.stderr)
-            task_finished()
-            return True
-        fail_fatal(exc)
-        task_finished()
-        return False
-
-    def on_error(completion: Completion, exc: BaseException) -> bool:
-        entry = by_label.get(completion.label)
-        if entry is None:
-            return False
-        try:
-            return handle_failure(entry, exc)
-        except BaseException as cb_exc:   # noqa: BLE001 — must not wedge
-            fail_fatal(cb_exc)
-            return False
-
-    writer = CompletionWriter(on_error=on_error)
-
-    def record_cost(co: grid_lib.Cohort, t0: float) -> None:
-        # dispatch-start -> resolve-end: includes compile + any queueing
-        # overlap, which is exactly the wall a future scheduler pays
-        if costs is not None:
-            costs.record(grid_lib.cohort_static_hash(co),
-                         wall_s=time.time() - t0, cells=len(co))
-
-    def dispatch_one(entry: ScheduledCohort) -> None:
-        if window.stopped or writer.error is not None:
-            task_finished()
-            return
-        if not window.acquire():
-            task_finished()
-            return
-        if writer.error is not None:   # failed while we waited for a slot
-            window.release()
-            window.stop()
-            task_finished()
-            return
-        co = entry.cohort
-        t0 = time.time()
-        try:
-            plan_order = entry.order + 1
-            faults.fire("kill_at_cohort", cohort=plan_order)
-            faults.fire("fail_cohort", cohort=plan_order)
-            faults.fire("flaky_cohort", cohort=plan_order)
-            if verbose:
-                print(f"# dispatch cohort {entry.order} x{len(co)} "
-                      f"(cost={entry.cost:.3g})", file=sys.stderr)
-            if checkpoint_every is not None:
-                with lock:
-                    prior = attempts.get(entry.order, 0)
-                sig = grid_lib.cohort_signature(co, cache_key)
-                results = grid_lib.run_cohort_blocks(
-                    co, every=checkpoint_every,
-                    ckpt_dir=grid_lib.ckpt_dir_for(store_root, sig),
-                    resume=resume or prior > 0, do_eval=do_eval,
-                    tail=tail, eval_data=eval_data, verbose=verbose)
-
-                def resolve_fn(results=results, co=co, t0=t0):
-                    faults.delay("delay_resolve")
-                    record_cost(co, t0)
-                    return results
-
-                ready_fn = None             # already on host: FIFO-ready
-            else:
-                prep = grid_lib.prepare_cohort(co, do_eval=do_eval,
-                                               eval_data=eval_data)
-                out, e = shard_lib.dispatch_sharded(
-                    jax.vmap(prep.run_one), prep.batch, mesh, donate=True)
-
-                def resolve_fn(out=out, e=e, co=co, t0=t0):
-                    faults.delay("delay_resolve")
-                    host = shard_lib.resolve(out, e)
-                    host = {k: np.asarray(v) for k, v in host.items()}
-                    res = grid_lib.finalize_cohort(co, host, tail=tail)
-                    record_cost(co, t0)
-                    return res
-
-                ready_fn = (lambda out=out: _tree_ready(out))
-        except BaseException as exc:   # noqa: BLE001 — routed per policy
-            window.release()
-            if isinstance(exc, Exception):
-                handle_failure(entry, exc)
-            else:
-                fail_fatal(exc)
-                task_finished()
-            return
-
-        def sink_fn(results, co=co):
-            sink(co, results)
-            if qclear is not None:
-                # the cohort succeeded; a record from an earlier run or
-                # another host's exhausted retries is obsolete
-                qclear.clear(grid_lib.cohort_signature(co, cache_key))
-            task_finished()
-
-        writer.submit(Completion(
-            label=f"cohort-{entry.order}",
-            resolve=resolve_fn,
-            sink=sink_fn,
-            ready=ready_fn,
-            release=window.release))
-
-    # hold the mesh context across the whole pool: per-dispatch nesting
-    # from worker threads then always restores to this same mesh, so one
-    # thread's context exit can never deactivate it under another
-    mesh_ctx = (mesh_lib.activate_mesh(mesh) if mesh is not None
-                else contextlib.nullcontext())
-    with mesh_ctx, ThreadPoolExecutor(
-            max_workers=jobs,
-            thread_name_prefix="sweep-dispatch") as pool:
-        pool_box.append(pool)
-        for entry in entries:
-            pool.submit(dispatch_one, entry)
-        all_done.wait()
+    engine = CohortEngine(jobs=jobs, dispatch_ahead=dispatch_ahead,
+                          mesh=mesh, verbose=verbose)
+    err: Optional[BaseException] = None
     try:
-        writer.close()
-    except BaseException as e:   # noqa: BLE001 — surfaced below
-        with lock:
-            fatal.append(e)
-    if fatal:
-        raise fatal[0]
+        batch = engine.submit(
+            cohort_list, sink=sink, do_eval=do_eval, tail=tail,
+            eval_data=eval_data, costs=costs, store_root=store_root,
+            cache_key=cache_key, resume=resume,
+            checkpoint_every=checkpoint_every, max_retries=max_retries,
+            retry_backoff=retry_backoff, quarantine=quarantine,
+            verbose=verbose)
+        batch.wait()
+    except BaseException as e:   # noqa: BLE001 — re-raised after close
+        err = e
+    try:
+        engine.close()
+    except BaseException as e:   # noqa: BLE001 — first error wins
+        if err is None:
+            err = e
+    if err is not None:
+        raise err

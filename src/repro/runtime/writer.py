@@ -56,6 +56,7 @@ class CompletionWriter:
         self._on_error = on_error
         self._error: Optional[BaseException] = None
         self._drained: List[str] = []
+        self._pending_n = 0
         self._lock = threading.Lock()
         self._thread = threading.Thread(target=self._loop,
                                         name="sweep-writer", daemon=True)
@@ -63,7 +64,15 @@ class CompletionWriter:
 
     # ------------------------------------------------------------- public
     def submit(self, completion: Completion) -> None:
+        with self._lock:
+            self._pending_n += 1
         self._queue.put(completion)
+
+    def pending(self) -> int:
+        """Completions submitted but not yet retired (resolved, errored,
+        or dropped) — the writer-side queue depth for observability."""
+        with self._lock:
+            return self._pending_n
 
     @property
     def error(self) -> Optional[BaseException]:
@@ -137,9 +146,13 @@ class CompletionWriter:
             if not handled and self._error is None:
                 self._error = e
         finally:
+            with self._lock:
+                self._pending_n -= 1
             if c.release is not None:
                 c.release()
 
     def _drop(self, c: Completion) -> None:
+        with self._lock:
+            self._pending_n -= 1
         if c.release is not None:
             c.release()

@@ -1,0 +1,27 @@
+"""Sweep-as-a-service: a long-lived daemon serving grid requests.
+
+``python -m repro.serve --store <root> --listen <host:port>`` keeps one
+persistent cohort engine (dispatch pool, completion writer, mesh, warm
+jit cache) over one content-hashed :class:`~repro.sweep.store.SweepStore`
+and answers SweepSpec grids over local HTTP/JSON: cached cells are
+served straight from the store with zero device work, overlapping
+in-flight grids share cohorts through the work-stealing claim board,
+and only genuinely new cells reach the scheduler.  See docs/service.md.
+
+(Model INFERENCE serving — prefill/decode of the transformer stacks —
+is the separate ``repro.launch.serve`` path; this package serves
+experiment grids.)
+"""
+
+from repro.serve.admission import (AdmissionPolicy, AdmissionRejected,
+                                   auto_dispatch_ahead, auto_jobs)
+from repro.serve.api import make_server, prometheus_text
+from repro.serve.client import ServiceError, stats, submit_and_wait
+from repro.serve.session import SweepService, spec_from_doc, spec_to_doc
+
+__all__ = [
+    "AdmissionPolicy", "AdmissionRejected", "ServiceError",
+    "SweepService", "auto_dispatch_ahead", "auto_jobs", "make_server",
+    "prometheus_text", "spec_from_doc", "spec_to_doc", "stats",
+    "submit_and_wait",
+]

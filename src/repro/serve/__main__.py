@@ -1,0 +1,109 @@
+"""``python -m repro.serve`` — run the sweep service daemon.
+
+Examples:
+
+    # serve grids from (and into) sweeps/store on the default port
+    python -m repro.serve --store sweeps/store --listen 127.0.0.1:8477
+
+    # auto-tuned pool (default), ephemeral port (printed on stdout)
+    python -m repro.serve --store sweeps/store --listen 127.0.0.1:0
+
+Then query it:
+
+    python -m repro.sweep --submit 127.0.0.1:8477 --task linreg \\
+        --rounds 10 --axis seed=0:4
+    curl -s 127.0.0.1:8477/stats | python -m json.tool
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.serve import api as api_lib
+from repro.serve import session as session_lib
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="long-lived sweep service over a result store")
+    ap.add_argument("--store", required=True,
+                    help="result-store directory served and written")
+    ap.add_argument("--listen", default="127.0.0.1:8477",
+                    metavar="HOST:PORT",
+                    help="bind address (port 0 = ephemeral; the bound "
+                         "address is printed on stdout)")
+    ap.add_argument("--jobs", default="auto",
+                    help="dispatch threads: an integer, or 'auto' "
+                         "(default) to size from CostBook measured "
+                         "walls + CPU count")
+    ap.add_argument("--dispatch-ahead", type=int, default=None,
+                    help="extra cohorts in flight beyond --jobs "
+                         "(default: auto)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard cohorts over this many devices "
+                         "(default: all visible)")
+    ap.add_argument("--lease-timeout", type=float, default=60.0,
+                    metavar="SECONDS",
+                    help="claim-board lease: foreign claims older than "
+                         "this are stale and stolen (default 60)")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="retries per failing cohort before quarantine "
+                         "(default 1)")
+    ap.add_argument("--retry-backoff", type=float, default=0.5)
+    ap.add_argument("--max-queued-s", type=float, default=600.0,
+                    metavar="SECONDS",
+                    help="admission bound: estimated device-seconds one "
+                         "client may have queued (default 600)")
+    ap.add_argument("--poll-interval", type=float, default=1.0,
+                    metavar="SECONDS",
+                    help="store poll for foreign-claimed cohorts")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    host, _, port_s = args.listen.rpartition(":")
+    if not host or not port_s.isdigit():
+        ap.error(f"--listen wants HOST:PORT, got {args.listen!r}")
+    try:
+        jobs = int(args.jobs)
+    except ValueError:
+        if args.jobs != "auto":
+            ap.error(f"--jobs wants an integer or 'auto', "
+                     f"got {args.jobs!r}")
+        jobs = "auto"
+
+    if os.environ.get("REPRO_FAULTS"):
+        # deterministic chaos testing reaches the daemon the same way
+        # it reaches the CLI (runtime.faults reads the env on install)
+        print("# serve: REPRO_FAULTS is set — fault injection active",
+              file=sys.stderr)
+
+    service = session_lib.SweepService(
+        args.store, jobs=jobs, dispatch_ahead=args.dispatch_ahead,
+        devices=args.devices, lease_timeout=args.lease_timeout,
+        max_retries=args.max_retries, retry_backoff=args.retry_backoff,
+        max_queued_s_per_client=args.max_queued_s,
+        poll_s=args.poll_interval, verbose=not args.quiet)
+    server = api_lib.make_server(service, host, int(port_s))
+    bound = server.server_address
+    # stdout, flushed: scripts (tests, CI) parse the bound address
+    print(f"listening on {bound[0]}:{bound[1]}", flush=True)
+    if not args.quiet:
+        print(f"# serve: store={args.store} jobs={service.engine.jobs} "
+              f"dispatch_ahead={service.engine.dispatch_ahead}",
+              file=sys.stderr)
+    try:
+        server.serve_forever(poll_interval=0.2)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        server.server_close()
+        service.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

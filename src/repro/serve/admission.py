@@ -1,0 +1,123 @@
+"""Admission control + auto-tuning for the sweep service (and the CLI).
+
+Two concerns live here because they share one input — the store's
+``CostBook`` of measured per-cell walls:
+
+* :func:`auto_jobs` sizes the dispatch pool from evidence instead of a
+  flag.  The heuristic is deliberately conservative: concurrent cohort
+  dispatch overlaps compile/transfer with device compute, but on CPU
+  backends XLA compiles serialize behind a lock, so past ~4 dispatchers
+  extra threads only add contention (PR 5 measured ~1.1x at jobs=2 on
+  1 CPU device).  Tiny measured cells (sub-50ms) are dominated by
+  dispatch overhead and get an even smaller pool.
+
+* :class:`AdmissionPolicy` bounds the device-work a single client may
+  have queued in the daemon, in *estimated seconds* (measured walls when
+  the CostBook knows the cohort's static key, a flat default otherwise).
+  Rejection is cheap and early — before any claim, subscription, or
+  dispatch — so a rejected request mutates nothing.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, List, Optional
+
+from repro.sweep import grid as grid_lib
+
+# pool ceiling: beyond this, CPU-backend compile locks serialize anyway
+MAX_AUTO_JOBS = 8
+# cohorts whose measured per-cell wall is under this are overhead-bound
+TINY_CELL_WALL_S = 0.05
+
+
+def _measured_walls(costs) -> List[float]:
+    """Per-cell walls (seconds) for every measured static key."""
+    if costs is None:
+        return []
+    walls = []
+    for rec in costs.load().values():
+        try:
+            cells = float(rec["cells"])
+            if cells > 0:
+                walls.append(float(rec["wall_s"]) / cells)
+        except (KeyError, TypeError, ValueError):
+            continue
+    return sorted(walls)
+
+
+def auto_jobs(costs=None, *, cpu_count: Optional[int] = None) -> int:
+    """Pick a dispatch-pool size from measured walls + host CPU count.
+
+    Leaves one core for the writer thread and the main loop; with no
+    measurements (a fresh store) or overhead-bound tiny cells, stays at
+    2 (enough to overlap compile with compute, cheap to be wrong about);
+    with real measured work, 4 (the CPU compile-lock knee).
+    """
+    cpus = cpu_count if cpu_count is not None else (os.cpu_count() or 2)
+    cap = max(1, min(MAX_AUTO_JOBS, cpus - 1))
+    walls = _measured_walls(costs)
+    if not walls:
+        return min(2, cap)
+    median = walls[len(walls) // 2]
+    if median < TINY_CELL_WALL_S:
+        return min(2, cap)
+    return min(4, cap)
+
+
+def auto_dispatch_ahead(jobs: int) -> int:
+    """In-flight headroom beyond the pool: half the pool, at least the
+    historical default of 2 — enough that the writer always has a ready
+    completion to drain without stacking device buffers."""
+    return max(2, jobs // 2)
+
+
+class AdmissionRejected(RuntimeError):
+    """The request would exceed its client's queued-work bound."""
+
+
+class AdmissionPolicy:
+    """Bound queued device-work per client, in estimated seconds."""
+
+    def __init__(self, max_queued_s_per_client: float = 600.0,
+                 default_cohort_s: float = 30.0):
+        self.max_queued_s = float(max_queued_s_per_client)
+        self.default_cohort_s = float(default_cohort_s)
+        self._lock = threading.Lock()
+        self._queued: Dict[str, float] = {}
+
+    def estimate(self, cohort, costs=None) -> float:
+        """Estimated wall seconds for one cohort: measured per-cell wall
+        x cells when the CostBook knows the static key, flat otherwise."""
+        w = (costs.per_cell_wall(grid_lib.cohort_static_hash(cohort))
+             if costs is not None else None)
+        if w is None:
+            return self.default_cohort_s
+        return max(w * len(cohort), 1e-3)
+
+    def admit(self, client: str, est_s: float) -> None:
+        """Reserve ``est_s`` of queued work for ``client`` or raise
+        :class:`AdmissionRejected`.  Zero-cost requests (pure cache
+        hits) always pass."""
+        with self._lock:
+            queued = self._queued.get(client, 0.0)
+            if est_s > 0 and queued + est_s > self.max_queued_s:
+                raise AdmissionRejected(
+                    f"client {client!r} has {queued:.0f}s of work queued; "
+                    f"+{est_s:.0f}s exceeds the {self.max_queued_s:.0f}s "
+                    f"bound — retry after queued work drains")
+            if est_s > 0:
+                self._queued[client] = queued + est_s
+
+    def release(self, client: str, est_s: float) -> None:
+        with self._lock:
+            left = self._queued.get(client, 0.0) - est_s
+            if left <= 1e-9:
+                self._queued.pop(client, None)
+            else:
+                self._queued[client] = left
+
+    def queued(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._queued)

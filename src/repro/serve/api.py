@@ -1,0 +1,142 @@
+"""HTTP/JSON front end of the sweep service (stdlib only).
+
+Endpoints (see docs/service.md for the full reference):
+
+    POST /sweep                submit a spec document; 200 -> request id
+                               + immediate per-cell hit/miss plan;
+                               400 bad spec, 429 admission-rejected
+    GET  /sweep/<id>           request status (``?results=1`` inlines
+                               the per-cell result documents)
+    GET  /cell/<hash>          one store entry by content hash
+    GET  /stats                service/engine/store observability (JSON;
+                               ``?format=prometheus`` for text)
+    GET  /metrics              alias for /stats in Prometheus text format
+    GET  /healthz              liveness probe
+
+The server is a ``ThreadingHTTPServer``: handler threads only classify
+and enqueue (the session layer holds device work on its own engine
+threads), so the API stays responsive while sweeps run.
+"""
+
+from __future__ import annotations
+
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Tuple
+from urllib.parse import parse_qs, urlparse
+
+from repro.serve import session as session_lib
+from repro.serve.admission import AdmissionRejected
+
+MAX_BODY_BYTES = 8 * 1024 * 1024
+
+
+def _flatten(doc: Any, prefix: str, out: Dict[str, float]) -> None:
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            key = f"{prefix}_{k}" if prefix else str(k)
+            _flatten(v, key, out)
+    elif isinstance(doc, bool):
+        out[prefix] = float(doc)
+    elif isinstance(doc, (int, float)):
+        out[prefix] = float(doc)
+
+
+def prometheus_text(stats: Dict[str, Any]) -> str:
+    """Numeric leaves of the stats document as Prometheus exposition
+    lines, namespaced ``repro_serve_*`` (labels-free gauges: the store
+    is the identity, one daemon per store)."""
+    flat: Dict[str, float] = {}
+    _flatten(stats, "", flat)
+    lines = []
+    for name in sorted(flat):
+        metric = "repro_serve_" + "".join(
+            c if c.isalnum() or c == "_" else "_" for c in name)
+        lines.append(f"# TYPE {metric} gauge")
+        lines.append(f"{metric} {flat[name]:g}")
+    return "\n".join(lines) + "\n"
+
+
+def make_server(service: session_lib.SweepService, host: str,
+                port: int) -> ThreadingHTTPServer:
+    """Bind (but do not serve) the API; ``port=0`` picks a free port —
+    read the bound address back from ``server.server_address``."""
+
+    class Handler(BaseHTTPRequestHandler):
+        # keep daemon logs quiet; /stats is the observability surface
+        def log_message(self, fmt, *args):   # noqa: A003
+            pass
+
+        def _json(self, code: int, doc: Any) -> None:
+            body = json.dumps(doc).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _text(self, code: int, text: str,
+                  ctype: str = "text/plain; version=0.0.4") -> None:
+            body = text.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _route(self) -> Tuple[str, Dict[str, str]]:
+            u = urlparse(self.path)
+            q = {k: v[-1] for k, v in parse_qs(u.query).items()}
+            return u.path.rstrip("/") or "/", q
+
+        def do_POST(self):   # noqa: N802 — http.server API
+            path, _ = self._route()
+            if path != "/sweep":
+                return self._json(404, {"error": f"no such route {path}"})
+            try:
+                n = int(self.headers.get("Content-Length", "0"))
+                if n > MAX_BODY_BYTES:
+                    return self._json(413, {"error": "spec too large"})
+                doc = json.loads(self.rfile.read(n) or b"{}")
+                spec = session_lib.spec_from_doc(doc.get("spec", doc))
+            except (ValueError, json.JSONDecodeError) as e:
+                return self._json(400, {"error": str(e)})
+            client = (doc.get("client")
+                      or self.headers.get("X-Client")
+                      or self.client_address[0])
+            try:
+                snap = service.submit(spec, client=str(client))
+            except AdmissionRejected as e:
+                return self._json(429, {"error": str(e)})
+            except ValueError as e:
+                return self._json(400, {"error": str(e)})
+            return self._json(200, snap)
+
+        def do_GET(self):    # noqa: N802 — http.server API
+            path, q = self._route()
+            if path == "/healthz":
+                return self._json(200, {"ok": True})
+            if path == "/stats" or path == "/metrics":
+                stats = service.stats()
+                if path == "/metrics" \
+                        or q.get("format") == "prometheus":
+                    return self._text(200, prometheus_text(stats))
+                return self._json(200, stats)
+            if path.startswith("/sweep/"):
+                rid = path[len("/sweep/"):]
+                snap = service.request_snapshot(
+                    rid, include_results=q.get("results") in ("1", "true"))
+                if snap is None:
+                    return self._json(404,
+                                      {"error": f"unknown request {rid}"})
+                return self._json(200, snap)
+            if path.startswith("/cell/"):
+                doc = service.cell(path[len("/cell/"):])
+                if doc is None:
+                    return self._json(404, {"error": "no such cell"})
+                return self._json(200, doc)
+            return self._json(404, {"error": f"no such route {path}"})
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    server.daemon_threads = True
+    return server

@@ -1,0 +1,101 @@
+"""Client for the sweep service: submit a spec, poll to completion.
+
+``python -m repro.sweep --submit HOST:PORT`` routes through here: the
+same axis flags build the same :class:`SweepSpec`, the daemon answers
+cached cells instantly and computes only the misses, and the client
+reconstructs the IDENTICAL report a local run would print (grid-order
+results, tidy long CSV, exit code 3 when anything was quarantined) —
+callers cannot tell whether a grid ran locally or was served.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serve import session as session_lib
+from repro.sweep import grid as grid_lib
+
+
+class ServiceError(RuntimeError):
+    """The daemon rejected or failed a request (message from its JSON
+    error body; ``status`` carries the HTTP code — 429 = admission)."""
+
+    def __init__(self, msg: str, status: int = 0):
+        super().__init__(msg)
+        self.status = status
+
+
+def _call(url: str, body: Optional[Dict[str, Any]] = None,
+          timeout: float = 30.0) -> Dict[str, Any]:
+    data = None if body is None else json.dumps(body).encode()
+    req = urllib.request.Request(
+        url, data=data,
+        headers={"Content-Type": "application/json"} if data else {})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        try:
+            msg = json.loads(e.read()).get("error", str(e))
+        except (json.JSONDecodeError, ValueError):
+            msg = str(e)
+        raise ServiceError(msg, status=e.code) from None
+    except (urllib.error.URLError, OSError) as e:
+        raise ServiceError(f"cannot reach sweep service at {url}: "
+                           f"{e}") from None
+
+
+def normalize_addr(addr: str) -> str:
+    if "://" not in addr:
+        addr = f"http://{addr}"
+    return addr.rstrip("/")
+
+
+def submit_and_wait(addr: str, spec: grid_lib.SweepSpec, *,
+                    client: Optional[str] = None, poll_s: float = 0.5,
+                    timeout_s: float = 3600.0, verbose: bool = False
+                    ) -> Tuple[List[Optional[Dict[str, Any]]],
+                               Dict[str, Any]]:
+    """Submit ``spec`` and poll until the request settles.
+
+    Returns ``(results, final_snapshot)`` with ``results`` one document
+    per cell IN GRID ORDER (``None`` for quarantined/failed cells) —
+    exactly the shape ``run_spec`` returns locally, so the CLI report
+    code is shared verbatim.
+    """
+    base = normalize_addr(addr)
+    body: Dict[str, Any] = {"spec": session_lib.spec_to_doc(spec)}
+    if client is not None:
+        body["client"] = client
+    snap = _call(f"{base}/sweep", body)
+    rid = snap["id"]
+    if verbose:
+        plan = snap.get("plan", {})
+        print(f"# service {base}: request {rid} — "
+              f"{plan.get('hits', 0)} hits, "
+              f"{plan.get('scheduled', 0)} scheduled, "
+              f"{plan.get('shared', 0)} shared, "
+              f"{plan.get('waiting', 0)} waiting", file=sys.stderr)
+    deadline = time.time() + timeout_s
+    while snap["state"] != "done":
+        if time.time() > deadline:
+            raise ServiceError(
+                f"request {rid} still {snap['state']} after "
+                f"{timeout_s:.0f}s (counts: {snap.get('counts')})")
+        time.sleep(poll_s)
+        snap = _call(f"{base}/sweep/{rid}")
+    snap = _call(f"{base}/sweep/{rid}?results=1")
+    docs = snap.get("results", {})
+    results: List[Optional[Dict[str, Any]]] = []
+    for h in [c["hash"] for c in snap["cells"]]:
+        results.append(docs.get(h))
+    return results, snap
+
+
+def stats(addr: str) -> Dict[str, Any]:
+    return _call(f"{normalize_addr(addr)}/stats")

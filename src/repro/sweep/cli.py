@@ -28,6 +28,12 @@ Examples:
     python -m repro.sweep --spec myspec.json --store sweeps/store \
         --checkpoint-every 50 --resume
 
+    # client mode: post the same grid to a running sweep service
+    # daemon (python -m repro.serve) and poll to completion — cached
+    # cells come back instantly, output is identical to a local run
+    python -m repro.sweep --submit 127.0.0.1:8477 --task linreg \
+        --rounds 10 --axis seed=0:8 --csv out.csv
+
 Spec JSON mirrors ``SweepSpec``: {"axes": {...}, "base": {...},
 "eval": true, "tail": 10}.  Axis values on the command line are comma
 lists (``policy=inflota,random``) or integer ranges (``seed=0:8``);
@@ -45,6 +51,16 @@ from typing import Any, List, Tuple
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
 from repro.sweep.grid import DEFAULTS, SweepSpec, cells, cohorts, run_spec
+
+
+def _parse_jobs(s: str) -> Any:
+    if s.strip().lower() == "auto":
+        return "auto"
+    try:
+        return int(s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--jobs wants an integer or 'auto', got {s!r}") from None
 
 
 def parse_value(s: str) -> Any:
@@ -217,12 +233,19 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the experiment axis over this many devices "
                          "(default: all visible; 1 disables sharding)")
-    ap.add_argument("--jobs", type=int, default=1,
+    ap.add_argument("--jobs", type=_parse_jobs, default=1,
+                    metavar="N|auto",
                     help="concurrent cohort dispatch threads (async "
-                         "runtime; 1 = serial legacy path)")
+                         "runtime; 1 = serial legacy path; 'auto' sizes "
+                         "the pool from CostBook measured walls)")
     ap.add_argument("--dispatch-ahead", type=int, default=None,
                     help="extra cohorts allowed in flight beyond --jobs "
                          "(default 2)")
+    ap.add_argument("--submit", default=None, metavar="HOST:PORT",
+                    help="client mode: post the grid to a running sweep "
+                         "service daemon (python -m repro.serve) and "
+                         "poll to completion instead of executing "
+                         "locally")
     ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
                     help="jax.distributed coordinator address "
                          "(multi-host execution)")
@@ -277,6 +300,19 @@ def main(argv=None) -> int:
     multihost = args.num_hosts > 1 or args.coordinator is not None
     host_id = args.host_id if args.host_id is not None else \
         int(os.environ.get("REPRO_HOST_ID", "0"))
+    if args.submit:
+        for flag, on in (("--store", args.store is not None),
+                         ("--coordinator", args.coordinator is not None),
+                         ("--num-hosts", args.num_hosts > 1),
+                         ("--resume", args.resume),
+                         ("--checkpoint-every",
+                          args.checkpoint_every is not None),
+                         ("--quarantine", args.quarantine),
+                         ("--fault", bool(args.fault))):
+            if on:
+                ap.error(f"{flag} is incompatible with --submit: the "
+                         f"daemon owns the store and its execution "
+                         f"policy")
     if multihost and not args.store and not args.dry_run:
         ap.error("--num-hosts/--coordinator need --store on a shared "
                  "filesystem (every host writes it directly)")
@@ -295,6 +331,14 @@ def main(argv=None) -> int:
         except ValueError as e:
             ap.error(str(e))
 
+    jobs = args.jobs
+    if jobs == "auto":
+        from repro.serve import admission as admission_lib
+        jobs = admission_lib.auto_jobs(
+            store_lib.CostBook(args.store) if args.store else None)
+        if not args.quiet:
+            print(f"# jobs: auto -> {jobs}", file=sys.stderr)
+
     cell_list = cells(spec)
     plan = cohorts(cell_list)
     if not args.quiet:
@@ -303,20 +347,30 @@ def main(argv=None) -> int:
     if args.dry_run:
         for line in format_plan(cell_list, plan):
             print(line, file=sys.stderr)
-        if args.jobs > 1 or multihost:
-            for line in format_schedule(plan, args.jobs,
+        if jobs > 1 or multihost:
+            for line in format_schedule(plan, jobs,
                                         args.dispatch_ahead,
                                         args.num_hosts):
                 print(line, file=sys.stderr)
         return 0
 
-    if multihost:
+    service_snap = None
+    if args.submit:
+        from repro.serve import client as client_lib
+        try:
+            results, service_snap = client_lib.submit_and_wait(
+                args.submit, spec, verbose=not args.quiet)
+        except client_lib.ServiceError as e:
+            print(f"# service error: {e}", file=sys.stderr)
+            return 2
+        store = None
+    elif multihost:
         from repro.runtime import multihost as mh
         results = mh.run_spec_multihost(
             spec, store_root=args.store,
             hs=mh.HostSpec(num_hosts=args.num_hosts, host_id=host_id,
                            coordinator=args.coordinator),
-            jobs=args.jobs, dispatch_ahead=args.dispatch_ahead,
+            jobs=jobs, dispatch_ahead=args.dispatch_ahead,
             devices=args.devices, verbose=not args.quiet,
             lease_timeout=args.lease_timeout,
             checkpoint_every=args.checkpoint_every,
@@ -331,9 +385,13 @@ def main(argv=None) -> int:
         store = store_lib.SweepStore(args.store)   # shared root store
     else:
         store = store_lib.SweepStore(args.store) if args.store else None
+        if store is not None and not args.resume:
+            # startup hygiene: tmp debris older than one lease cannot
+            # belong to a live writer (--resume sweeps it all itself)
+            store.gc_tmp(args.lease_timeout)
         mesh = shard_lib.sweep_mesh(args.devices)
         results = run_spec(spec, store=store, mesh=mesh,
-                           jobs=args.jobs,
+                           jobs=jobs,
                            dispatch_ahead=args.dispatch_ahead,
                            verbose=not args.quiet, resume=args.resume,
                            checkpoint_every=args.checkpoint_every,
@@ -356,6 +414,21 @@ def main(argv=None) -> int:
     if store is not None and not args.quiet:
         print(f"# store: {store.root} now holds {len(store)} cells",
               file=sys.stderr)
+        health = store.health()
+        if health["note_counts"]:
+            # corrupt entries read as misses / tmp debris swept — part of
+            # the run report, not just scattered stderr warnings
+            counts = " ".join(f"{k}={v}" for k, v
+                              in sorted(health["note_counts"].items()))
+            print(f"# store health: {counts} (affected cells were "
+                  f"recomputed; details above)", file=sys.stderr)
+    if quarantined and args.submit:
+        print(f"# FAILED: {quarantined} cell(s) quarantined/failed by "
+              f"the service:", file=sys.stderr)
+        for h, msg in sorted((service_snap or {}).get("errors",
+                                                      {}).items()):
+            print(f"#   {h}: {msg}", file=sys.stderr)
+        return 3
     if quarantined:
         from repro.runtime import resilience
         recs = resilience.failed_records(store.root)

@@ -46,7 +46,8 @@ import os
 import shutil
 import sys
 import time
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -719,7 +720,8 @@ def runtime_gc(store_root: str) -> None:
 def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
              mesh=None, eval_data=None, verbose: bool = False,
              timings: Optional[Dict[str, float]] = None,
-             jobs: int = 1, dispatch_ahead: Optional[int] = None,
+             jobs: Union[int, str] = 1,
+             dispatch_ahead: Optional[int] = None,
              resume: bool = False, checkpoint_every: Optional[int] = None,
              max_retries: int = 0, retry_backoff: float = 0.5,
              quarantine: bool = False
@@ -736,6 +738,8 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
     (``repro.runtime.scheduler``): cohorts dispatch concurrently ordered
     by cost estimate, with up to ``jobs + dispatch_ahead`` cohorts in
     flight and store writes drained by a background writer thread.
+    ``jobs="auto"`` sizes the pool from the store's CostBook measured
+    walls and the host's CPU count (``repro.serve.admission.auto_jobs``).
     Results are INVARIANT to scheduling — the async path runs the exact
     same prepared computations per cohort, so every cell's result (and
     store artifact) is identical to the serial ``jobs=1`` run.
@@ -756,6 +760,14 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
       instead of aborting the sweep.  Defaults keep the historical
       fail-fast behavior.
     """
+    if jobs == "auto":
+        # sized from measured walls, not from the grid: the book reflects
+        # what this store's cohorts actually cost on this class of host
+        from repro.serve import admission as admission_lib
+        jobs = admission_lib.auto_jobs(
+            store_lib.CostBook(store.root) if store is not None else None)
+        if verbose:
+            print(f"# sweep: auto-tuned jobs={jobs}", file=sys.stderr)
     if store is not None and eval_data is not None:
         # an eval_data override changes every metric without changing any
         # cell, so cached entries would be poisoned for ordinary runs

@@ -22,6 +22,7 @@ import json
 import os
 import sys
 import tempfile
+import threading
 import time
 from typing import Any, Dict, Iterable, List, Optional
 
@@ -102,11 +103,35 @@ def payload_checksum(doc: Dict[str, Any]) -> str:
 
 
 class SweepStore:
-    """Directory of ``<hash>.json`` files: {"cell", "metrics", "history"}."""
+    """Directory of ``<hash>.json`` files: {"cell", "metrics", "history"}.
+
+    Health incidents (corrupt entries read as misses, tmp-file gc) are
+    printed to stderr AND captured per instance — ``note_counts`` /
+    ``notes`` — so run reports and the service ``/stats`` endpoint can
+    surface them instead of losing them in a daemon's log.
+    """
+
+    _MAX_NOTES = 50
 
     def __init__(self, root: str):
         self.root = root
+        self.note_counts: Dict[str, int] = {}
+        self.notes: List[str] = []
+        self._notes_lock = threading.Lock()
         os.makedirs(root, exist_ok=True)
+
+    def _note(self, kind: str, msg: str, n: int = 1) -> None:
+        with self._notes_lock:
+            self.note_counts[kind] = self.note_counts.get(kind, 0) + n
+            if len(self.notes) < self._MAX_NOTES:
+                self.notes.append(msg)
+        _warn(msg)
+
+    def health(self) -> Dict[str, Any]:
+        """Incident counters + recent messages for reports and /stats."""
+        with self._notes_lock:
+            return {"note_counts": dict(self.note_counts),
+                    "notes": list(self.notes)}
 
     def path(self, cell: Dict[str, Any], extra=None) -> str:
         return os.path.join(self.root, f"{cell_hash(cell, extra)}.json")
@@ -131,6 +156,15 @@ class SweepStore:
             return None
         return doc["result"]
 
+    def get_by_hash(self, h: str) -> Optional[Dict[str, Any]]:
+        """Serve one entry by its content hash (the service ``/cell/<h>``
+        endpoint).  The hash is validated as hex so a request path can
+        never escape the store directory."""
+        if not h or not all(c in "0123456789abcdef" for c in h):
+            return None
+        doc = self._load(os.path.join(self.root, f"{h}.json"))
+        return None if doc is None else doc["result"]
+
     def _load(self, p: str) -> Optional[Dict[str, Any]]:
         """Read + validate one store file; None when absent or corrupt."""
         try:
@@ -139,17 +173,20 @@ class SweepStore:
         except FileNotFoundError:
             return None
         except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
-            _warn(f"corrupt entry {os.path.basename(p)} "
-                  f"({type(e).__name__}: {e}); treating as a miss")
+            self._note("corrupt_entry",
+                       f"corrupt entry {os.path.basename(p)} "
+                       f"({type(e).__name__}: {e}); treating as a miss")
             return None
         if not isinstance(doc, dict) or "result" not in doc:
-            _warn(f"malformed entry {os.path.basename(p)}; "
-                  f"treating as a miss")
+            self._note("malformed_entry",
+                       f"malformed entry {os.path.basename(p)}; "
+                       f"treating as a miss")
             return None
         want = doc.get("checksum")
         if want is not None and want != payload_checksum(doc):
-            _warn(f"checksum mismatch in {os.path.basename(p)} "
-                  f"(partial write?); treating as a miss")
+            self._note("checksum_mismatch",
+                       f"checksum mismatch in {os.path.basename(p)} "
+                       f"(partial write?); treating as a miss")
             return None
         return doc
 
@@ -209,7 +246,9 @@ class SweepStore:
             except OSError:
                 pass        # another gc raced us; nothing to do
         if n:
-            _warn(f"removed {n} orphaned tmp file(s) under {self.root}")
+            self._note("tmp_gc",
+                       f"removed {n} orphaned tmp file(s) under "
+                       f"{self.root}", n)
         return n
 
     def merge(self, other: "SweepStore") -> int:
