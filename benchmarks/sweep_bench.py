@@ -234,6 +234,69 @@ def async_rows(rounds: int = 400, jobs: int = 2, reps: int = 3):
     return rows
 
 
+def trace_overhead_rows(rounds: int = 400, reps: int = 3):
+    """Lifecycle tracing on vs off over the fig4_5_6 grids (ISSUE-8).
+
+    Tracing must be close to free (<3% target) AND a pure observer.
+    Methodology: one untimed warm-up run pays every compile, then
+    ``reps`` alternating untraced/traced runs against fresh stores with
+    a warm jit cache — the steady-state walls are what tracing can
+    actually tax.  Also counts traced-vs-untraced byte-identical cells
+    (result files only; the trace itself lives under ``meta/``).
+    """
+    import os
+
+    from repro.obs import trace as trace_lib
+
+    specs = list(_fig_specs(rounds).values())
+    n = sum(len(cells(s)) for s in specs)
+
+    def one_run(traced: bool) -> tuple[float, str]:
+        root = tempfile.mkdtemp()
+        if traced:
+            trace_lib.install(trace_lib.trace_dir_for(root))
+        try:
+            t0 = time.time()
+            for spec in specs:
+                run_spec(spec, store=SweepStore(root), verbose=False)
+            return time.time() - t0, root
+        finally:
+            trace_lib.uninstall()
+
+    one_run(False)                       # warm-up: compiles paid here
+    t_off, t_on = [], []
+    root_off = root_on = None
+    for _ in range(reps):
+        w, root_off = one_run(False)
+        t_off.append(w)
+        w, root_on = one_run(True)
+        t_on.append(w)
+
+    def cell_bytes(root):
+        return {f: open(os.path.join(root, f), "rb").read()
+                for f in sorted(os.listdir(root)) if f.endswith(".json")}
+
+    off_files, on_files = cell_bytes(root_off), cell_bytes(root_on)
+    # the fig grids overlap at the all-defaults cell, so unique store
+    # files < cells; compare files (the byte-identity unit), not cells
+    exact = sum(int(off_files[f] == on_files.get(f)) for f in off_files)
+    toff, ton = statistics.median(t_off), statistics.median(t_on)
+    pct = 100.0 * (ton - toff) / toff
+    return [
+        {"name": "trace_overhead_fig4_5_6_off",
+         "metric": "cells/median_wall_s",
+         "value": [n, round(toff, 2)]},
+        {"name": "trace_overhead_fig4_5_6_on",
+         "metric": "cells/median_wall_s",
+         "value": [n, round(ton, 2)]},
+        {"name": "trace_overhead_fig4_5_6_pct", "metric": "percent",
+         "value": round(pct, 2)},
+        {"name": "trace_overhead_bitexact",
+         "metric": f"files=={len(off_files)}",
+         "value": exact},
+    ]
+
+
 def run(rounds: int = 60, json_path: str | None = None,
         merge_rounds: int = 40, async_rounds: int | None = None,
         async_reps: int = 3):
@@ -270,6 +333,9 @@ def run(rounds: int = 60, json_path: str | None = None,
     ]
     rows += cohort_merge_rows(rounds=merge_rounds)
     rows += arows
+    rows += trace_overhead_rows(rounds=merge_rounds * 10
+                                if async_rounds is None else async_rounds,
+                                reps=async_reps)
     if json_path:
         doc = {"host": platform.node(), "backend": "cpu",
                "grid": {"seeds": SEEDS, "policies": list(POLICIES),

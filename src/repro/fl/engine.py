@@ -134,6 +134,8 @@ class RoundStats(NamedTuple):
     b_mean: jax.Array    # mean over entries of b
     a_t: jax.Array       # realized Theorem-1 contraction A_t (eq. 14)
     b_t: jax.Array       # realized Theorem-1 additive gap B_t (eq. 15)
+    eta: jax.Array       # mean gradient-proxy magnitude (footnote 4)
+    snr: jax.Array       # effective post-aggregation SNR (0 = noiseless)
 
 
 def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
@@ -144,12 +146,17 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
 
     Returns ``stage(W, w_prev, w_prev2, delta_prev, chan_carry, kchan,
     kpol, t) -> (new_flat, delta, chan_carry, selected, b_mean, a_t,
-    b_t)`` — the post-local-update part of a round, shared by all
-    policies and both backends (and benchmarked head-to-head in
-    ``benchmarks/kernels_micro.py``).  ``a_t`` / ``b_t`` are the REALIZED
-    Lemma-1 terms of this round (from the beta-free reductions), so
-    callers can accumulate the paper's convergence bound along any
-    trajectory without re-deriving beta.
+    b_t, eta_mean, snr)`` — the post-local-update part of a round,
+    shared by all policies and both backends (and benchmarked
+    head-to-head in ``benchmarks/kernels_micro.py``).  ``a_t`` / ``b_t``
+    are the REALIZED Lemma-1 terms of this round (from the beta-free
+    reductions), so callers can accumulate the paper's convergence bound
+    along any trajectory without re-deriving beta.  ``eta_mean`` is the
+    mean of the footnote-4 gradient proxy driving the power search, and
+    ``snr`` the effective post-aggregation SNR — mean signal power over
+    the per-entry descaled noise power ``sigma2 / (den_ki * b)^2`` —
+    both per-round telemetry for the observability layer (the error-free
+    oracle reports 0 for each).
 
     The function resolves the policy and channel model ONCE at build time
     (callers that also need the model, e.g. for carry init, may pass a
@@ -194,7 +201,8 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
             # A_t = 1 - mu/L (no selection penalty), B_t = 0 (no noise)
             return (agg.fedavg(W, k_i), delta_prev, chan_carry,
                     n_real, jnp.float32(0.0),
-                    jnp.float32(1.0 - c.mu / c.L), jnp.float32(0.0))
+                    jnp.float32(1.0 - c.mu / c.L), jnp.float32(0.0),
+                    jnp.float32(0.0), jnp.float32(0.0))
         return exact_stage
 
     fused = None
@@ -239,8 +247,15 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
         a_t = conv.A_t_from_den(den_ki, k_i, c)
         b_t = conv.B_t_from_den(den_ki, b, k_i, c)
         delta = b_t + a_t * delta_prev
+        # effective post-aggregation SNR: per-entry descaled noise has
+        # variance sigma2 / (den_ki * b)^2 (the B_t noise norm), so the
+        # realized signal-to-noise at the PS is mean signal power over
+        # mean noise power — 0-guarded for all-silent rounds
+        noise_pow = c.sigma2 * jnp.mean(
+            1.0 / jnp.maximum(den_ki * b, _EPS) ** 2)
+        snr = jnp.mean(new_flat ** 2) / jnp.maximum(noise_pow, _EPS)
         return (new_flat, delta, chan_carry, jnp.mean(sel), jnp.mean(b),
-                a_t, b_t)
+                a_t, b_t, jnp.mean(eta), snr)
 
     return stage
 
@@ -306,14 +321,16 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0,
     def step(state: RoundState, _=None):
         key_next, klocal, kchan, kpol = jax.random.split(state.key, 4)
         W = local_stage(state.flat, klocal)
-        new_flat, delta, chan_carry, sel, b_mean, a_t, b_t = ota_stage(
+        (new_flat, delta, chan_carry, sel, b_mean, a_t, b_t, eta_mean,
+         snr) = ota_stage(
             W, state.flat, state.w_prev2, state.delta, state.chan,
             kchan, kpol, state.t)
         new_state = RoundState(flat=new_flat, w_prev2=state.flat,
                                delta=delta, t=state.t + 1, key=key_next,
                                chan=chan_carry)
         return new_state, RoundStats(selected=sel, b_mean=b_mean,
-                                     a_t=a_t, b_t=b_t)
+                                     a_t=a_t, b_t=b_t, eta=eta_mean,
+                                     snr=snr)
 
     def init(flat: jax.Array, key: jax.Array) -> RoundState:
         # The model's init key is DERIVED (not split off) so memoryless

@@ -110,7 +110,8 @@ def scan_experiment(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
     state, (stats, flats) = jax.lax.scan(body, state, None,
                                          length=cfg.rounds)
     out = {"flat": state.flat, "selected": stats.selected,
-           "b": stats.b_mean, "a_t": stats.a_t, "b_t": stats.b_t}
+           "b": stats.b_mean, "a_t": stats.a_t, "b_t": stats.b_t,
+           "eta": stats.eta, "snr": stats.snr}
     if collect:
         ex, ey = (jnp.asarray(eval_xy[0]), jnp.asarray(eval_xy[1]))
         idx = jnp.arange(0, cfg.rounds, cfg.eval_every)
@@ -166,7 +167,8 @@ def scan_experiment_block(task: TaskModel, X, Y, mask, k_i, cfg: FLConfig,
 
     state, (stats, flats) = jax.lax.scan(body, state, None, length=length)
     out = {"selected": stats.selected, "b": stats.b_mean,
-           "a_t": stats.a_t, "b_t": stats.b_t}
+           "a_t": stats.a_t, "b_t": stats.b_t,
+           "eta": stats.eta, "snr": stats.snr}
     if collect:
         ex, ey = (jnp.asarray(eval_xy[0]), jnp.asarray(eval_xy[1]))
         idx = jnp.asarray(np.asarray(eval_offsets, np.int32))
@@ -247,6 +249,8 @@ class FLTrainer:
             history["b"].append(float(stats.b_mean))
             history.setdefault("a_t", []).append(float(stats.a_t))
             history.setdefault("b_t", []).append(float(stats.b_t))
+            history.setdefault("eta", []).append(float(stats.eta))
+            history.setdefault("snr", []).append(float(stats.snr))
             if eval_data is not None and t % cfg.eval_every == 0:
                 m = jit_metrics(engine.unravel(state.flat), ex, ey)
                 for k, v in m.items():

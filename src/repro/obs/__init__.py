@@ -1,0 +1,27 @@
+"""Unified observability layer: lifecycle tracing, metrics, logs.
+
+Zero-dependency (stdlib + what the repo already ships) telemetry shared
+by every tier of the sweep stack:
+
+  * :mod:`repro.obs.trace`   — thread-safe span/event recorder for the
+    full cohort path (submit -> schedule -> claim -> prepare -> dispatch
+    -> resolve -> store put), persisted as JSONL under
+    ``<store>/meta/trace/`` and exportable as Chrome trace-event JSON
+    (loadable in Perfetto / ``chrome://tracing``);
+  * :mod:`repro.obs.metrics` — typed counters / gauges / histograms in a
+    :class:`~repro.obs.metrics.Registry` that renders Prometheus
+    exposition text — the daemon's ``/metrics`` and a one-shot run's
+    ``--metrics-out`` dump are the SAME snapshot from the same registry;
+  * :mod:`repro.obs.logs`    — structured logging: one JSON object per
+    line under ``--log-json``, byte-identical plain text by default;
+  * :mod:`repro.obs.report`  — ``python -m repro.obs report <store>``:
+    per-cell realized A_t/B_t vs the Lemma-1 bound, CostBook
+    predicted-vs-measured accuracy, and the trace timeline.
+
+The cardinal invariant: observability NEVER changes result bytes.  All
+telemetry lands under ``<store>/meta/`` (excluded from every
+byte-identity diff in CI), and a traced sweep store is ``diff -r``
+identical (excl. ``meta/``) to an untraced one.
+"""
+
+from repro.obs import logs, metrics, trace  # noqa: F401  (public surface)

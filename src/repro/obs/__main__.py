@@ -1,0 +1,71 @@
+"""CLI: ``python -m repro.obs <command> <store>``.
+
+Commands:
+
+  report <store>            per-cell OTA telemetry, CostBook accuracy,
+                            trace summary (see :mod:`repro.obs.report`)
+  export <store> [-o PATH]  fold ``meta/trace/*.jsonl`` into one Chrome
+                            trace-event JSON file for Perfetto /
+                            ``chrome://tracing``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import report as report_lib
+from repro.obs import trace as trace_lib
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs",
+                                description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("report", help="render the store's run report")
+    rp.add_argument("store", help="sweep store directory")
+    rp.add_argument("--gap0", type=float, default=1.0,
+                    help="E[F(w_0)-F(w*)] seed for the Lemma-1 bound")
+    rp.add_argument("--tail", type=int, default=10,
+                    help="tail window (matches the sweep's summary tail)")
+
+    ep = sub.add_parser("export", help="export Chrome trace-event JSON")
+    ep.add_argument("store", help="sweep store directory (or a trace "
+                                  "directory itself)")
+    ep.add_argument("-o", "--out", default=None,
+                    help="output path (default: stdout)")
+
+    args = p.parse_args(argv)
+
+    if args.cmd == "report":
+        sys.stdout.write(report_lib.render(args.store, gap0=args.gap0,
+                                           tail=args.tail))
+        return 0
+
+    if args.cmd == "export":
+        trace_dir = args.store
+        candidate = trace_lib.trace_dir_for(args.store)
+        import os
+        if os.path.isdir(candidate):
+            trace_dir = candidate
+        doc = trace_lib.export_chrome(trace_dir)
+        if not doc["traceEvents"]:
+            print(f"# obs: no trace events under {trace_dir}",
+                  file=sys.stderr)
+        text = json.dumps(doc)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+            print(f"# obs: wrote {len(doc['traceEvents'])} events "
+                  f"to {args.out}")
+        else:
+            sys.stdout.write(text + "\n")
+        return 0
+
+    return 2  # pragma: no cover
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Structured logging: plain text by default, JSON lines on demand.
+
+The serve tier's operator-facing output has always been plain
+``# component: message`` lines on stdout.  :func:`emit` preserves that
+format byte-for-byte in the default mode; under ``--log-json``
+(:func:`configure` with ``json_mode=True``) the same call sites emit one
+JSON object per line instead::
+
+    {"ts": "2026-08-08T12:34:56.789Z", "level": "info",
+     "component": "serve", "event": "listening", "host": "...", ...}
+
+``event`` is the machine-stable identifier; ``message`` (when present)
+is the human rendering.  Extra keyword fields pass through verbatim.
+Some events are JSON-only (``plain=None``): HTTP access records that
+would be noise in the terminal but are exactly what a log pipeline
+wants.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+from typing import Any, IO, Optional
+
+_lock = threading.Lock()
+_json_mode = False
+_stream: Optional[IO[str]] = None
+
+
+def configure(json_mode: bool = False,
+              stream: Optional[IO[str]] = None) -> None:
+    """Select the output mode for this process (the daemon's
+    ``--log-json`` flag calls this once at startup)."""
+    global _json_mode, _stream
+    with _lock:
+        _json_mode = bool(json_mode)
+        _stream = stream
+
+
+def json_mode() -> bool:
+    return _json_mode
+
+
+def _ts() -> str:
+    t = time.time()
+    base = time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime(t))
+    return f"{base}.{int((t % 1) * 1000):03d}Z"
+
+
+def emit(component: str, event: str, plain: Optional[str] = "",
+         level: str = "info", stream: Optional[IO[str]] = None,
+         **fields: Any) -> None:
+    """Log one record.
+
+    ``plain`` is the exact text after ``# {component}: `` in plain mode
+    (empty string → the event name is used; ``None`` → JSON-only, the
+    plain mode prints nothing).  JSON mode always emits the full record.
+    ``stream`` overrides the destination in plain mode only — existing
+    call sites split stdout/stderr and that split is pinned; JSON mode
+    keeps everything on the single configured pipeline.
+    """
+    if _json_mode:
+        out = _stream if _stream is not None else sys.stdout
+        rec = {"ts": _ts(), "level": level, "component": component,
+               "event": event}
+        if plain:
+            rec["message"] = plain
+        rec.update(fields)
+        line = json.dumps(rec, separators=(",", ":"), default=str)
+        with _lock:
+            print(line, file=out, flush=True)
+        return
+    if plain is None:
+        return
+    out = stream if stream is not None else (
+        _stream if _stream is not None else sys.stdout)
+    text = plain if plain else event
+    with _lock:
+        print(f"# {component}: {text}", file=out, flush=True)
+
+
+def raw(text: str, stream: Optional[IO[str]] = None) -> None:
+    """Print a line verbatim in plain mode; in JSON mode wrap it as a
+    ``raw`` event so the stream stays one-object-per-line.  Used for
+    output whose exact plain format is pinned by callers/CI (e.g. the
+    daemon's ``listening on host:port`` line)."""
+    if _json_mode:
+        out = _stream if _stream is not None else sys.stdout
+        rec = {"ts": _ts(), "level": "info", "component": "serve",
+               "event": "raw", "message": text}
+        with _lock:
+            print(json.dumps(rec, separators=(",", ":")), file=out,
+                  flush=True)
+        return
+    out = stream if stream is not None else (
+        _stream if _stream is not None else sys.stdout)
+    with _lock:
+        print(text, file=out, flush=True)

@@ -1,0 +1,283 @@
+"""Run report: per-cell OTA telemetry, CostBook accuracy, trace timeline.
+
+``python -m repro.obs report <store>`` reads ONLY what a sweep already
+persisted — ``<hash>.json`` cell entries, ``meta/costs.json``, and
+``meta/trace/*.jsonl`` — and renders three sections:
+
+1. **Per-cell OTA table** — realized per-round contraction A_t and noise
+   gap B_t (Theorem 1 terms the engine reports every round) against the
+   error-free floor ``1 - mu/L``, the Lemma-1 cumulative gap bound from
+   the realized (A_t, B_t) sequence, mean selected workers, and the
+   effective post-aggregation SNR tail.
+2. **CostBook accuracy** — measured per-cohort walls vs the prediction
+   the scheduler used at dispatch time (when recorded), flagging >2x
+   mispredictions that erode ``--jobs auto`` trust.
+3. **Trace summary** — span counts/durations per name plus retry /
+   steal / quarantine / mispredict event tallies, when the store was
+   traced.
+
+Everything degrades gracefully: missing history keys, an untraced
+store, or a costs book without predictions simply shrink the report.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+MISPREDICT_RATIO = 2.0   # |log-ratio| beyond this = mispredicted
+
+
+# --------------------------------------------------------------- loading
+
+def load_cells(store_root: str) -> List[Dict[str, Any]]:
+    """Every valid cell entry in a store: [{hash, cell, metrics,
+    history}].  Corrupt files are skipped (the store itself treats them
+    as misses)."""
+    out = []
+    if not os.path.isdir(store_root):
+        return out
+    for fn in sorted(os.listdir(store_root)):
+        if not fn.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(store_root, fn)) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue
+        if not isinstance(doc, dict) or "result" not in doc:
+            continue
+        res = doc["result"]
+        out.append({"hash": fn[:-len(".json")],
+                    "cell": doc.get("cell", res.get("cell", {})),
+                    "metrics": res.get("metrics", {}),
+                    "history": res.get("history", {})})
+    return out
+
+
+def varying_keys(cells: Sequence[Dict[str, Any]]) -> List[str]:
+    """Cell fields that differ across the store — the axes worth showing
+    in a per-cell label."""
+    seen: Dict[str, set] = {}
+    for c in cells:
+        for k, v in c.get("cell", {}).items():
+            seen.setdefault(k, set()).add(json.dumps(v, sort_keys=True,
+                                                     default=str))
+    return sorted(k for k, vs in seen.items() if len(vs) > 1)
+
+
+def cell_label(entry: Dict[str, Any], keys: Sequence[str]) -> str:
+    cell = entry.get("cell", {})
+    parts = [f"{k}={cell[k]}" for k in keys if k in cell]
+    return " ".join(parts) if parts else entry["hash"][:10]
+
+
+# ------------------------------------------------------------- OTA table
+
+def _mean(xs) -> Optional[float]:
+    xs = [float(x) for x in xs] if xs else []
+    return sum(xs) / len(xs) if xs else None
+
+
+def ota_rows(cells: Sequence[Dict[str, Any]], *, gap0: float = 1.0,
+             tail: int = 10) -> List[Dict[str, Any]]:
+    """Per-cell realized-telemetry rows (plain dicts — the CLI renders
+    them, tests assert on them)."""
+    from repro.core.convergence import LearningConstants, gap_recursion
+
+    keys = varying_keys(cells)
+    rows = []
+    for e in cells:
+        cell, hist, met = e["cell"], e["history"], e["metrics"]
+        a_seq = hist.get("a_t") or []
+        b_seq = hist.get("b_t") or []
+        ckw: Dict[str, Any] = {}
+        if cell.get("sigma2") is not None:
+            ckw["sigma2"] = float(cell["sigma2"])
+        if cell.get("L") is not None:
+            ckw["L"] = float(cell["L"])
+        c = LearningConstants(**ckw)
+        floor = 1.0 - c.mu / c.L
+        row: Dict[str, Any] = {
+            "hash": e["hash"],
+            "label": cell_label(e, keys),
+            "rounds": len(a_seq),
+            "a_mean": _mean(a_seq),
+            "a_floor": floor,
+            "b_mean": _mean(b_seq),
+            "selected_mean": met.get("selected_mean"),
+            "eta_tail": met.get("eta_tail"),
+            "snr_tail": met.get("snr_tail"),
+        }
+        row["a_excess"] = (row["a_mean"] - floor
+                           if row["a_mean"] is not None else None)
+        if a_seq and b_seq:
+            traj = gap_recursion(a_seq, b_seq, gap0)
+            row["gap_bound"] = float(traj[-1])
+            row["contracting"] = bool(max(float(a) for a in a_seq) < 1.0)
+        else:
+            row["gap_bound"] = None
+            row["contracting"] = None
+        rows.append(row)
+    return rows
+
+
+# --------------------------------------------------------------- costbook
+
+def costbook_rows(store_root: str) -> List[Dict[str, Any]]:
+    """Measured-vs-predicted rows from ``meta/costs.json``.  Prediction
+    is recorded per measurement (PR 8+); older books render measured
+    walls only."""
+    path = os.path.join(store_root, "meta", "costs.json")
+    try:
+        with open(path) as f:
+            book = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError, OSError):
+        return []
+    rows = []
+    for key, rec in sorted(book.items()):
+        if not isinstance(rec, dict) or not rec.get("cells"):
+            continue
+        cells = int(rec["cells"])
+        wall = float(rec.get("wall_s", 0.0))
+        pred = rec.get("predicted_s")
+        row: Dict[str, Any] = {"key": key, "cells": cells,
+                               "wall_s": wall,
+                               "per_cell_s": wall / cells,
+                               "predicted_s": pred}
+        if pred is not None and float(pred) > 0 and wall > 0:
+            ratio = wall / float(pred)
+            row["ratio"] = ratio
+            row["mispredicted"] = (ratio > MISPREDICT_RATIO
+                                   or ratio < 1.0 / MISPREDICT_RATIO)
+        else:
+            row["ratio"] = None
+            row["mispredicted"] = None
+        rows.append(row)
+    return rows
+
+
+# ----------------------------------------------------------------- trace
+
+def trace_summary(store_root: str) -> Dict[str, Any]:
+    """Aggregate the trace directory (if any): per-span-name counts and
+    wall totals, instant-event tallies, and the covered wall window."""
+    from repro.obs import trace as trace_lib
+
+    events = trace_lib.load_events(trace_lib.trace_dir_for(store_root))
+    spans: Dict[str, Dict[str, float]] = {}
+    instants: Dict[str, int] = {}
+    t_min, t_max = None, None
+    for ev in events:
+        ts = ev.get("ts")
+        if isinstance(ts, (int, float)):
+            end = ts + ev.get("dur", 0)
+            t_min = ts if t_min is None else min(t_min, ts)
+            t_max = end if t_max is None else max(t_max, end)
+        name = ev.get("name", "?")
+        if ev.get("ph") == "X":
+            s = spans.setdefault(name, {"count": 0, "total_s": 0.0,
+                                        "max_s": 0.0})
+            dur_s = float(ev.get("dur", 0)) / 1e6
+            s["count"] += 1
+            s["total_s"] += dur_s
+            s["max_s"] = max(s["max_s"], dur_s)
+        elif ev.get("ph") == "i":
+            instants[name] = instants.get(name, 0) + 1
+    return {"events": len(events), "spans": spans, "instants": instants,
+            "wall_s": ((t_max - t_min) / 1e6
+                       if t_min is not None else None)}
+
+
+# ------------------------------------------------------------- rendering
+
+def _f(v: Optional[float], nd: int = 4) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    a = abs(v)
+    if v != 0 and (a >= 10 ** 6 or a < 10 ** -nd):
+        return f"{v:.{nd}g}"
+    return f"{v:.{nd}f}".rstrip("0").rstrip(".")
+
+
+def _table(headers: Sequence[str], rows: Sequence[Sequence[str]]
+           ) -> List[str]:
+    widths = [len(h) for h in headers]
+    for r in rows:
+        for i, cell in enumerate(r):
+            widths[i] = max(widths[i], len(cell))
+    def line(cells):
+        return "  ".join(c.ljust(w) for c, w in zip(cells, widths)).rstrip()
+    out = [line(headers), line(["-" * w for w in widths])]
+    out.extend(line(r) for r in rows)
+    return out
+
+
+def render(store_root: str, *, gap0: float = 1.0,
+           tail: int = 10) -> str:
+    """The full textual report (what ``python -m repro.obs report``
+    prints)."""
+    lines: List[str] = [f"# obs report: {store_root}"]
+
+    cells = load_cells(store_root)
+    lines.append("")
+    lines.append(f"## per-cell OTA telemetry ({len(cells)} cells)")
+    if cells:
+        rows = ota_rows(cells, gap0=gap0, tail=tail)
+        body = [[r["label"], str(r["rounds"]), _f(r["a_mean"]),
+                 _f(r["a_floor"], 2), _f(r["a_excess"]),
+                 _f(r["b_mean"], 3), _f(r["gap_bound"], 3),
+                 _f(r["selected_mean"], 2), _f(r["snr_tail"], 1)]
+                for r in rows]
+        lines.extend(_table(
+            ["cell", "T", "A_t mean", "floor", "excess", "B_t mean",
+             "lemma1 gap", "sel", "snr"], body))
+        bad = [r for r in rows if r["contracting"] is False]
+        if bad:
+            lines.append(f"! {len(bad)} cell(s) with max A_t >= 1 "
+                         f"(no contraction guarantee)")
+    else:
+        lines.append("(no cell entries)")
+
+    cb = costbook_rows(store_root)
+    lines.append("")
+    lines.append(f"## costbook accuracy ({len(cb)} keys)")
+    if cb:
+        body = [[r["key"][:24], str(r["cells"]), _f(r["wall_s"], 3),
+                 _f(r["predicted_s"], 3), _f(r["ratio"], 2),
+                 _f(r["mispredicted"])]
+                for r in cb]
+        lines.extend(_table(
+            ["static key", "cells", "wall_s", "predicted_s",
+             "meas/pred", "mispredict"], body))
+        n_bad = sum(1 for r in cb if r["mispredicted"])
+        if n_bad:
+            lines.append(f"! costbook: {n_bad} key(s) deviated >"
+                         f"{MISPREDICT_RATIO:g}x from the schedule-time "
+                         f"prediction")
+    else:
+        lines.append("(no measured costs)")
+
+    ts = trace_summary(store_root)
+    lines.append("")
+    lines.append(f"## trace ({ts['events']} events)")
+    if ts["events"]:
+        if ts["wall_s"] is not None:
+            lines.append(f"covered wall: {_f(ts['wall_s'], 3)}s")
+        body = [[name, str(int(s["count"])), _f(s["total_s"], 3),
+                 _f(s["total_s"] / s["count"], 4), _f(s["max_s"], 3)]
+                for name, s in sorted(ts["spans"].items())]
+        if body:
+            lines.extend(_table(
+                ["span", "count", "total_s", "mean_s", "max_s"], body))
+        if ts["instants"]:
+            ev = ", ".join(f"{k}={v}" for k, v in
+                           sorted(ts["instants"].items()))
+            lines.append(f"events: {ev}")
+    else:
+        lines.append("(store not traced — run with --trace)")
+
+    return "\n".join(lines) + "\n"

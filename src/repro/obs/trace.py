@@ -1,0 +1,283 @@
+"""Lifecycle tracing: thread-safe span/event recorder + Chrome export.
+
+A :class:`TraceRecorder` appends one JSON object per line to a file
+under its trace directory (by convention ``<store>/meta/trace/``), in
+Chrome trace-event shape so export is a pure re-wrap:
+
+    {"name": "cohort.dispatch", "cat": "runtime", "ph": "X",
+     "ts": <epoch microseconds>, "dur": <microseconds>,
+     "pid": <os pid>, "tid": <thread id>, "args": {...}}
+
+``ph`` is ``"X"`` for complete spans and ``"i"`` for instant events.
+:func:`export_chrome` folds every ``*.jsonl`` file in a trace directory
+into one ``{"traceEvents": [...]}`` document loadable in Perfetto or
+``chrome://tracing``.
+
+The module-level API (:func:`span` / :func:`event`) is what the runtime
+is instrumented with: when no recorder is installed both are no-ops
+(one attribute read), so the traced and untraced code paths execute the
+identical computation — tracing can never change result bytes, only add
+files under ``meta/``.
+
+Install via :func:`install` (the CLI's ``--trace`` / the daemon's
+``--trace``) or the ``REPRO_TRACE`` environment variable (a directory
+path), which lets subprocess tests and chaos runs trace without
+plumbing flags.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Optional
+
+ENV_VAR = "REPRO_TRACE"
+TRACE_DIRNAME = os.path.join("meta", "trace")
+
+_lock = threading.Lock()
+_rec: Optional["TraceRecorder"] = None
+
+
+def trace_dir_for(store_root: str) -> str:
+    """The canonical trace directory of a store (under ``meta/`` so
+    byte-identity diffs exclude it)."""
+    return os.path.join(store_root, TRACE_DIRNAME)
+
+
+class TraceRecorder:
+    """Thread-safe append-only recorder of spans and instant events.
+
+    One recorder writes one ``trace-<pid>-<seq>.jsonl`` file; concurrent
+    processes (multi-host sweeps, a daemon next to a CLI run) each write
+    their own file in the shared directory and the exporter merges them.
+    Record calls buffer under a lock and flush every ``flush_every``
+    records (and on :meth:`close`), so the hot path is append + occasional
+    write, never a per-span fsync.
+    """
+
+    def __init__(self, trace_dir: str, *, flush_every: int = 64,
+                 flush_after_s: float = 2.0):
+        os.makedirs(trace_dir, exist_ok=True)
+        self.dir = trace_dir
+        self.pid = os.getpid()
+        self._lock = threading.Lock()
+        self._buf: List[str] = []
+        self._flush_every = max(1, flush_every)
+        # long-lived daemons record sparsely: age out the buffer so a
+        # hard kill (SIGTERM, no finally) loses at most a few seconds
+        self._flush_after_s = flush_after_s
+        self._last_flush = time.time()
+        self._closed = False
+        # unique per (pid, open): a respawned pid never appends to a
+        # previous life's file mid-line
+        seq = 0
+        while True:
+            name = f"trace-{self.pid}-{seq}.jsonl"
+            self.path = os.path.join(trace_dir, name)
+            try:
+                fd = os.open(self.path,
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                os.close(fd)
+                break
+            except FileExistsError:
+                seq += 1
+
+    # ------------------------------------------------------------ recording
+    def _emit(self, rec: Dict[str, Any]) -> None:
+        line = json.dumps(rec, separators=(",", ":"), default=str)
+        with self._lock:
+            if self._closed:
+                return
+            self._buf.append(line)
+            if (len(self._buf) >= self._flush_every
+                    or time.time() - self._last_flush
+                    >= self._flush_after_s):
+                self._flush_locked()
+
+    def event(self, name: str, cat: str = "runtime",
+              **args: Any) -> None:
+        """Record one instant event (Chrome ``ph: "i"``)."""
+        self._emit({"name": name, "cat": cat, "ph": "i", "s": "t",
+                    "ts": int(time.time() * 1e6), "pid": self.pid,
+                    "tid": threading.get_ident(), "args": args})
+
+    @contextlib.contextmanager
+    def span(self, name: str, cat: str = "runtime",
+             **args: Any) -> Iterator[Dict[str, Any]]:
+        """Record a complete span (``ph: "X"``) around a block.
+
+        Yields the mutable ``args`` dict so the block can attach results
+        discovered mid-span (e.g. the number of cells finalized).  The
+        span is recorded even when the block raises, with
+        ``args["error"]`` naming the exception type.
+        """
+        t0 = time.time()
+        try:
+            yield args
+        except BaseException as e:
+            args["error"] = type(e).__name__
+            raise
+        finally:
+            now = time.time()
+            self._emit({"name": name, "cat": cat, "ph": "X",
+                        "ts": int(t0 * 1e6),
+                        "dur": max(0, int((now - t0) * 1e6)),
+                        "pid": self.pid, "tid": threading.get_ident(),
+                        "args": args})
+
+    # ------------------------------------------------------------ lifecycle
+    def _flush_locked(self) -> None:
+        if not self._buf:
+            return
+        with open(self.path, "a") as f:
+            f.write("\n".join(self._buf) + "\n")
+        self._buf = []
+        self._last_flush = time.time()
+
+    def flush(self) -> None:
+        with self._lock:
+            self._flush_locked()
+
+    def close(self) -> None:
+        with self._lock:
+            self._flush_locked()
+            self._closed = True
+
+
+# ------------------------------------------------------- module-level API
+
+def install(trace_dir: str) -> TraceRecorder:
+    """Install a process-global recorder writing under ``trace_dir``.
+    Idempotent per directory: re-installing the same directory keeps the
+    existing recorder (one file per process life)."""
+    global _rec
+    with _lock:
+        if _rec is not None and _rec.dir == trace_dir:
+            return _rec
+        if _rec is not None:
+            _rec.close()
+        _rec = TraceRecorder(trace_dir)
+        return _rec
+
+
+def install_from_env() -> Optional[TraceRecorder]:
+    """Install from ``$REPRO_TRACE`` (a trace directory) when set —
+    how subprocesses (chaos tests, multi-host workers) opt in."""
+    d = os.environ.get(ENV_VAR)
+    return install(d) if d else None
+
+
+def uninstall() -> None:
+    global _rec
+    with _lock:
+        if _rec is not None:
+            _rec.close()
+        _rec = None
+
+
+def installed() -> Optional[TraceRecorder]:
+    return _rec
+
+
+def enabled() -> bool:
+    return _rec is not None
+
+
+def event(name: str, cat: str = "runtime", **args: Any) -> None:
+    """Record an instant event on the installed recorder (no-op when
+    tracing is off)."""
+    rec = _rec
+    if rec is not None:
+        rec.event(name, cat, **args)
+
+
+_NULL_ARGS: Dict[str, Any] = {}
+
+
+@contextlib.contextmanager
+def _null_span() -> Iterator[Dict[str, Any]]:
+    yield _NULL_ARGS
+
+
+def span(name: str, cat: str = "runtime", **args: Any):
+    """Span context manager on the installed recorder; a shared no-op
+    when tracing is off (the untraced path stays allocation-free)."""
+    rec = _rec
+    if rec is None:
+        return _null_span()
+    return rec.span(name, cat, **args)
+
+
+def flush() -> None:
+    rec = _rec
+    if rec is not None:
+        rec.flush()
+
+
+# -------------------------------------------------------------- profiling
+
+@contextlib.contextmanager
+def profile(profile_dir: Optional[str]) -> Iterator[None]:
+    """Opt-in ``jax.profiler`` capture around a block (``--profile DIR``).
+
+    ``None`` is a no-op.  The capture wraps cohort dispatch/execution, so
+    the XLA-level timeline (compile, fusion, device compute) lands next
+    to the lifecycle spans — load the output in TensorBoard or Perfetto.
+    """
+    if not profile_dir:
+        yield
+        return
+    import jax
+    os.makedirs(profile_dir, exist_ok=True)
+    jax.profiler.start_trace(profile_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+# ---------------------------------------------------------------- reading
+
+def load_events(trace_dir: str) -> List[Dict[str, Any]]:
+    """Every record from every ``*.jsonl`` file under ``trace_dir``,
+    sorted by timestamp.  Unparseable lines (a live writer's partial
+    tail) are skipped — reading a trace must never fail a run."""
+    out: List[Dict[str, Any]] = []
+    if not os.path.isdir(trace_dir):
+        return out
+    for fn in sorted(os.listdir(trace_dir)):
+        if not fn.endswith(".jsonl"):
+            continue
+        with open(os.path.join(trace_dir, fn)) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if isinstance(rec, dict):
+                    out.append(rec)
+    out.sort(key=lambda r: r.get("ts", 0))
+    return out
+
+
+def export_chrome(trace_dir: str) -> Dict[str, Any]:
+    """Fold a trace directory into one Chrome trace-event document.
+
+    The records are already trace-event shaped; the export re-bases
+    timestamps to the earliest event (Perfetto prefers small ``ts``) and
+    wraps them with the container keys viewers expect.
+    """
+    events = load_events(trace_dir)
+    t0 = min((e["ts"] for e in events if "ts" in e), default=0)
+    for e in events:
+        if "ts" in e:
+            e["ts"] = e["ts"] - t0
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"source": "repro.obs.trace",
+                          "epoch_us": t0}}

@@ -35,6 +35,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Set
 
+from repro.obs import trace
 from repro.runtime import faults
 
 CLAIMS_DIRNAME = os.path.join(".runtime", "claims")
@@ -93,9 +94,13 @@ class ClaimBoard:
                 raise
             with self._lock:
                 self.steals += 1
+            trace.event("claim.steal", cat="claims", sig=sig,
+                        host=self.host_id)
         else:
             with os.fdopen(fd, "w") as f:
                 f.write(doc)
+            trace.event("claim.acquire", cat="claims", sig=sig,
+                        host=self.host_id)
         with self._lock:
             self._held.add(sig)
         faults.fire("crash_after_claim")
@@ -115,6 +120,8 @@ class ClaimBoard:
         store's idempotent puts, not by the lease)."""
         with self._lock:
             self._held.discard(sig)
+        trace.event("claim.release", cat="claims", sig=sig,
+                    host=self.host_id, completed=completed)
         try:
             os.unlink(self._path(sig))
         except FileNotFoundError:

@@ -25,6 +25,7 @@ import time
 import traceback
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.obs import trace
 from repro.sweep import grid as grid_lib
 from repro.sweep import store as store_lib
 
@@ -145,6 +146,9 @@ def run_with_retry(execute: Callable[[int], Any], *, policy: RetryPolicy,
                           f"({type(e).__name__}: {e}); retry "
                           f"{attempt + 1}/{policy.max_retries} "
                           f"in {pause:.1f}s", file=sys.stderr)
+                trace.event("cohort.retry", label=label,
+                            attempt=attempt + 1,
+                            error=type(e).__name__, backoff_s=pause)
                 time.sleep(pause)
                 attempt += 1
                 continue
@@ -155,6 +159,9 @@ def run_with_retry(execute: Callable[[int], Any], *, policy: RetryPolicy,
                                      cache_key)
             print(f"# runtime: {label} quarantined after "
                   f"{attempt + 1} attempt(s) -> {path}", file=sys.stderr)
+            trace.event("cohort.quarantine", label=label, sig=sig,
+                        attempts=attempt + 1, error=type(e).__name__,
+                        record=path)
             return None
         else:
             clearer = clear_log if clear_log is not None else quarantine

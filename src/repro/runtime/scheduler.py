@@ -67,6 +67,7 @@ import jax
 import numpy as np
 
 from repro.launch import mesh as mesh_lib
+from repro.obs import trace
 from repro.sweep import grid as grid_lib
 from repro.sweep import shard as shard_lib
 from repro.runtime import faults
@@ -74,6 +75,10 @@ from repro.runtime import resilience
 from repro.runtime.writer import Completion, CompletionWriter
 
 DEFAULT_DISPATCH_AHEAD = 2
+
+# measured wall beyond this factor (either way) of the schedule-time
+# prediction = a mispredict: traced, counted, surfaced in the run report
+COST_MISPREDICT_RATIO = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +88,8 @@ class ScheduledCohort:
     cohort: grid_lib.Cohort
     cost: float       # measured wall (s) or scaled static estimate
     order: int        # position in the original (grid) cohort list
+    measured: bool = False   # cost is a CostBook wall (seconds), not a
+                             # rescaled static estimate
 
 
 def schedule(cohort_list: List[grid_lib.Cohort],
@@ -109,7 +116,9 @@ def schedule(cohort_list: List[grid_lib.Cohort],
         cohort=co,
         cost=(measured[i] if measured[i] is not None
               else static[i] * scale),
-        order=i) for i, co in enumerate(cohort_list)]
+        order=i,
+        measured=measured[i] is not None)
+        for i, co in enumerate(cohort_list)]
     return sorted(entries, key=lambda e: (-e.cost, e.order))
 
 
@@ -124,15 +133,25 @@ def _tree_ready(out: Any) -> bool:
 
 class Counters:
     """Thread-safe monotonic event counters (observability only — no
-    control flow reads them)."""
+    control flow reads them).
 
-    def __init__(self):
+    Optionally backed by an :class:`repro.obs.metrics.Registry`: each
+    bump also increments the registry counter ``engine_<name>``, so the
+    daemon's ``/metrics`` and the nested ``/stats`` JSON report the same
+    events through one write path.
+    """
+
+    def __init__(self, registry=None, prefix: str = "engine_"):
         self._lock = threading.Lock()
         self._c: Dict[str, int] = {}
+        self._registry = registry
+        self._prefix = prefix
 
     def bump(self, name: str, n: int = 1) -> None:
         with self._lock:
             self._c[name] = self._c.get(name, 0) + n
+        if self._registry is not None:
+            self._registry.counter(self._prefix + name).inc(n)
 
     def get(self, name: str) -> int:
         with self._lock:
@@ -242,6 +261,8 @@ class _Batch:
         self._stop.set()
         self.done.set()     # wake waiters even with work outstanding
         self.engine.counters.bump("batches_failed")
+        trace.event("batch.fatal", batch=self.tag,
+                    error=type(exc).__name__)
         if self.on_fatal is not None:
             try:
                 self.on_fatal(exc)
@@ -273,6 +294,9 @@ class _Batch:
                       f"{n}/{self.policy.max_retries} in {pause:.1f}s",
                       file=sys.stderr)
             self.engine.counters.bump("cohorts_retried")
+            trace.event("cohort.retry", cohort=entry.order,
+                        batch=self.tag, attempt=n,
+                        error=type(exc).__name__, backoff_s=pause)
             timer = threading.Timer(pause, self.engine._resubmit,
                                     args=(self, entry))
             timer.daemon = True
@@ -285,6 +309,9 @@ class _Batch:
             print(f"# runtime: cohort {entry.order + 1} quarantined "
                   f"after {n} attempt(s) -> {path}", file=sys.stderr)
             self.engine.counters.bump("cohorts_quarantined")
+            trace.event("cohort.quarantine", cohort=entry.order,
+                        batch=self.tag, attempts=n,
+                        error=type(exc).__name__, record=path)
             if self.on_quarantine is not None:
                 try:
                     self.on_quarantine(entry.cohort, exc, n)
@@ -326,37 +353,52 @@ class _Batch:
                 with self._lock:
                     prior = self._attempts.get(entry.order, 0)
                 sig = grid_lib.cohort_signature(co, self.cache_key)
-                results = grid_lib.run_cohort_blocks(
-                    co, every=self.checkpoint_every,
-                    ckpt_dir=grid_lib.ckpt_dir_for(self.store_root, sig),
-                    resume=self.resume or prior > 0, do_eval=self.do_eval,
-                    tail=self.tail, eval_data=self.eval_data,
-                    verbose=self.verbose)
+                with trace.span("cohort.blocks", cohort=entry.order,
+                                batch=self.tag, cells=len(co),
+                                every=self.checkpoint_every):
+                    results = grid_lib.run_cohort_blocks(
+                        co, every=self.checkpoint_every,
+                        ckpt_dir=grid_lib.ckpt_dir_for(self.store_root,
+                                                       sig),
+                        resume=self.resume or prior > 0,
+                        do_eval=self.do_eval,
+                        tail=self.tail, eval_data=self.eval_data,
+                        verbose=self.verbose)
 
-                def resolve_fn(results=results, co=co, t0=t0):
+                def resolve_fn(results=results, entry=entry, t0=t0):
                     if self.stopped:
                         return None
                     faults.delay("delay_resolve")
-                    self._record_cost(co, t0)
+                    self._record_cost(entry, t0)
                     return results
 
                 ready_fn = None             # already on host: FIFO-ready
             else:
-                prep = grid_lib.prepare_cohort(co, do_eval=self.do_eval,
-                                               eval_data=self.eval_data)
-                out, e = shard_lib.dispatch_sharded(
-                    jax.vmap(prep.run_one), prep.batch, engine._mesh,
-                    donate=True)
+                with trace.span("cohort.prepare", cohort=entry.order,
+                                batch=self.tag, cells=len(co)):
+                    prep = grid_lib.prepare_cohort(
+                        co, do_eval=self.do_eval,
+                        eval_data=self.eval_data)
+                with trace.span("cohort.dispatch", cohort=entry.order,
+                                batch=self.tag, cells=len(co),
+                                cost=entry.cost):
+                    out, e = shard_lib.dispatch_sharded(
+                        jax.vmap(prep.run_one), prep.batch,
+                        engine._mesh, donate=True)
 
-                def resolve_fn(out=out, e=e, co=co, t0=t0):
+                def resolve_fn(out=out, e=e, co=co, entry=entry, t0=t0):
                     if self.stopped:
                         return None
                     faults.delay("delay_resolve")
-                    host = shard_lib.resolve(out, e)
-                    host = {k: np.asarray(v) for k, v in host.items()}
-                    res = grid_lib.finalize_cohort(co, host,
-                                                   tail=self.tail)
-                    self._record_cost(co, t0)
+                    with trace.span("cohort.resolve",
+                                    cohort=entry.order, batch=self.tag,
+                                    cells=len(co)):
+                        host = shard_lib.resolve(out, e)
+                        host = {k: np.asarray(v)
+                                for k, v in host.items()}
+                        res = grid_lib.finalize_cohort(co, host,
+                                                       tail=self.tail)
+                    self._record_cost(entry, t0)
                     return res
 
                 ready_fn = (lambda out=out: _tree_ready(out))
@@ -391,12 +433,30 @@ class _Batch:
             ready=ready_fn,
             release=engine._window.release))
 
-    def _record_cost(self, co: grid_lib.Cohort, t0: float) -> None:
+    def _record_cost(self, entry: ScheduledCohort, t0: float) -> None:
         # dispatch-start -> resolve-end: includes compile + any queueing
         # overlap, which is exactly the wall a future scheduler pays
+        co = entry.cohort
+        wall = time.time() - t0
+        hist = self.engine._wall_hist
+        if hist is not None:
+            hist.observe(wall)
+        # accuracy guard: only meaningful against a MEASURED prediction
+        # (seconds); the rescaled static estimate is an ordering key, not
+        # a wall forecast
+        if entry.measured and entry.cost > 0 and wall > 0:
+            ratio = wall / entry.cost
+            if ratio > COST_MISPREDICT_RATIO \
+                    or ratio < 1.0 / COST_MISPREDICT_RATIO:
+                self.engine.counters.bump("costs_mispredicted")
+                trace.event("cost.mispredict", cohort=entry.order,
+                            batch=self.tag, predicted_s=entry.cost,
+                            measured_s=wall, ratio=ratio)
         if self.costs is not None:
-            self.costs.record(grid_lib.cohort_static_hash(co),
-                              wall_s=time.time() - t0, cells=len(co))
+            self.costs.record(
+                grid_lib.cohort_static_hash(co), wall_s=wall,
+                cells=len(co),
+                predicted_s=entry.cost if entry.measured else None)
 
 
 class CohortEngine:
@@ -414,7 +474,7 @@ class CohortEngine:
 
     def __init__(self, *, jobs: int,
                  dispatch_ahead: Optional[int] = None,
-                 mesh=None, verbose: bool = False):
+                 mesh=None, verbose: bool = False, registry=None):
         if jobs < 1:
             raise ValueError(f"jobs must be >= 1, got {jobs}")
         if dispatch_ahead is None:
@@ -424,11 +484,20 @@ class CohortEngine:
                 f"dispatch_ahead must be >= 0, got {dispatch_ahead}")
         self.jobs = jobs
         self.dispatch_ahead = dispatch_ahead
-        self.counters = Counters()
+        self.registry = registry
+        self.counters = Counters(registry=registry)
         self.closed = False
         self._mesh = mesh
         self._window = _Window(jobs + dispatch_ahead)
         self._writer = CompletionWriter(on_error=self._route_error)
+        self._wall_hist = None
+        if registry is not None:
+            self._wall_hist = registry.histogram(
+                "engine_cohort_wall_seconds",
+                "dispatch-start to resolve-end wall per cohort")
+            registry.gauge("engine_writer_queue_depth",
+                           "completions submitted but not retired",
+                           fn=self._writer.pending)
         self._labels: Dict[str, Tuple[_Batch, ScheduledCohort]] = {}
         self._labels_lock = threading.Lock()
         self._seq = itertools.count()
@@ -482,6 +551,10 @@ class CohortEngine:
             for e in entries:
                 self._labels[batch.label_of(e)] = (batch, e)
         self.counters.bump("batches_submitted")
+        trace.event("batch.submit", batch=batch.tag,
+                    cohorts=len(entries),
+                    cells=sum(len(e.cohort) for e in entries),
+                    measured=sum(1 for e in entries if e.measured))
         for e in entries:
             self._pool.submit(batch.dispatch_one, e)
         return batch
@@ -544,7 +617,7 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
                 cache_key=None, resume: bool = False,
                 checkpoint_every: Optional[int] = None,
                 max_retries: int = 0, retry_backoff: float = 0.5,
-                quarantine: bool = False) -> None:
+                quarantine: bool = False, registry=None) -> None:
     """Run every cohort concurrently; ``sink(cohort, results)`` fires on
     the writer thread as each cohort's results reach host memory.
 
@@ -568,7 +641,7 @@ def run_cohorts(cohort_list: List[grid_lib.Cohort], *,
     if not cohort_list:
         return
     engine = CohortEngine(jobs=jobs, dispatch_ahead=dispatch_ahead,
-                          mesh=mesh, verbose=verbose)
+                          mesh=mesh, verbose=verbose, registry=registry)
     err: Optional[BaseException] = None
     try:
         batch = engine.submit(

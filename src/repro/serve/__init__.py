@@ -15,13 +15,12 @@ experiment grids.)
 
 from repro.serve.admission import (AdmissionPolicy, AdmissionRejected,
                                    auto_dispatch_ahead, auto_jobs)
-from repro.serve.api import make_server, prometheus_text
+from repro.serve.api import make_server
 from repro.serve.client import ServiceError, stats, submit_and_wait
 from repro.serve.session import SweepService, spec_from_doc, spec_to_doc
 
 __all__ = [
     "AdmissionPolicy", "AdmissionRejected", "ServiceError",
     "SweepService", "auto_dispatch_ahead", "auto_jobs", "make_server",
-    "prometheus_text", "spec_from_doc", "spec_to_doc", "stats",
-    "submit_and_wait",
+    "spec_from_doc", "spec_to_doc", "stats", "submit_and_wait",
 ]

@@ -21,6 +21,7 @@ import argparse
 import os
 import sys
 
+from repro.obs import logs, trace
 from repro.serve import api as api_lib
 from repro.serve import session as session_lib
 
@@ -60,6 +61,15 @@ def main(argv=None) -> int:
     ap.add_argument("--poll-interval", type=float, default=1.0,
                     metavar="SECONDS",
                     help="store poll for foreign-claimed cohorts")
+    ap.add_argument("--trace", action="store_true",
+                    help="record lifecycle spans/events as JSONL under "
+                         "<store>/meta/trace (export with "
+                         "'python -m repro.obs export <store>'; never "
+                         "changes result bytes)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one JSON object per log line (ts, level, "
+                         "component, event, ...) instead of plain "
+                         "'# component: ...' text")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -74,11 +84,18 @@ def main(argv=None) -> int:
                      f"got {args.jobs!r}")
         jobs = "auto"
 
+    logs.configure(json_mode=args.log_json)
+    if args.trace:
+        trace.install(trace.trace_dir_for(args.store))
+    else:
+        trace.install_from_env()   # $REPRO_TRACE opt-in, e.g. under CI
+
     if os.environ.get("REPRO_FAULTS"):
         # deterministic chaos testing reaches the daemon the same way
         # it reaches the CLI (runtime.faults reads the env on install)
-        print("# serve: REPRO_FAULTS is set — fault injection active",
-              file=sys.stderr)
+        logs.emit("serve", "faults_active", level="warning",
+                  plain="REPRO_FAULTS is set — fault injection active",
+                  stream=sys.stderr)
 
     service = session_lib.SweepService(
         args.store, jobs=jobs, dispatch_ahead=args.dispatch_ahead,
@@ -89,11 +106,15 @@ def main(argv=None) -> int:
     server = api_lib.make_server(service, host, int(port_s))
     bound = server.server_address
     # stdout, flushed: scripts (tests, CI) parse the bound address
-    print(f"listening on {bound[0]}:{bound[1]}", flush=True)
+    logs.raw(f"listening on {bound[0]}:{bound[1]}")
     if not args.quiet:
-        print(f"# serve: store={args.store} jobs={service.engine.jobs} "
-              f"dispatch_ahead={service.engine.dispatch_ahead}",
-              file=sys.stderr)
+        logs.emit("serve", "started",
+                  plain=f"store={args.store} jobs={service.engine.jobs} "
+                        f"dispatch_ahead={service.engine.dispatch_ahead}",
+                  stream=sys.stderr, store=args.store,
+                  jobs=service.engine.jobs,
+                  dispatch_ahead=service.engine.dispatch_ahead,
+                  trace=trace.enabled())
     try:
         server.serve_forever(poll_interval=0.2)
     except KeyboardInterrupt:
@@ -102,6 +123,7 @@ def main(argv=None) -> int:
         server.shutdown()
         server.server_close()
         service.close()
+        trace.flush()
     return 0
 
 

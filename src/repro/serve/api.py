@@ -31,30 +31,11 @@ from repro.serve.admission import AdmissionRejected
 MAX_BODY_BYTES = 8 * 1024 * 1024
 
 
-def _flatten(doc: Any, prefix: str, out: Dict[str, float]) -> None:
-    if isinstance(doc, dict):
-        for k, v in doc.items():
-            key = f"{prefix}_{k}" if prefix else str(k)
-            _flatten(v, key, out)
-    elif isinstance(doc, bool):
-        out[prefix] = float(doc)
-    elif isinstance(doc, (int, float)):
-        out[prefix] = float(doc)
-
-
-def prometheus_text(stats: Dict[str, Any]) -> str:
-    """Numeric leaves of the stats document as Prometheus exposition
-    lines, namespaced ``repro_serve_*`` (labels-free gauges: the store
-    is the identity, one daemon per store)."""
-    flat: Dict[str, float] = {}
-    _flatten(stats, "", flat)
-    lines = []
-    for name in sorted(flat):
-        metric = "repro_serve_" + "".join(
-            c if c.isalnum() or c == "_" else "_" for c in name)
-        lines.append(f"# TYPE {metric} gauge")
-        lines.append(f"{metric} {flat[name]:g}")
-    return "\n".join(lines) + "\n"
+# /metrics renders straight from the session's typed metrics registry
+# (repro.obs.metrics) — counters/gauges/histograms with honest # TYPE
+# lines — replacing the old flatten-the-stats-JSON text.  Series names
+# are unchanged (repro_serve_cells_computed, repro_serve_cache_hit_rate,
+# ...), so PR-7 dashboards keep working.
 
 
 def make_server(service: session_lib.SweepService, host: str,
@@ -117,11 +98,10 @@ def make_server(service: session_lib.SweepService, host: str,
             if path == "/healthz":
                 return self._json(200, {"ok": True})
             if path == "/stats" or path == "/metrics":
-                stats = service.stats()
                 if path == "/metrics" \
                         or q.get("format") == "prometheus":
-                    return self._text(200, prometheus_text(stats))
-                return self._json(200, stats)
+                    return self._text(200, service.metrics_text())
+                return self._json(200, service.stats())
             if path.startswith("/sweep/"):
                 rid = path[len("/sweep/"):]
                 snap = service.request_snapshot(

@@ -39,6 +39,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Set
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import trace as obs_trace
 from repro.runtime import resilience
 from repro.runtime.claims import ClaimBoard
 from repro.runtime.scheduler import CohortEngine
@@ -46,6 +48,11 @@ from repro.serve import admission as admission_lib
 from repro.sweep import grid as grid_lib
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
+
+# session counter -> registry series name, where they differ (the
+# nested /stats JSON and the flat Prometheus names predate the registry
+# and both are pinned by consumers)
+_METRIC_ALIAS = {"claims_stolen": "claims_stolen_from_foreign"}
 
 
 def spec_from_doc(doc: Any) -> grid_lib.SweepSpec:
@@ -183,10 +190,15 @@ class SweepService:
         if dispatch_ahead is None:
             dispatch_ahead = admission_lib.auto_dispatch_ahead(jobs)
         self.verbose = verbose
+        # ONE registry for the whole daemon: /metrics renders it, the
+        # engine's counters/histograms write into it, and the session
+        # counters mirror into it — one path, no drift
+        self.registry = metrics_lib.Registry(namespace="repro_serve")
         self.mesh = shard_lib.sweep_mesh(devices)
         self.engine = CohortEngine(jobs=jobs,
                                    dispatch_ahead=dispatch_ahead,
-                                   mesh=self.mesh, verbose=verbose)
+                                   mesh=self.mesh, verbose=verbose,
+                                   registry=self.registry)
         self.board = ClaimBoard(store_root, host_id=os.getpid(),
                                 lease_timeout=lease_timeout)
         self.board.start_heartbeat()
@@ -205,6 +217,7 @@ class SweepService:
         self._closed = False
 
         self._poll_s = poll_s
+        self._register_gauges()
         self._watch_stop = threading.Event()
         self._watcher = threading.Thread(target=self._watch_loop,
                                          name="serve-watch", daemon=True)
@@ -213,6 +226,60 @@ class SweepService:
     # ------------------------------------------------------------- helpers
     def _bump(self, name: str, n: int = 1) -> None:
         self._counters[name] = self._counters.get(name, 0) + n
+        self.registry.counter(_METRIC_ALIAS.get(name, name)).inc(n)
+
+    def _register_gauges(self) -> None:
+        """Point-in-time readings sampled at render time.  Series names
+        match the pre-registry flattened /stats names, so dashboards
+        built against PR 7 keep working."""
+        reg = self.registry
+        reg.gauge("uptime_s", "seconds since service start",
+                  fn=lambda: time.time() - self.started)
+        reg.gauge("requests_known",
+                  fn=lambda: len(self._requests))
+        reg.gauge("requests_active",
+                  fn=lambda: sum(1 for r in self._requests.values()
+                                 if not r.done.is_set()))
+        reg.gauge("cache_hit_rate", "hit cells / requested cells",
+                  fn=self._hit_rate)
+        reg.gauge("inflight_total",
+                  fn=lambda: len(self._inflight))
+        reg.gauge("inflight_waiting",
+                  fn=lambda: sum(1 for i in self._inflight.values()
+                                 if i.kind == "waiting"))
+        reg.gauge("claims_held", fn=lambda: len(self.board.held()))
+        reg.gauge("claims_steals", fn=lambda: self.board.steals)
+        reg.gauge("engine_jobs", fn=lambda: self.engine.jobs)
+        reg.gauge("engine_dispatch_ahead",
+                  fn=lambda: self.engine.dispatch_ahead)
+        reg.gauge("costs_measured_keys",
+                  fn=lambda: len(admission_lib._measured_walls(
+                      self.costs)))
+        reg.gauge("store_cells", fn=lambda: len(self.store))
+        reg.gauge("admission_max_queued_s_per_client",
+                  fn=lambda: self.admission.max_queued_s)
+
+    def _hit_rate(self) -> float:
+        served = self._counters.get("cells_requested", 0)
+        hits = self._counters.get("cells_hit", 0)
+        return (hits / served) if served else 0.0
+
+    def metrics_text(self) -> str:
+        """Prometheus exposition of the daemon registry (the /metrics
+        endpoint).  Label-carrying series (per-client admission charge,
+        store health notes) are refreshed here — everything else is a
+        live counter or a callback gauge."""
+        g = self.registry.gauge("admission_queued_s",
+                                "queued device-seconds per client")
+        g.clear_labeled()
+        for client, s in self.admission.queued().items():
+            g.set_labeled(s, client=str(client))
+        notes = self.registry.gauge("store_note_counts",
+                                    "store health incidents by kind")
+        notes.clear_labeled()
+        for kind, n in self.store.health()["note_counts"].items():
+            notes.set_labeled(n, kind=str(kind))
+        return self.registry.render_prometheus()
 
     # -------------------------------------------------------------- submit
     def submit(self, spec: grid_lib.SweepSpec,
@@ -233,18 +300,24 @@ class SweepService:
             hit_docs: Dict[str, Dict[str, Any]] = {}
             shared: Dict[str, _Inflight] = {}
             miss_cells, miss_idx = [], []
-            for i, (cell, h) in enumerate(zip(cell_list, hashes)):
-                if h in self._cells_inflight:
-                    shared[h] = self._cells_inflight[h]
-                    continue
-                if h in hit_docs:
-                    continue                       # duplicate grid cell
-                doc = self.store.get(cell, cache_key)
-                if doc is not None:
-                    hit_docs[h] = doc
-                else:
-                    miss_cells.append(cell)
-                    miss_idx.append(i)
+            with obs_trace.span("session.classify", cat="serve",
+                                client=client,
+                                cells=len(cell_list)) as sp:
+                for i, (cell, h) in enumerate(zip(cell_list, hashes)):
+                    if h in self._cells_inflight:
+                        shared[h] = self._cells_inflight[h]
+                        continue
+                    if h in hit_docs:
+                        continue                   # duplicate grid cell
+                    doc = self.store.get(cell, cache_key)
+                    if doc is not None:
+                        hit_docs[h] = doc
+                    else:
+                        miss_cells.append(cell)
+                        miss_idx.append(i)
+                sp["hits"] = len(hit_docs)
+                sp["shared"] = len(shared)
+                sp["misses"] = len(miss_cells)
             new_cohorts = grid_lib.cohorts(miss_cells, miss_idx)
             ests = [self.admission.estimate(co, self.costs)
                     for co in new_cohorts]
@@ -290,6 +363,13 @@ class SweepService:
                 self._dispatch(to_run)
             if not req._pending:
                 req.done.set()
+            obs_trace.event("session.submit", cat="serve",
+                            request=req.id, client=client,
+                            cells=len(cell_list), hits=len(hit_docs),
+                            shared=len(shared),
+                            scheduled=sum(len(i.cohort)
+                                          for i in to_run))
+            obs_trace.flush()   # fully-cached requests never settle
             snap = req.snapshot()
             snap["plan"] = {"hits": len(hit_docs), "shared": len(shared),
                             "scheduled": sum(len(i.cohort) for i in to_run),
@@ -368,6 +448,9 @@ class SweepService:
                 self._bump(f"cells_{status}", len(inf.cohort))
             else:
                 self._bump("cells_computed", len(inf.cohort))
+            obs_trace.event("session.settle", cat="serve", sig=sig,
+                            status=status, cells=len(inf.cohort))
+            obs_trace.flush()   # request lifecycle over: persist its tail
             if not self._inflight:
                 # fully idle: drop empty .runtime debris so the store
                 # stays byte-comparable with any clean one-shot run
@@ -424,6 +507,8 @@ class SweepService:
                 inf.kind = "scheduled"
                 inf.est_s = 0.0           # charge was already released
                 self._bump("claims_stolen")
+                obs_trace.event("session.steal", cat="serve",
+                                sig=inf.sig, cells=len(inf.remaining))
                 for req in inf.subscribers:
                     for h in inf.remaining:
                         if req.status.get(h) == "waiting":

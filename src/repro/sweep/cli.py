@@ -48,6 +48,8 @@ import os
 import sys
 from typing import Any, List, Tuple
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import trace as trace_lib
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
 from repro.sweep.grid import DEFAULTS, SweepSpec, cells, cohorts, run_spec
@@ -285,6 +287,19 @@ def main(argv=None) -> int:
                     metavar="POINT[:ARG..][!]",
                     help="inject a deterministic fault (repeatable; "
                          "testing only — see repro.runtime.faults)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record lifecycle spans/events as JSONL under "
+                         "<store>/meta/trace (requires --store; export "
+                         "with 'python -m repro.obs export <store>'; "
+                         "never changes result bytes)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of cohort "
+                         "execution into DIR (open with Perfetto / "
+                         "TensorBoard)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the run's metrics registry snapshot as "
+                         "JSON to PATH (same series /metrics serves on "
+                         "the daemon)")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the cohort + scheduler plan without "
                          "executing")
@@ -308,7 +323,9 @@ def main(argv=None) -> int:
                          ("--checkpoint-every",
                           args.checkpoint_every is not None),
                          ("--quarantine", args.quarantine),
-                         ("--fault", bool(args.fault))):
+                         ("--fault", bool(args.fault)),
+                         ("--trace", args.trace),
+                         ("--profile", args.profile is not None)):
             if on:
                 ap.error(f"{flag} is incompatible with --submit: the "
                          f"daemon owns the store and its execution "
@@ -320,7 +337,8 @@ def main(argv=None) -> int:
         for flag, on in (("--resume", args.resume),
                          ("--checkpoint-every",
                           args.checkpoint_every is not None),
-                         ("--quarantine", args.quarantine)):
+                         ("--quarantine", args.quarantine),
+                         ("--trace", args.trace)):
             if on:
                 ap.error(f"{flag} needs --store (it operates on the "
                          f"result store on disk)")
@@ -330,6 +348,15 @@ def main(argv=None) -> int:
             faults.install(faults.parse(",".join(args.fault)))
         except ValueError as e:
             ap.error(str(e))
+    if args.trace:
+        trace_lib.install(trace_lib.trace_dir_for(args.store))
+        if not args.quiet:
+            print(f"# trace: recording lifecycle events under "
+                  f"{trace_lib.trace_dir_for(args.store)}",
+                  file=sys.stderr)
+    else:
+        trace_lib.install_from_env()   # $REPRO_TRACE opt-in
+    registry = metrics_lib.Registry(namespace="repro_sweep")
 
     jobs = args.jobs
     if jobs == "auto":
@@ -390,14 +417,17 @@ def main(argv=None) -> int:
             # belong to a live writer (--resume sweeps it all itself)
             store.gc_tmp(args.lease_timeout)
         mesh = shard_lib.sweep_mesh(args.devices)
-        results = run_spec(spec, store=store, mesh=mesh,
-                           jobs=jobs,
-                           dispatch_ahead=args.dispatch_ahead,
-                           verbose=not args.quiet, resume=args.resume,
-                           checkpoint_every=args.checkpoint_every,
-                           max_retries=args.max_retries,
-                           retry_backoff=args.retry_backoff,
-                           quarantine=args.quarantine)
+        with trace_lib.profile(args.profile):
+            results = run_spec(spec, store=store, mesh=mesh,
+                               jobs=jobs,
+                               dispatch_ahead=args.dispatch_ahead,
+                               verbose=not args.quiet,
+                               resume=args.resume,
+                               checkpoint_every=args.checkpoint_every,
+                               max_retries=args.max_retries,
+                               retry_backoff=args.retry_backoff,
+                               quarantine=args.quarantine,
+                               registry=registry)
 
     quarantined = sum(1 for r in results if r is None)
     columns = list(spec.axes)
@@ -422,6 +452,19 @@ def main(argv=None) -> int:
                               in sorted(health["note_counts"].items()))
             print(f"# store health: {counts} (affected cells were "
                   f"recomputed; details above)", file=sys.stderr)
+    snap = registry.snapshot()
+    mispredicted = int(snap.get("engine_costs_mispredicted", 0))
+    if mispredicted and not args.quiet:
+        print(f"# costbook: {mispredicted} cohort wall(s) deviated >2x "
+              f"from the CostBook prediction — schedule estimates for "
+              f"this grid are stale (see 'python -m repro.obs report "
+              f"{args.store}')", file=sys.stderr)
+    if args.metrics_out:
+        registry.dump(args.metrics_out)
+        if not args.quiet:
+            print(f"# metrics: snapshot written to {args.metrics_out}",
+                  file=sys.stderr)
+    trace_lib.flush()
     if quarantined and args.submit:
         print(f"# FAILED: {quarantined} cell(s) quarantined/failed by "
               f"the service:", file=sys.stderr)

@@ -60,6 +60,7 @@ from repro.core.objectives import Case
 from repro.data.tasks import build_task_data, dim_hint
 from repro.fl.trainer import (FLConfig, pad_workers, scan_experiment,
                               scan_experiment_block, scan_experiment_init)
+from repro.obs import trace as obs_trace
 from repro.sweep import shard as shard_lib
 from repro.sweep import store as store_lib
 
@@ -626,6 +627,8 @@ def run_cohort_blocks(cohort: Cohort, *, every: int, ckpt_dir: str,
         ckpt.save(ckpt_dir, r_done, state,
                   extra={"sig": sig, "r_done": r_done}, keep=1,
                   arrays=hist)
+        obs_trace.event("cohort.checkpoint", sig=sig, r_done=r_done,
+                        rounds=rounds)
         faults.fire("crash_after_block")
 
     final = dict(hist)
@@ -724,7 +727,7 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
              dispatch_ahead: Optional[int] = None,
              resume: bool = False, checkpoint_every: Optional[int] = None,
              max_retries: int = 0, retry_backoff: float = 0.5,
-             quarantine: bool = False
+             quarantine: bool = False, registry=None
              ) -> List[Optional[Dict[str, Any]]]:
     """Run a whole grid: cache lookups, cohort batching, store writes.
 
@@ -759,6 +762,12 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
       cells' results stay ``None`` and the REST of the grid completes —
       instead of aborting the sweep.  Defaults keep the historical
       fail-fast behavior.
+
+    ``registry`` (an ``repro.obs.metrics.Registry``) collects run
+    metrics — cells/hits counters and, on the async path, the engine's
+    counter/histogram series — through the SAME collectors the service
+    daemon renders at ``/metrics`` (the CLI's ``--metrics-out`` dumps
+    this registry's snapshot).
     """
     if jobs == "auto":
         # sized from measured walls, not from the grid: the book reflects
@@ -810,6 +819,14 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
         print(f"# sweep: {len(cell_list)} cells, {hits} cache hits",
               file=sys.stderr)
     pending = cohorts(pending_cells, pending_idx)
+    if registry is not None:
+        registry.counter("cells_requested").inc(len(cell_list))
+        registry.counter("cells_hit").inc(
+            len(cell_list) - len(pending_cells))
+        registry.counter("cells_computed").inc(len(pending_cells))
+    obs_trace.event("sweep.submit", cat="sweep", cells=len(cell_list),
+                    hits=len(cell_list) - len(pending_cells),
+                    cohorts=len(pending))
     costs = (store_lib.CostBook(store.root) if store is not None else None)
 
     def settle(cohort: Cohort, outs: List[Dict[str, Any]]) -> None:
@@ -836,7 +853,8 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
                               checkpoint_every=checkpoint_every,
                               max_retries=max_retries,
                               retry_backoff=retry_backoff,
-                              quarantine=quarantine)
+                              quarantine=quarantine,
+                              registry=registry)
         if store is not None:
             runtime_gc(store.root)
         return results
@@ -873,16 +891,40 @@ def run_spec(spec: SweepSpec, *, store: Optional[store_lib.SweepStore] = None,
                               mesh=mesh, eval_data=eval_data,
                               timings=timings)
 
+        # schedule-time prediction (measured walls only): graded against
+        # the realized wall below, same contract as the async scheduler
+        predicted = None
+        if costs is not None:
+            w = costs.per_cell_wall(cohort_static_hash(cohort))
+            if w is not None:
+                predicted = w * len(cohort)
         t0 = time.time()
-        outs = resilience.run_with_retry(
-            execute, policy=policy, quarantine=qlog, cohort=cohort,
-            cache_key=cache_key, label=f"cohort {order}/{len(pending)}",
-            verbose=verbose, clear_log=qclear)
+        with obs_trace.span("cohort.run", cat="sweep", cohort=order - 1,
+                            cells=len(cohort)):
+            outs = resilience.run_with_retry(
+                execute, policy=policy, quarantine=qlog, cohort=cohort,
+                cache_key=cache_key,
+                label=f"cohort {order}/{len(pending)}",
+                verbose=verbose, clear_log=qclear)
         if outs is None:
             continue                       # quarantined; rest of the grid runs
+        wall = time.time() - t0
+        if registry is not None:
+            registry.histogram(
+                "engine_cohort_wall_seconds",
+                "dispatch-start to resolve-end wall per cohort"
+            ).observe(wall)
+        if predicted is not None and predicted > 0 and wall > 0:
+            ratio = wall / predicted
+            if ratio > 2.0 or ratio < 0.5:
+                obs_trace.event("cost.mispredict", cohort=order - 1,
+                                predicted_s=predicted, measured_s=wall,
+                                ratio=ratio)
+                if registry is not None:
+                    registry.counter("engine_costs_mispredicted").inc()
         if costs is not None:
-            costs.record(cohort_static_hash(cohort),
-                         wall_s=time.time() - t0, cells=len(cohort))
+            costs.record(cohort_static_hash(cohort), wall_s=wall,
+                         cells=len(cohort), predicted_s=predicted)
         settle(cohort, outs)
     if store is not None:
         runtime_gc(store.root)

@@ -28,7 +28,10 @@ from typing import Any, Dict, Iterable, List, Optional
 
 import numpy as np
 
-_SCHEMA = 4          # bump to invalidate every cached cell
+from repro.obs import trace
+
+_SCHEMA = 5          # bump to invalidate every cached cell
+                     # 5: histories gained per-round eta / snr telemetry
 #   2: cells gained the eps / rho / L scalar fields (single-compile
 #      cohorts) and worker-axis randomness became restriction-stable,
 #      which changes every trajectory — old entries must not be served
@@ -194,13 +197,16 @@ class SweepStore:
             extra=None) -> str:
         _faults().fire("crash_before_put")
         p = self.path(cell, extra)
-        doc = {"canonical": canonical_cell(cell, extra),
-               "cell": jsonable(cell),
-               "result": {"cell": jsonable(result.get("cell", cell)),
-                          "metrics": jsonable(result["metrics"]),
-                          "history": jsonable(result.get("history", {}))}}
-        doc = {"checksum": payload_checksum(doc), **doc}
-        self._atomic_write(p, json.dumps(doc))
+        with trace.span("store.put", cat="store",
+                        hash=os.path.basename(p)[:-len(".json")]):
+            doc = {"canonical": canonical_cell(cell, extra),
+                   "cell": jsonable(cell),
+                   "result": {"cell": jsonable(result.get("cell", cell)),
+                              "metrics": jsonable(result["metrics"]),
+                              "history": jsonable(
+                                  result.get("history", {}))}}
+            doc = {"checksum": payload_checksum(doc), **doc}
+            self._atomic_write(p, json.dumps(doc))
         return p
 
     def _atomic_write(self, path: str, payload: str) -> None:
@@ -328,11 +334,21 @@ class CostBook:
             return None
         return float(rec["wall_s"]) / float(rec["cells"])
 
-    def record(self, static_key: str, *, wall_s: float, cells: int) -> None:
-        """Merge one measurement (latest wins per key) and persist."""
+    def record(self, static_key: str, *, wall_s: float, cells: int,
+               predicted_s: Optional[float] = None) -> None:
+        """Merge one measurement (latest wins per key) and persist.
+
+        ``predicted_s`` is the wall the scheduler predicted at dispatch
+        time (when its cost came from a prior measurement) — kept next
+        to the realized wall so the obs report can grade CostBook
+        accuracy (the ``--jobs auto`` trust signal)."""
         os.makedirs(self.dir, exist_ok=True)
         book = self.load()
-        book[static_key] = {"wall_s": float(wall_s), "cells": int(cells)}
+        rec: Dict[str, Any] = {"wall_s": float(wall_s),
+                               "cells": int(cells)}
+        if predicted_s is not None:
+            rec["predicted_s"] = float(predicted_s)
+        book[static_key] = rec
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:

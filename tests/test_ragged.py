@@ -201,7 +201,8 @@ def test_padded_masked_round_op_exact():
         jnp.concatenate([W, jnp.tile(w_prev[None], (pad, 1))]),
         jnp.concatenate([k_i, jnp.zeros((pad,))]),
         jnp.asarray([1.0] * U + [0.0] * pad, jnp.float32))
-    names = ("flat", "delta", "carry", "sel", "b", "a_t", "b_t")
+    names = ("flat", "delta", "carry", "sel", "b", "a_t", "b_t",
+             "eta", "snr")
     assert len(plain) == len(padded) == len(names)
     for a, b, name in zip(plain, padded, names):
         if name == "carry":
