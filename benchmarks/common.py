@@ -64,6 +64,30 @@ def run_policy(task, workers, test, policy: str, rounds: int,
     return hist
 
 
+def phase_times(phases: Dict[str, "object"], reps: int = 3,
+                warmup: int = 1) -> Dict[str, float]:
+    """Median wall seconds for each named phase thunk, honestly separated.
+
+    Each phase is a zero-arg callable returning jax values; the clock
+    stops only after ``jax.block_until_ready`` on the result, so kernel
+    time, cross-shard reduction/collective time, and end-to-end round
+    time can be reported as distinct rows instead of one blended number
+    (async dispatch would otherwise attribute a phase's work to whoever
+    blocks first).  ``warmup`` calls absorb trace+compile.
+    """
+    out: Dict[str, float] = {}
+    for name, fn in phases.items():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        out[name] = float(np.median(ts))
+    return out
+
+
 def seed_spread_rows(base: dict, metric: str, label: str, name_fmt: str,
                      seeds: int, digits: int = 5) -> List[dict]:
     """Per-policy mean/std of ``metric`` over an N-seed vectorized sweep.

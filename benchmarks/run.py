@@ -7,6 +7,7 @@ Prints ``name,metric,value`` CSV.  Sections:
   kernels  OTA aggregate / INFLOTA search micro-scaling
   sweep    loop-vs-vectorized sweep-engine throughput  (repro.sweep)
   roofline per-(arch × shape × mesh) dry-run terms      (§Roofline)
+  scaling_u worker-sharded SNR/phase scaling, U=1e4..1e6
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick|--full]
        [--only X[,Y,...]]
@@ -19,8 +20,9 @@ import sys
 import time
 
 from benchmarks import (common, csi_ablation, fig2_3_linreg,
-                        fig4_5_6_sweeps, fig7_8_mlp, kernels_micro,
-                        roofline_table, sweep_bench, theory_check)
+                        fig4_5_6_sweeps, fig7_8_mlp, fig_scaling_u,
+                        kernels_micro, roofline_table, sweep_bench,
+                        theory_check)
 
 SECTIONS = {
     "fig2_3": lambda r: fig2_3_linreg.run(rounds=r),
@@ -35,6 +37,10 @@ SECTIONS = {
         rounds=min(r, 60), async_rounds=min(r * 4, 400),
         async_reps=1 if r <= 40 else 3),
     "roofline": lambda r: roofline_table.run(),
+    # worker-sharded blessing-of-scaling: CI-speed runs stop at U = 1e5,
+    # the committed BENCH rows come from the module default (up to 1e6)
+    "scaling_u": lambda r: fig_scaling_u.run(
+        us=(10_000, 100_000) if r <= 40 else (10_000, 100_000, 1_000_000)),
 }
 
 

@@ -28,6 +28,7 @@ from repro.core.convergence import LearningConstants
 from repro.core.objectives import Case, case_numerator, r_t
 
 _EPS = 1e-12
+_TOL = 1e-6   # eq.-44 boundary tolerance — matches _solve_rank1's literal
 
 
 class InflotaSolution(NamedTuple):
@@ -148,6 +149,224 @@ def _solve_rank1(h_w, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
     r = jnp.take_along_axis(r_all, kstar[None, :], axis=0)[0]
     beta = (b[None, :] <= bmat * (1.0 + 1e-6)).astype(dt)
     return InflotaSolution(b=b, beta=beta, r=r)
+
+
+# ------------------------------------------------------- sharded search
+#
+# Worker-sharded twin of ``_solve_rank1`` for the million-worker tier
+# (``fl/worker_shard.py``): the worker axis is split into ``n_shards``
+# contiguous blocks of ``U_b = U / n_shards`` workers, and no step ever
+# touches more than one ``(U_b, D)`` tile.  The global O(U log U) sort of
+# the dense path becomes per-shard sorted-prefix summaries (O(U_b log
+# U_b) each) that cross shards as (U,)-sized side information — never as
+# (U, D) blocks — and the per-entry argmin reduces lexicographically
+# (min r, then min global worker index), reproducing ``jnp.argmin``'s
+# first-min tie-break exactly.
+#
+# Exactness contract (pinned by ``tests/test_worker_sharded*.py``): for
+# every shard count, ``solve_sharded`` returns bit-identical (b, beta, r)
+# to ``solve`` on a rank-1 channel.  The three ingredients:
+#
+#   * the candidate coefficients ``cw`` and the per-entry curve values
+#     r_all[k, d] repeat ``_solve_rank1``'s scalar op order exactly
+#     (same expressions, same _EPS floors, same (1 + 1e-6) tolerance
+#     ORIENTATION — the predicate is never rewritten algebraically);
+#   * the denominators ``den_k = sum_i k_eff_i [cw_k <= cw_i (1+tol)]``
+#     are sums of integer-valued f32 (sample counts), so any summation
+#     order yields the same float as the dense masked sum while the
+#     total stays below 2^24 (f32's exact-integer range; ~16.7M total
+#     samples — beyond that the sharded value is still deterministic
+#     for a given shard count, just not bit-comparable to the dense
+#     path's own rounding);
+#   * two-level argmin: the within-shard argmin picks the lowest local
+#     index, the cross-shard argmin over the stacked minima picks the
+#     lowest shard — together the lowest global index, since equal
+#     minima are equal bit patterns.
+
+class ShardedRank1(NamedTuple):
+    """Rank-1 sharded solution WITHOUT the (U, D) beta.
+
+    ``beta`` is reconstructed per shard on demand (``block_beta``) so the
+    caller streams (U_b, D) tiles instead of materializing (U, D).
+    """
+
+    b: jax.Array       # (D,)   optimal power scaling per entry
+    r: jax.Array       # (D,)   attained objective value
+    kstar: jax.Array   # (D,)   global index of the winning candidate, i32
+    cw: jax.Array      # (S, U_b) candidate coefficients, shard-blocked
+    s: jax.Array       # (D,)   the 1 / (|w| + eta) statistic
+
+
+def rank1_candidates(h_w, k_arr, p_max, w_prev_abs, eta, dt):
+    """The two rank-1 factors of the candidate matrix (43): ``cand[i, d]
+    = cw[i] * s[d]`` — op-for-op the expressions of ``_solve_rank1``."""
+    U = h_w.shape[0]
+    k_arr = jnp.asarray(k_arr, dt)
+    p_arr = jnp.broadcast_to(jnp.asarray(p_max, dt), (U,))
+    cw = jnp.abs(jnp.sqrt(p_arr) * h_w.astype(dt)
+                 / jnp.maximum(k_arr, _EPS))                      # (U,)
+    s = (1.0 / (w_prev_abs + eta)).astype(dt)                     # (D,)
+    return cw, s
+
+
+def block_summary(cw_blk, keff_blk):
+    """One shard's sorted-prefix summary for the exact den reduction.
+
+    Worker i accepts candidate k iff ``cw_k <= cw_i * (1 + tol)`` (the
+    feasibility predicate of ``_solve_rank1``, same orientation).  Sorting
+    the per-worker thresholds ``thr_i = cw_i * (1 + tol)`` ascending with
+    a prefix sum of the matching k_eff turns "sum k_eff over accepting
+    workers" into one searchsorted lookup per candidate — O(log U_b)
+    instead of O(U_b), and only (U_b,)-sized arrays ever cross shards.
+
+    Returns (thr_sorted (U_b,), csum0 (U_b + 1,)): ``csum0[j]`` is the
+    k_eff mass of the j smallest thresholds (csum0[0] = 0), so a shard's
+    den contribution for candidate value v is ``csum0[-1] -
+    csum0[searchsorted(thr_sorted, v, 'left')]`` — exactly the strict
+    complement of the ``thr_i < v`` count, i.e. the ``cw_k <= thr_i``
+    mass.  Tie order inside the sort is irrelevant: equal thresholds sit
+    in one run and 'left' indexes its boundary.
+    """
+    thr = cw_blk * (1.0 + _TOL)
+    order = jnp.argsort(thr)
+    thr_sorted = jnp.take(thr, order)
+    csum = jnp.cumsum(jnp.take(keff_blk, order))
+    csum0 = jnp.concatenate([jnp.zeros((1,), csum.dtype), csum])
+    return thr_sorted, csum0
+
+
+def block_den(cw_blk, thr_sorted, csum0):
+    """Exact denominators for one shard's candidates against ALL shards.
+
+    Args:
+      cw_blk:     (U_b,) this shard's candidate coefficients.
+      thr_sorted: (S, U_b) every shard's sorted thresholds.
+      csum0:      (S, U_b + 1) every shard's k_eff prefix sums.
+
+    Scans the S summaries in shard order, so the accumulation order is a
+    pure function of the logical shard count — independent of how many
+    devices execute it (the mesh and single-device paths agree bitwise).
+    """
+    def add(acc, xs):
+        ts, cs = xs
+        j = jnp.searchsorted(ts, cw_blk, side="left")
+        return acc + (cs[-1] - cs[j]), None
+
+    den, _ = jax.lax.scan(add, jnp.zeros_like(cw_blk),
+                          (thr_sorted, csum0))
+    return den
+
+
+def block_envelope(cw_blk, den_blk, s, c: LearningConstants, numer):
+    """One shard's slice of the per-entry lower envelope of R_t curves.
+
+    Evaluates this shard's U_b candidate curves over all D entries —
+    the (U_b, D) tile is the largest intermediate — with the exact
+    expressions of ``_solve_rank1``, and reduces to the shard-local
+    argmin.  Returns (rmin (D,), kloc (D,), cw_star (D,)).
+    """
+    bmat = cw_blk[:, None] * s[None, :]                       # (U_b, D)
+    r_blk = (c.L * c.sigma2
+             / (2.0 * jnp.maximum(den_blk[:, None] * bmat, _EPS) ** 2)
+             + (numer / (2.0 * c.L
+                         * jnp.maximum(den_blk, _EPS)))[:, None])
+    kloc = jnp.argmin(r_blk, axis=0)
+    rmin = jnp.take_along_axis(r_blk, kloc[None, :], axis=0)[0]
+    cw_star = jnp.take(cw_blk, kloc)
+    return rmin, kloc, cw_star
+
+
+def reduce_envelopes(rmin, kloc, cw_star, s, u_b: int):
+    """Cross-shard argmin of the stacked per-shard envelopes.
+
+    ``jnp.argmin`` over the shard axis keeps the FIRST shard attaining
+    the minimum, and each shard's ``kloc`` is its first local minimizer,
+    so the composite is the global first-min tie-break of the dense
+    search.  Returns (b (D,), r (D,), kstar (D,) global i32).
+    """
+    sidx = jnp.argmin(rmin, axis=0)                           # (D,)
+    r = jnp.take_along_axis(rmin, sidx[None, :], axis=0)[0]
+    kstar = (jnp.take_along_axis(kloc, sidx[None, :], axis=0)[0]
+             + sidx.astype(kloc.dtype) * u_b)
+    b = jnp.take_along_axis(cw_star, sidx[None, :], axis=0)[0] * s
+    return b, r, kstar.astype(jnp.int32)
+
+
+def block_beta(b, cw_blk, s, dt=jnp.float32):
+    """One shard's (U_b, D) beta tile from the decided b (eq. 44)."""
+    bmat = cw_blk[:, None] * s[None, :]
+    return (b[None, :] <= bmat * (1.0 + _TOL)).astype(dt)
+
+
+def solve_rank1_sharded(h_w, k_i, w_prev_abs, eta, p_max,
+                        c: LearningConstants, *, n_shards: int,
+                        case: Case = Case.GD_CONVEX,
+                        delta_prev: float = 0.0,
+                        K_b: float | None = None) -> ShardedRank1:
+    """The Theorem-4 rank-1 search, worker-sharded — logical execution.
+
+    Drop-in twin of ``solve`` on a rank-1 channel (same argument
+    conventions: ``k_i`` here is whatever the caller's solve would pass,
+    e.g. the engine's k_eff), streaming the per-entry envelope in
+    (U_b, D) tiles via ``lax.scan`` over the shard axis.  The result is
+    bit-identical to ``_solve_rank1`` for every ``n_shards`` (see the
+    section comment for the exactness argument); ``beta`` is NOT
+    materialized — use ``block_beta`` per shard, or ``solve_sharded``
+    when a full (U, D) beta is wanted for comparison.
+
+    ``U % n_shards`` must be 0: callers pad the worker axis with inert
+    workers (k_i = p_max = 0) first — padding is restriction-stable and
+    never changes a real candidate (an inert worker's candidate is 0 and
+    its k_eff mass is 0).
+    """
+    h_w = jnp.asarray(h_w)
+    if h_w.ndim == 2:
+        if h_w.shape[1] != 1:
+            raise ValueError("sharded search is rank-1 only; got dense "
+                             f"h of shape {h_w.shape}")
+        h_w = h_w[:, 0]
+    U = h_w.shape[0]
+    if U % n_shards:
+        raise ValueError(f"U={U} not divisible by n_shards={n_shards}; "
+                         "pad the worker axis with inert workers first")
+    u_b = U // n_shards
+    w_prev_abs = jnp.asarray(w_prev_abs)
+    dt = jnp.result_type(h_w.dtype, w_prev_abs.dtype, float)
+    numer = case_numerator(case, k_i, c, delta_prev, K_b)
+    k_arr = jnp.asarray(k_i, dt)
+    k_eff = jnp.full_like(k_arr, K_b) if K_b is not None else k_arr
+    cw, s = rank1_candidates(h_w, k_arr, p_max, w_prev_abs, eta, dt)
+    cwb = cw.reshape(n_shards, u_b)
+    thr_sorted, csum0 = jax.vmap(block_summary)(
+        cwb, k_eff.reshape(n_shards, u_b))
+
+    def body(_, cw_blk):
+        den_blk = block_den(cw_blk, thr_sorted, csum0)
+        return None, block_envelope(cw_blk, den_blk, s, c, numer)
+
+    _, (rmin, kloc, cw_star) = jax.lax.scan(body, None, cwb)
+    b, r, kstar = reduce_envelopes(rmin, kloc, cw_star, s, u_b)
+    return ShardedRank1(b=b, r=r, kstar=kstar, cw=cwb, s=s)
+
+
+def solve_sharded(h, k_i, w_prev_abs, eta, p_max, c: LearningConstants,
+                  *, n_shards: int, case: Case = Case.GD_CONVEX,
+                  delta_prev: float = 0.0,
+                  K_b: float | None = None) -> InflotaSolution:
+    """``solve`` computed via the sharded search — comparison/test entry.
+
+    Assembles the full (U, D) beta from per-shard tiles, so use it only
+    where (U, D) fits (equivalence tests, small-U inspection); the
+    engine path streams ``block_beta`` tiles and never calls this.
+    """
+    sol = solve_rank1_sharded(h, k_i, w_prev_abs, eta, p_max, c,
+                              n_shards=n_shards, case=case,
+                              delta_prev=delta_prev, K_b=K_b)
+    dt = sol.b.dtype
+    beta = jnp.concatenate(
+        [block_beta(sol.b, sol.cw[j], sol.s, dt)
+         for j in range(n_shards)], axis=0)
+    return InflotaSolution(b=sol.b, beta=beta, r=sol.r)
 
 
 def solve_bucketed(h_workers, k_i, w_prev_abs, eta, p_max,

@@ -65,6 +65,32 @@ from repro.kernels import ops as kops
 _EPS = 1e-12
 
 
+def pinned_mean(x: jax.Array) -> jax.Array:
+    """Mean of a 1-D array with a FIXED accumulation order.
+
+    ``jnp.mean`` lowers to an XLA ``reduce`` whose float accumulation
+    order is implementation-defined — it shifts with the surrounding
+    program (experiment-batch padding, SPMD partitioning), which moves
+    scalar telemetry like ``RoundStats.snr`` at ulp level between
+    compiled programs that must produce byte-identical stores (the
+    sweep's device-count invariance).  Explicit elementwise adds are
+    never reassociated by XLA, so folding zero-padded halves pins the
+    value to the logical shape alone.  O(log D) extra ops; used only
+    for per-round scalar bookkeeping, never on the U- or D-hot path.
+    """
+    x = x.reshape(-1)
+    n = x.shape[0]
+    m = 1
+    while m < n:
+        m *= 2
+    if m != n:  # +0.0 padding is exact: a + 0.0 == a for finite a
+        x = jnp.concatenate([x, jnp.zeros((m - n,), x.dtype)])
+    while x.shape[0] > 1:
+        half = x.shape[0] // 2
+        x = x[:half] + x[half:]
+    return x[0] / n
+
+
 class Backend(enum.Enum):
     """Which implementation computes the OTA policy + aggregation."""
     AUTO = "auto"        # pallas iff cfg.use_kernels (legacy switch)
@@ -97,6 +123,10 @@ class FLConfig:
     scan: bool = False                # run() via one jax.lax.scan
     eval_every: int = 1
     seed: int = 0
+    worker_sharding: Optional[int] = None  # S shard blocks over workers;
+    # None = dense (U, D) engine.  See fl/worker_shard.py for semantics
+    # (S=1 is bit-exact vs dense; S>1 within f32 reassociation tolerance
+    # with a bit-exact Theorem-4 decision).
 
     def resolved_backend(self) -> Backend:
         b = Backend(self.backend) if not isinstance(self.backend, Backend) \
@@ -251,9 +281,14 @@ def build_ota_stage(cfg: FLConfig, k_i: jax.Array, D: int,
         # variance sigma2 / (den_ki * b)^2 (the B_t noise norm), so the
         # realized signal-to-noise at the PS is mean signal power over
         # mean noise power — 0-guarded for all-silent rounds
-        noise_pow = c.sigma2 * jnp.mean(
+        # pinned_mean + reciprocal-multiply keep this scalar byte-stable
+        # across compiled programs (batch padding, SPMD partitioning):
+        # the reduce order is pinned and the explicit reciprocal avoids
+        # XLA's approximate fused-divide lowering in vectorized contexts
+        noise_pow = c.sigma2 * pinned_mean(
             1.0 / jnp.maximum(den_ki * b, _EPS) ** 2)
-        snr = jnp.mean(new_flat ** 2) / jnp.maximum(noise_pow, _EPS)
+        snr = pinned_mean(new_flat ** 2) * (
+            1.0 / jnp.maximum(noise_pow, _EPS))
         return (new_flat, delta, chan_carry, jnp.mean(sel), jnp.mean(b),
                 a_t, b_t, jnp.mean(eta), snr)
 
@@ -280,7 +315,15 @@ def build_engine(task, X, Y, mask, k_i, cfg: FLConfig, params0,
       wmask:   optional (U,) real-worker mask for ragged cohorts (padded
                workers carry all-zero sample masks and k_i = 0); None
                keeps the unpadded graph.
+
+    ``cfg.worker_sharding`` routes to the worker-sharded twin engine
+    (``fl.worker_shard.build_sharded_engine``), which streams the round
+    in (U/S, D) blocks and never materializes the (U, D) update matrix.
     """
+    if cfg.worker_sharding is not None:
+        from repro.fl import worker_shard
+        return worker_shard.build_sharded_engine(
+            task, X, Y, mask, k_i, cfg, params0, wmask=wmask)
     flat0, unravel = ravel_pytree(params0)
     D = flat0.shape[0]
     U = k_i.shape[0]

@@ -35,6 +35,19 @@ def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
         L=L, sigma2=sigma2, block_d=block_d, interpret=interpret)
 
 
+def ota_shard_tx(w, h, h_est, cw, s, b, k_eff, k_i, p_max, wmask=None,
+                 block_d: int = 1024, interpret: bool | None = None):
+    """One worker-shard block's fused transmit partials (see
+    kernels.ota_round.ota_shard_tx): the (U_b, D) beta tile is rebuilt
+    in VMEM from the rank-1 ``(cw, s)`` factorization and only (D,)
+    partial reductions leave the kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _round.ota_shard_tx(
+        w, h, h_est, cw, s, b, k_eff, k_i, p_max, wmask,
+        block_d=block_d, interpret=interpret)
+
+
 def ota_aggregate(w, h, beta, b, noise, k_i, p_max,
                   block_d: int = 1024, interpret: bool | None = None,
                   h_est=None):

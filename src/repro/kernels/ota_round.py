@@ -113,6 +113,93 @@ def _kernel(w_ref, h_ref, hest_ref, wabs_ref, eta_ref, z_ref,
     sel_ref[...] = jnp.sum(best_beta, axis=0, keepdims=True)
 
 
+def _shard_tx_kernel(w_ref, h_ref, hest_ref, cw_ref, s_ref, b_ref,
+                     keff_ref, ki_ref, pmax_ref, wm_ref,
+                     y_ref, denk_ref, deni_ref, sel_ref):
+    w = w_ref[...]            # (U_b, blk) this shard block's local updates
+    h = h_ref[...]            # (U_b, 1)   true gains (rank-1)
+    h_est = hest_ref[...]     # (U_b, 1)   CSI estimate
+    cw = cw_ref[...]          # (U_b, 1)   Theorem-4 candidate coefficients
+    s = s_ref[...]            # (1, blk)   1 / (|w_{t-1}| + eta)
+    b = b_ref[...]            # (1, blk)   the DECIDED global power scaling
+    k_eff = keff_ref[...]     # (U_b, 1)
+    k_i = ki_ref[...]         # (U_b, 1)
+    p_max = pmax_ref[...]     # (U_b, 1)
+    wm = wm_ref[...]          # (U_b, 1)   real-worker mask (ones if none)
+
+    # eq.-44 membership, rebuilt in VMEM from the rank-1 factorization —
+    # op-for-op ``inflota.block_beta`` (same literal, same orientation),
+    # so the tile agrees bit-for-bit with the jnp sharded path
+    beta = (b <= cw * s * (1.0 + _TOL)).astype(w.dtype) * wm   # (U_b, blk)
+    # Algorithm 1 line 5, op-for-op ``power.tx_signal`` (beta inside the
+    # amp as there): workers invert the ESTIMATE, the MAC applies true h
+    amp = jnp.abs(beta * k_eff * b / h_est * w)
+    tx = beta * jnp.sign(w) * jnp.minimum(amp, jnp.sqrt(p_max))
+    y_ref[...] = jnp.sum(tx * h, axis=0, keepdims=True)        # (1, blk)
+    denk_ref[...] = jnp.sum(k_eff * beta, axis=0, keepdims=True)
+    deni_ref[...] = jnp.sum(k_i * beta, axis=0, keepdims=True)
+    sel_ref[...] = jnp.sum(beta, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ota_shard_tx(w, h, h_est, cw, s, b, k_eff, k_i, p_max, wmask=None,
+                 *, block_d: int = 1024, interpret: bool = True):
+    """One worker-shard block's transmit partials, fused in VMEM.
+
+    The worker-sharded engine (``fl/worker_shard.py``) decides ``b``
+    globally with the sharded Theorem-4 solver, then streams shard
+    blocks through this kernel: the (U_b, D) beta tile is rebuilt from
+    the rank-1 factorization ``(cw, s)`` inside VMEM (never written to
+    HBM) and only the four (D,) partial reductions leave the kernel.
+
+    Args:
+      w:      (U_b, D) the block's local parameter vectors.
+      h:      (U_b,) true channel gains (rank-1 — scalar per worker).
+      h_est:  (U_b,) CSI estimate the transmit inversion uses.
+      cw:     (U_b,) candidate coefficients |sqrt(P) h_est / k|.
+      s:      (D,)   the 1 / (|w_{t-1}| + eta) statistic.
+      b:      (D,)   decided per-entry power scaling (global optimum).
+      k_eff:  (U_b,) descale weights; k_i: (U_b,) true sample counts;
+      p_max:  (U_b,) power budgets; wmask: optional (U_b,) real-worker
+              mask (None = all real; multiplying by 1.0 is exact).
+
+    Returns (y_p, denk_p, deni_p, sel_p), each (D,): the block's
+    superposition partial (no noise) and the three beta reductions
+    (denk_p WITHOUT the * b — the combiner applies it after the
+    cross-shard sum, mirroring ``selection.make_decision``).
+    """
+    U_b, D = w.shape
+    dt = jnp.result_type(w.dtype, jnp.float32)
+    if wmask is None:
+        wmask = jnp.ones((U_b,), dt)
+    pad = (-D) % block_d
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        s = jnp.pad(s, (0, pad), constant_values=1.0)
+        b = jnp.pad(b, (0, pad))
+    Dp = D + pad
+    row = pl.BlockSpec((1, block_d), lambda i: (0, i))
+    col = pl.BlockSpec((U_b, 1), lambda i: (0, 0))
+    y, denk, deni, sel = pl.pallas_call(
+        _shard_tx_kernel,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((U_b, block_d), lambda i: (0, i)),   # w
+            col, col, col,                                    # h, h_est, cw
+            row, row,                                         # s, b
+            col, col, col, col,                    # k_eff, k_i, p_max, wm
+        ],
+        out_specs=[row, row, row, row],
+        out_shape=[jax.ShapeDtypeStruct((1, Dp), dt)] * 4,
+        interpret=interpret,
+    )(w.astype(dt), jnp.asarray(h, dt)[:, None],
+      jnp.asarray(h_est, dt)[:, None], jnp.asarray(cw, dt)[:, None],
+      jnp.asarray(s, dt)[None, :], jnp.asarray(b, dt)[None, :],
+      jnp.asarray(k_eff, dt)[:, None], jnp.asarray(k_i, dt)[:, None],
+      jnp.asarray(p_max, dt)[:, None], jnp.asarray(wmask, dt)[:, None])
+    return (y[0, :D], denk[0, :D], deni[0, :D], sel[0, :D])
+
+
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def ota_round(w, h, w_abs, eta, noise, k_eff, k_i, p_max, numer,
               *, h_est=None, L, sigma2, block_d: int = 1024,

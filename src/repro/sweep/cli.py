@@ -119,7 +119,7 @@ def build_spec(args) -> SweepSpec:
     for field in ("task", "U", "k_bar", "data_seed", "rounds", "lr",
                   "sigma2", "p_max", "eps", "rho", "L", "policy",
                   "channel", "case", "k_b", "backend", "eval_every",
-                  "seed"):
+                  "seed", "U_shards"):
         v = getattr(args, field)
         if v is not None:
             base[field] = v
@@ -217,7 +217,7 @@ def main(argv=None) -> int:
     for field in ("task", "policy", "channel", "case", "backend"):
         ap.add_argument(f"--{field}", default=None)
     for field in ("U", "k_bar", "data_seed", "rounds", "k_b",
-                  "eval_every", "seed"):
+                  "eval_every", "seed", "U_shards"):
         ap.add_argument(f"--{field.replace('_', '-')}", dest=field,
                         type=int, default=None)
     for field in ("lr", "sigma2", "p_max", "eps", "rho", "L"):

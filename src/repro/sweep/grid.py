@@ -104,6 +104,8 @@ DEFAULTS: Dict[str, Any] = {
     "eps": None,             # CSI error: channel factory kwarg (traced)
     "rho": None,             # fading correlation: factory kwarg (traced)
     "L": None,               # smoothness constant: None = constants default
+    "U_shards": None,        # worker-sharded engine: S shard blocks over
+                             # the worker axis; None = dense (U, D) engine
 }
 
 
@@ -205,8 +207,15 @@ def ragged_mergeable(cell: Dict[str, Any]) -> bool:
     sample's priority from ``fold_in(key, sample_index)``, so K_max
     padding never shifts a draw) and eq. 37's leading U counts real
     workers (``k_i > 0``) rather than the padded array extent.
+
+    Worker-sharded cells (``U_shards`` set) stay shape-exact: padding
+    the worker axis to a cohort U_max would change the shard blocking
+    (U_max / S workers per block instead of U / S), shifting the f32
+    reassociation of the per-shard superposition partials — the cohort
+    would no longer be bit-identical to the cells' standalone runs.
     """
-    return chan_lib.ragged_exact(cell["channel"])
+    return (chan_lib.ragged_exact(cell["channel"])
+            and cell.get("U_shards") is None)
 
 
 def _static_key(cell: Dict[str, Any], legacy: bool = False) -> Tuple:
@@ -301,7 +310,8 @@ def _cohort_cfg(static: Dict[str, Any], s: Dict[str, Any],
                     channel_model=model, constants=constants,
                     select_prob=static["select_prob"],
                     backend=static["backend"], scan=True,
-                    eval_every=static["eval_every"])
+                    eval_every=static["eval_every"],
+                    worker_sharding=static["U_shards"])
 
 
 def _pad_worker_axis(a: jnp.ndarray, u_max: int) -> jnp.ndarray:

@@ -1,0 +1,151 @@
+"""Hypothesis property suite for worker-sharded OTA rounds (ISSUE 9).
+
+Generated instances over (U, shards, policy, channel model, sigma2) pin
+the three contracts of ``fl/worker_shard``:
+
+  (a) a sharded round equals the dense engine — BIT-EXACT when the shard
+      blocking reproduces the dense shape (S = 1), within f32
+      reassociation tolerance otherwise;
+  (b) the distributed Theorem-4 search returns the identical selected
+      set, beta, and b as ``core/inflota.solve`` on every instance;
+  (c) per-worker randomness is restriction-stable across repartitions —
+      any two shard counts of the same config agree, and the key streams
+      of a prefix of workers do not depend on U.
+
+Deterministic (seeded) twins of these assertions run in tier-1 from
+``test_worker_sharded.py``; this module explores the generated-shape
+space and is skipped when hypothesis is not installed, like the other
+property modules.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel as chan
+from repro.core import inflota
+from repro.core.channel import ChannelConfig
+from repro.core.convergence import LearningConstants
+from repro.data.tasks import build_task_data
+from repro.fl.engine import FLConfig, build_engine
+from repro.fl.trainer import pad_workers
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _float32_mode():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+RTOL = 2e-6
+
+
+def _trajectory(cfg, U, seed):
+    task, workers, _ = build_task_data("linreg", U=U, k_bar=8,
+                                       data_seed=3)
+    X, Y, mask, k_i = pad_workers(workers)
+    params0 = task.init(jax.random.PRNGKey(7))
+    eng = build_engine(task, X, Y, mask, k_i, cfg, params0)
+    flat0, _ = ravel_pytree(params0)
+    st_ = eng.init(flat0, jax.random.PRNGKey(seed))
+    step = jax.jit(eng.step)
+    stats = []
+    for _ in range(2):
+        st_, s = step(st_)
+        stats.append(s)
+    return np.asarray(st_.flat), stats
+
+
+# ------------------------------------------------ (a) sharded == unsharded
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(4, 14),
+       st.integers(1, 6),
+       st.sampled_from(["inflota", "random", "all"]),
+       st.sampled_from([None, "exp_iid", "rayleigh", "gauss_markov"]),
+       st.sampled_from([1e-4, 1e-2, 1e-1]),
+       st.integers(0, 10_000))
+def test_property_sharded_round_matches_dense(U, S, policy, model, sigma2,
+                                              seed):
+    base = dict(rounds=2, lr=0.05, policy=policy, channel_model=model,
+                channel=ChannelConfig(sigma2=sigma2),
+                constants=LearningConstants(sigma2=sigma2))
+    f_dense, s_dense = _trajectory(FLConfig(**base), U, seed)
+    f_shard, s_shard = _trajectory(
+        FLConfig(**base, worker_sharding=S), U, seed)
+    if S == 1:
+        np.testing.assert_array_equal(f_shard, f_dense)
+    else:
+        np.testing.assert_allclose(f_shard, f_dense, rtol=RTOL, atol=1e-7)
+        # identical input state on round 0 -> bit-equal decision stats
+        for name in ("selected", "b_mean", "a_t", "b_t"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(s_dense[0], name)),
+                np.asarray(getattr(s_shard[0], name)))
+
+
+# ------------------------------------- (b) distributed search == solve
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8),
+       st.integers(0, 10_000), st.booleans(), st.booleans())
+def test_property_distributed_inflota_identical(n_shards, u_b, D, seed,
+                                                use_kb, mask_some):
+    U = n_shards * u_b
+    rng = np.random.default_rng(seed)
+    c = LearningConstants(sigma2=float(rng.uniform(1e-4, 1e-1)))
+    h = jnp.asarray(rng.exponential(size=(U,)).astype(np.float32) + 1e-3)
+    k_i = jnp.asarray(rng.integers(1, 40, size=(U,)).astype(np.float32))
+    if mask_some and U > 1:
+        drop = rng.integers(0, U, size=max(U // 3, 1))
+        k_i = k_i.at[drop].set(0.0)
+    p_max = jnp.where(k_i > 0, 10.0, 0.0)
+    w_abs = jnp.asarray(
+        rng.uniform(0.01, 2.0, size=(D,)).astype(np.float32))
+    eta = jnp.asarray(
+        rng.uniform(1e-4, 0.5, size=(D,)).astype(np.float32))
+    K_b = float(rng.integers(1, 10)) if use_kb else None
+    delta_prev = float(rng.uniform(0, 2))
+    ref = inflota.solve(h[:, None], k_i, w_abs, eta, p_max, c,
+                        delta_prev=delta_prev, K_b=K_b)
+    got = inflota.solve_sharded(h, k_i, w_abs, eta, p_max, c,
+                                n_shards=n_shards, delta_prev=delta_prev,
+                                K_b=K_b)
+    np.testing.assert_array_equal(np.asarray(ref.b), np.asarray(got.b))
+    np.testing.assert_array_equal(np.asarray(ref.r), np.asarray(got.r))
+    np.testing.assert_array_equal(np.asarray(ref.beta),
+                                  np.asarray(got.beta))
+
+
+# ---------------------------------------- (c) restriction-stable streams
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 40), st.integers(0, 10_000))
+def test_property_worker_keys_prefix_stable(u, extra, seed):
+    key = jax.random.PRNGKey(seed)
+    np.testing.assert_array_equal(
+        np.asarray(chan.worker_keys(key, u)),
+        np.asarray(chan.worker_keys(key, u + extra)[:u]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(2, 3), (2, 6), (3, 4), (4, 6)]),
+       st.sampled_from(["inflota", "random"]),
+       st.integers(0, 10_000))
+def test_property_repartitions_agree(shards, policy, seed):
+    U = 12
+    base = dict(rounds=2, lr=0.05, policy=policy,
+                constants=LearningConstants(sigma2=1e-4))
+    s1, s2 = shards
+    f1, _ = _trajectory(FLConfig(**base, worker_sharding=s1), U, seed)
+    f2, _ = _trajectory(FLConfig(**base, worker_sharding=s2), U, seed)
+    np.testing.assert_allclose(f1, f2, rtol=RTOL, atol=1e-7)
