@@ -297,6 +297,71 @@ def trace_overhead_rows(rounds: int = 400, reps: int = 3):
     ]
 
 
+def flight_overhead_rows(rounds: int = 400, reps: int = 3,
+                         every: int = 50):
+    """Flight taps on vs off over the fig4_5_6 grids (ISSUE-10).
+
+    BOTH arms run blocked (``checkpoint_every=every``) so the measured
+    delta is the tap itself — the io_callback per block plus the
+    host-side ring/sentinel/status work — not blocked-vs-whole-scan
+    execution.  Same methodology as :func:`trace_overhead_rows`: one
+    untimed warm-up pays the compiles, then ``reps`` alternating
+    untapped/tapped runs against fresh stores; committed walls are
+    medians, and tapped-vs-untapped store files must stay byte-identical
+    (the flight record lives under ``meta/``).
+    """
+    import os
+
+    from repro.obs import flight as flight_lib
+
+    specs = list(_fig_specs(rounds).values())
+    n = sum(len(cells(s)) for s in specs)
+
+    def one_run(tapped: bool) -> tuple[float, str]:
+        root = tempfile.mkdtemp()
+        if tapped:
+            flight_lib.install(flight_lib.flight_dir_for(root))
+        try:
+            t0 = time.time()
+            for spec in specs:
+                run_spec(spec, store=SweepStore(root),
+                         checkpoint_every=every, verbose=False)
+            return time.time() - t0, root
+        finally:
+            flight_lib.uninstall()
+
+    one_run(False)                       # warm-up: compiles paid here
+    t_off, t_on = [], []
+    root_off = root_on = None
+    for _ in range(reps):
+        w, root_off = one_run(False)
+        t_off.append(w)
+        w, root_on = one_run(True)
+        t_on.append(w)
+
+    def cell_bytes(root):
+        return {f: open(os.path.join(root, f), "rb").read()
+                for f in sorted(os.listdir(root)) if f.endswith(".json")}
+
+    off_files, on_files = cell_bytes(root_off), cell_bytes(root_on)
+    exact = sum(int(off_files[f] == on_files.get(f)) for f in off_files)
+    toff, ton = statistics.median(t_off), statistics.median(t_on)
+    pct = 100.0 * (ton - toff) / toff
+    return [
+        {"name": "flight_overhead_fig4_5_6_off",
+         "metric": "cells/median_wall_s",
+         "value": [n, round(toff, 2)]},
+        {"name": "flight_overhead_fig4_5_6_on",
+         "metric": "cells/median_wall_s",
+         "value": [n, round(ton, 2)]},
+        {"name": "flight_overhead_fig4_5_6_pct", "metric": "percent",
+         "value": round(pct, 2)},
+        {"name": "flight_overhead_bitexact",
+         "metric": f"files=={len(off_files)}",
+         "value": exact},
+    ]
+
+
 def run(rounds: int = 60, json_path: str | None = None,
         merge_rounds: int = 40, async_rounds: int | None = None,
         async_reps: int = 3):
@@ -336,6 +401,10 @@ def run(rounds: int = 60, json_path: str | None = None,
     rows += trace_overhead_rows(rounds=merge_rounds * 10
                                 if async_rounds is None else async_rounds,
                                 reps=async_reps)
+    rows += flight_overhead_rows(rounds=merge_rounds * 10
+                                 if async_rounds is None
+                                 else async_rounds,
+                                 reps=async_reps)
     if json_path:
         doc = {"host": platform.node(), "backend": "cpu",
                "grid": {"seeds": SEEDS, "policies": list(POLICIES),

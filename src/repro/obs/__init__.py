@@ -16,7 +16,14 @@ by every tier of the sweep stack:
     line under ``--log-json``, byte-identical plain text by default;
   * :mod:`repro.obs.report`  — ``python -m repro.obs report <store>``:
     per-cell realized A_t/B_t vs the Lemma-1 bound, CostBook
-    predicted-vs-measured accuracy, and the trace timeline.
+    predicted-vs-measured accuracy, and the trace timeline;
+  * :mod:`repro.obs.flight`  — in-flight round telemetry: io_callback
+    taps stream round/loss/SNR/A_t/B_t signals out of the *running*
+    blocked scan into per-cohort ring buffers + status files under
+    ``<store>/meta/flight/``, feed a divergence sentinel (NaN, Lemma-1
+    bound margin, SNR collapse) that aborts a diverging cohort between
+    blocks into quarantine, and power the daemon's ``GET /live`` plus
+    ``python -m repro.obs watch``.
 
 The cardinal invariant: observability NEVER changes result bytes.  All
 telemetry lands under ``<store>/meta/`` (excluded from every
@@ -24,4 +31,4 @@ byte-identity diff in CI), and a traced sweep store is ``diff -r``
 identical (excl. ``meta/``) to an untraced one.
 """
 
-from repro.obs import logs, metrics, trace  # noqa: F401  (public surface)
+from repro.obs import flight, logs, metrics, trace  # noqa: F401  (public surface)

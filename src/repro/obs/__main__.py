@@ -1,22 +1,96 @@
-"""CLI: ``python -m repro.obs <command> <store>``.
+"""CLI: ``python -m repro.obs <command> ...``.
 
 Commands:
 
-  report <store>            per-cell OTA telemetry, CostBook accuracy,
-                            trace summary (see :mod:`repro.obs.report`)
-  export <store> [-o PATH]  fold ``meta/trace/*.jsonl`` into one Chrome
-                            trace-event JSON file for Perfetto /
-                            ``chrome://tracing``
+  report <store>             per-cell OTA telemetry, CostBook accuracy,
+                             trace summary (see :mod:`repro.obs.report`)
+  export <store>.. [-o PATH] fold ``meta/trace/*.jsonl`` from one or
+                             more stores (or trace directories) into one
+                             merged Chrome trace-event JSON file for
+                             Perfetto / ``chrome://tracing`` — multiple
+                             stores get per-pid/host lanes and
+                             claim-steal flow arrows
+  watch <store|HOST:PORT>    live terminal view of in-flight cohorts
+                             (current round, rounds/sec, ETA, loss/SNR
+                             tail) — reads ``meta/flight/*.json`` status
+                             files of a ``--flight`` run, or a daemon's
+                             ``GET /live``
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import time
 
 from repro.obs import report as report_lib
 from repro.obs import trace as trace_lib
+
+
+def _fmt_eta(s) -> str:
+    if s is None:
+        return "-"
+    s = float(s)
+    if s >= 3600:
+        return f"{s / 3600:.1f}h"
+    if s >= 60:
+        return f"{s / 60:.1f}m"
+    return f"{s:.0f}s"
+
+
+def _watch_rows(target: str):
+    """One poll of the watch target -> list of flight snapshots.
+
+    A directory (a store or a flight dir) is read straight off disk; a
+    ``HOST:PORT`` is asked for ``GET /live``."""
+    if os.path.isdir(target) or ":" not in target:
+        from repro.obs import flight as flight_lib
+        return flight_lib.load_statuses(target)
+    from repro.serve import client as client_lib
+    addr = client_lib.normalize_addr(target)
+    doc = client_lib._call(f"{addr}/live")
+    rows = []
+    for co in doc.get("cohorts", []):
+        snap = co.get("flight") or {
+            "sig": co.get("sig"), "status": co.get("kind"),
+            "cells": co.get("cells"), "rounds": None, "r_done": None,
+            "rounds_per_s": None}
+        snap = dict(snap)
+        if snap.get("eta_s") is None:
+            snap["eta_s"] = co.get("eta_s")
+        rows.append(snap)
+    return rows
+
+
+def _render_watch(rows) -> str:
+    head = ["cohort", "status", "round", "r/s", "eta", "loss", "snr_db",
+            "sel"]
+    body = []
+    for s in rows:
+        tail = s.get("tail") or {}
+        loss = tail.get("loss")
+        snr = tail.get("snr_db")
+        sel = tail.get("selected")
+        rate = s.get("rounds_per_s")
+        r_done, rounds = s.get("r_done"), s.get("rounds")
+        body.append([
+            str(s.get("sig", "?"))[:12],
+            str(s.get("status", "?")),
+            (f"{r_done}/{rounds}" if r_done is not None else "-"),
+            (f"{rate:.1f}" if rate else "-"),
+            _fmt_eta(s.get("eta_s")),
+            (f"{sum(loss) / len(loss):.4g}" if loss else "-"),
+            (f"{min(snr):.1f}" if snr else "-"),
+            (f"{sum(sel) / len(sel):.1f}" if sel else "-"),
+        ])
+    if not body:
+        return "(no cohorts in flight)"
+    widths = [max(len(r[i]) for r in [head] + body)
+              for i in range(len(head))]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    return "\n".join(fmt.format(*r) for r in [head] + body)
 
 
 def main(argv=None) -> int:
@@ -32,10 +106,23 @@ def main(argv=None) -> int:
                     help="tail window (matches the sweep's summary tail)")
 
     ep = sub.add_parser("export", help="export Chrome trace-event JSON")
-    ep.add_argument("store", help="sweep store directory (or a trace "
-                                  "directory itself)")
+    ep.add_argument("store", nargs="+",
+                    help="sweep store directories (or trace directories "
+                         "themselves); several merge into one timeline "
+                         "with per-pid/host lanes")
     ep.add_argument("-o", "--out", default=None,
                     help="output path (default: stdout)")
+
+    wp = sub.add_parser("watch", help="live in-flight cohort view")
+    wp.add_argument("target",
+                    help="a --flight store directory, or a daemon's "
+                         "HOST:PORT")
+    wp.add_argument("--interval", type=float, default=1.0,
+                    metavar="SECONDS", help="poll interval (default 1)")
+    wp.add_argument("--once", action="store_true",
+                    help="render one snapshot and exit (scripting/CI)")
+    wp.add_argument("--no-clear", action="store_true",
+                    help="append snapshots instead of redrawing in place")
 
     args = p.parse_args(argv)
 
@@ -45,15 +132,15 @@ def main(argv=None) -> int:
         return 0
 
     if args.cmd == "export":
-        trace_dir = args.store
-        candidate = trace_lib.trace_dir_for(args.store)
-        import os
-        if os.path.isdir(candidate):
-            trace_dir = candidate
-        doc = trace_lib.export_chrome(trace_dir)
+        trace_dirs = []
+        for store in args.store:
+            candidate = trace_lib.trace_dir_for(store)
+            trace_dirs.append(candidate if os.path.isdir(candidate)
+                              else store)
+        doc = trace_lib.export_chrome(trace_dirs)
         if not doc["traceEvents"]:
-            print(f"# obs: no trace events under {trace_dir}",
-                  file=sys.stderr)
+            print(f"# obs: no trace events under "
+                  f"{', '.join(trace_dirs)}", file=sys.stderr)
         text = json.dumps(doc)
         if args.out:
             with open(args.out, "w") as f:
@@ -63,6 +150,27 @@ def main(argv=None) -> int:
         else:
             sys.stdout.write(text + "\n")
         return 0
+
+    if args.cmd == "watch":
+        while True:
+            try:
+                rows = _watch_rows(args.target)
+            except Exception as e:     # daemon gone / store missing
+                print(f"# obs watch: {type(e).__name__}: {e}",
+                      file=sys.stderr)
+                return 1
+            frame = _render_watch(rows)
+            if args.once or args.no_clear:
+                sys.stdout.write(frame + "\n")
+            else:
+                sys.stdout.write("\x1b[2J\x1b[H" + frame + "\n")
+            sys.stdout.flush()
+            if args.once:
+                return 0
+            if rows and all(r.get("status") in ("done", "diverged")
+                            for r in rows):
+                return 0
+            time.sleep(args.interval)
 
     return 2  # pragma: no cover
 

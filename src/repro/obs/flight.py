@@ -1,0 +1,580 @@
+"""In-flight cohort telemetry: the flight recorder.
+
+PR 8's tracing/metrics/report stack is post-hoc — it only sees a cohort
+after the compiled scan returns.  This module taps per-round signals
+(round index, loss proxy, realized A_t/B_t, eta, effective SNR,
+selected-worker count, NaN/Inf flags) out of the *running* computation
+via :func:`jax.experimental.io_callback` at the blocked-scan boundaries
+that ``--checkpoint-every`` already compiles (one tap per block, no new
+recompiles: the cohort token and round counter enter the jitted function
+as traced scalars).
+
+Each tapped cohort gets
+
+* a bounded ring buffer of tap records (:class:`FlightRecorder`),
+* an atomically-rewritten status file ``<store>/meta/flight/<sig>.json``
+  (under ``meta/`` so byte-identity diffs exclude it) that cross-process
+  readers — the daemon's ``/live`` endpoint and ``python -m repro.obs
+  watch`` — poll for current round, rounds/sec, ETA and tail metrics,
+* a :class:`DivergenceSentinel` evaluated at every tap: configurable
+  predicates (NaN/Inf in the carry, realized loss above the Lemma-1
+  recursion bound by a margin for K consecutive blocks, SNR collapse)
+  that abort the cohort *between* blocks by raising
+  :class:`CohortDiverged` — a non-retryable error the resilience layer
+  routes straight to quarantine with a structured ``diverged`` record.
+
+The zero-overhead contract from PR 8 stands: when no recorder is
+installed (:func:`enabled` is ``False``) the runtime builds the exact
+untapped computation — no ``io_callback`` appears in the jaxpr — and a
+tapped run's store is byte-identical to an untapped one (taps only read;
+everything they write lands under ``meta/``).
+
+Install via :func:`install` (the CLI's ``--flight`` / the daemon's
+``--flight``) or the environment: ``REPRO_FLIGHT`` names the flight
+directory and ``REPRO_SENTINEL`` the comma-separated predicate list.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+ENV_VAR = "REPRO_FLIGHT"
+SENTINEL_ENV_VAR = "REPRO_SENTINEL"
+FLIGHT_DIRNAME = os.path.join("meta", "flight")
+
+#: default sentinel when a recorder is installed without an explicit
+#: predicate list — NaN/Inf detection is always safe to arm.
+DEFAULT_PREDICATES = "nan"
+
+#: stat keys ``scan_experiment_block`` always returns; everything else in
+#: its output dict is a task metric history (loss proxy first).
+_STAT_KEYS = frozenset({"selected", "b", "a_t", "b_t", "eta", "snr"})
+
+#: preferred loss-proxy metric names, most gap-like first.
+_LOSS_ORDER = ("gap", "fval", "mse", "ce", "loss")
+
+_lock = threading.Lock()
+_rec: Optional["FlightRecorder"] = None
+
+
+def flight_dir_for(store_root: str) -> str:
+    """The canonical flight directory of a store (under ``meta/`` so
+    byte-identity diffs exclude it)."""
+    return os.path.join(store_root, FLIGHT_DIRNAME)
+
+
+# ------------------------------------------------------------- divergence
+
+class CohortDiverged(RuntimeError):
+    """A sentinel predicate tripped mid-cohort.
+
+    ``retryable = False``: re-running the same cells hits the same
+    divergence, so the resilience layer skips the backoff/retry loop and
+    quarantines immediately with ``doc["kind"] == "diverged"``.
+    """
+
+    retryable = False
+
+    def __init__(self, reason: str, *, sig: str, round: int,
+                 predicate: str, detail: Optional[Dict[str, Any]] = None):
+        super().__init__(
+            f"cohort {sig[:12]} diverged at round {round}: {reason}")
+        self.reason = reason
+        self.sig = sig
+        self.round = int(round)
+        self.predicate = predicate
+        self.diverged_doc: Dict[str, Any] = {
+            "reason": reason, "round": int(round),
+            "predicate": predicate, "sig": sig}
+        if detail:
+            self.diverged_doc.update(detail)
+
+
+@dataclass(frozen=True)
+class Predicate:
+    """One parsed sentinel predicate.
+
+    Grammar (comma-separated list, e.g. ``nan,gap_bound:10:3``):
+
+    * ``nan`` — any non-finite value in the parameter carry or the
+      realized A_t/B_t of the last round of a block; trips immediately.
+    * ``gap_bound:<margin>:<K>`` — realized loss above ``margin`` times
+      the Lemma-1 recursion bound (seeded from the first observed loss,
+      advanced per block with the realized block transfer
+      ``A_blk * g + B_blk``) for ``K`` consecutive evaluated blocks.
+    * ``snr_below:<db>:<K>`` — worst-cell effective SNR below ``<db>``
+      dB for ``K`` consecutive blocks.
+    """
+
+    kind: str           # "nan" | "gap_bound" | "snr_below"
+    threshold: float    # margin (gap_bound) or dB floor (snr_below)
+    streak: int         # consecutive-block count before tripping
+
+    @property
+    def text(self) -> str:
+        if self.kind == "nan":
+            return "nan"
+        return f"{self.kind}:{_fmt_num(self.threshold)}:{self.streak}"
+
+
+def _fmt_num(v: float) -> str:
+    return str(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+def parse_predicates(text: Optional[str]) -> Tuple[Predicate, ...]:
+    """Parse the comma-separated sentinel grammar (see :class:`Predicate`).
+
+    ``None``/empty parses to the default (``nan``)."""
+    out: List[Predicate] = []
+    for part in (text or DEFAULT_PREDICATES).split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        kind = bits[0]
+        if kind == "nan":
+            if len(bits) != 1:
+                raise ValueError(f"predicate 'nan' takes no args: {part!r}")
+            out.append(Predicate("nan", 0.0, 1))
+        elif kind in ("gap_bound", "snr_below"):
+            if len(bits) != 3:
+                raise ValueError(
+                    f"predicate {kind!r} needs <threshold>:<K>: {part!r}")
+            thr, k = float(bits[1]), int(bits[2])
+            if k < 1:
+                raise ValueError(f"K must be >= 1 in {part!r}")
+            out.append(Predicate(kind, thr, k))
+        else:
+            raise ValueError(
+                f"unknown sentinel predicate {kind!r} in {part!r} "
+                f"(know: nan, gap_bound:<margin>:<K>, snr_below:<db>:<K>)")
+    return tuple(out)
+
+
+class DivergenceSentinel:
+    """Evaluates the predicate list against each tap record.
+
+    Per-cohort mutable state (the Lemma-1 bound accumulator and the
+    per-predicate streak counters) lives here, one sentinel per
+    registered cohort."""
+
+    def __init__(self, predicates: Sequence[Predicate]):
+        self.predicates = tuple(predicates)
+        self._streak = [0] * len(self.predicates)
+        self._gap_bound: Optional[List[float]] = None   # per-cell
+
+    def observe(self, rec: Dict[str, Any]) -> Optional[Tuple[str, str]]:
+        """Feed one tap record; returns ``(reason, predicate_text)`` on
+        trip, else ``None``."""
+        loss = rec.get("loss")          # per-cell list or None
+        bound = self._advance_bound(rec, loss)
+        for i, p in enumerate(self.predicates):
+            if p.kind == "nan":
+                if not rec["finite"]:
+                    return ("non-finite carry or A_t/B_t", p.text)
+            elif p.kind == "gap_bound":
+                if loss is None or bound is None:
+                    continue            # no eval this block: streak holds
+                worst = max(ls / max(b, 1e-30)
+                            for ls, b in zip(loss, bound))
+                if worst > p.threshold:
+                    self._streak[i] += 1
+                    if self._streak[i] >= p.streak:
+                        return (f"loss {worst:.3g}x over Lemma-1 bound "
+                                f"(margin {p.threshold:g}) for "
+                                f"{p.streak} block(s)", p.text)
+                else:
+                    self._streak[i] = 0
+            elif p.kind == "snr_below":
+                snr_db = rec.get("snr_db")
+                if snr_db is None:
+                    continue
+                worst = min(snr_db)
+                if worst < p.threshold:
+                    self._streak[i] += 1
+                    if self._streak[i] >= p.streak:
+                        return (f"SNR collapsed to {worst:.1f} dB "
+                                f"(< {p.threshold:g} dB) for "
+                                f"{p.streak} block(s)", p.text)
+                else:
+                    self._streak[i] = 0
+        return None
+
+    def _advance_bound(self, rec: Dict[str, Any],
+                       loss: Optional[List[float]]
+                       ) -> Optional[List[float]]:
+        """Advance the realized Lemma-1 recursion ``g <- A_blk*g + B_blk``
+        (per cell); seeded from the first observed loss so the bound is
+        self-normalizing."""
+        if self._gap_bound is not None:
+            self._gap_bound = [
+                a * g + b for a, g, b in zip(
+                    rec["a_block"], self._gap_bound, rec["b_block"])]
+        elif loss is not None:
+            self._gap_bound = [float(v) for v in loss]
+            return None                  # seed block: never compare
+        return self._gap_bound
+
+
+# ---------------------------------------------------------- the recorder
+
+class _CohortFlight:
+    """Per-cohort in-flight state: ring buffer + sentinel + rate/ETA."""
+
+    def __init__(self, sig: str, *, rounds: int, cells: int, r_done: int,
+                 sentinel: DivergenceSentinel, capacity: int):
+        self.sig = sig
+        self.rounds = int(rounds)
+        self.cells = int(cells)
+        self.r_start = int(r_done)
+        self.r_done = int(r_done)
+        self.sentinel = sentinel
+        self.ring: Deque[Dict[str, Any]] = deque(maxlen=capacity)
+        self.status = "running"
+        self.started = time.time()
+        self.mono0 = time.monotonic()
+        self.samples: Deque[Tuple[float, int]] = deque(maxlen=capacity)
+        self.diverged: Optional[CohortDiverged] = None
+        self.last_write = 0.0          # monotonic; throttles disk I/O
+
+    def rate(self) -> Optional[float]:
+        """Realized rounds/sec from the tap window (first->last tap, so
+        the first block's compile wall is excluded once 2+ taps exist)."""
+        if len(self.samples) >= 2:
+            (t0, r0), (t1, r1) = self.samples[0], self.samples[-1]
+            if t1 > t0 and r1 > r0:
+                return (r1 - r0) / (t1 - t0)
+        if self.samples:
+            t, r = self.samples[-1]
+            dt = t - self.mono0
+            if dt > 0 and r > self.r_start:
+                return (r - self.r_start) / dt
+        return None
+
+    def eta_s(self) -> Optional[float]:
+        rate = self.rate()
+        if rate is None or rate <= 0 or self.status != "running":
+            return None
+        return (self.rounds - self.r_done) / rate
+
+
+class FlightRecorder:
+    """Process-global sink for in-flight cohort taps.
+
+    ``register`` hands out an integer token per cohort run; the token is
+    passed into the jitted block function as a traced scalar and routed
+    back here by the ``io_callback`` (:func:`_tap_dispatch`).  Every tap
+    appends to the cohort's ring buffer, feeds its sentinel, and rewrites
+    the cohort's status file atomically."""
+
+    #: minimum seconds between status-file rewrites of one cohort.  The
+    #: readers (obs watch, /live) poll at ~1s, so sub-second staleness
+    #: is invisible to them — but an unthrottled rewrite per tap is
+    #: most of the tap's cost on fast blocks.  Trips, finishes, and
+    #: flushes always write.
+    WRITE_INTERVAL_S = 0.25
+
+    def __init__(self, flight_dir: str, *, capacity: int = 256,
+                 predicates: Sequence[Predicate] = ()):
+        os.makedirs(flight_dir, exist_ok=True)
+        self.dir = flight_dir
+        self.capacity = int(capacity)
+        self.predicates = tuple(predicates) or parse_predicates(None)
+        self._lock = threading.Lock()
+        self._flights: Dict[int, _CohortFlight] = {}
+        self._by_sig: Dict[str, int] = {}
+        self._next = 0
+        #: optional hook called with each tap snapshot (the daemon wires
+        #: this to its rounds/sec histogram); must not raise.
+        self.on_tap: Optional[Callable[[Dict[str, Any]], None]] = None
+
+    # -------------------------------------------------------- registration
+    def register(self, sig: str, *, rounds: int, cells: int,
+                 r_done: int = 0) -> int:
+        """Open (or reopen) the flight of one cohort run; returns the
+        token the block tap is keyed by."""
+        with self._lock:
+            tok = self._next
+            self._next += 1
+            cf = _CohortFlight(
+                sig, rounds=rounds, cells=cells, r_done=r_done,
+                sentinel=DivergenceSentinel(self.predicates),
+                capacity=self.capacity)
+            self._flights[tok] = cf
+            self._by_sig[sig] = tok
+        self._write_status(cf)
+        return tok
+
+    # --------------------------------------------------------------- taps
+    def _tap(self, token: int, r_next: int, payload: Dict[str, Any]) -> None:
+        """The io_callback target (numpy-land).  Ring-append, sentinel,
+        status rewrite."""
+        with self._lock:
+            cf = self._flights.get(int(token))
+        if cf is None or cf.status != "running":
+            return
+        rec = _payload_record(int(r_next), payload)
+        cf.r_done = int(r_next)
+        cf.samples.append((time.monotonic(), int(r_next)))
+        cf.ring.append(rec)
+        trip = cf.sentinel.observe(rec)
+        if trip is not None:
+            reason, pred = trip
+            cf.status = "diverged"
+            cf.diverged = CohortDiverged(
+                reason, sig=cf.sig, round=cf.r_done, predicate=pred,
+                detail={"cells": cf.cells})
+        # throttle the per-tap disk write; terminal states always land
+        now = time.monotonic()
+        if cf.status != "running" \
+                or now - cf.last_write >= self.WRITE_INTERVAL_S:
+            self._write_status(cf)
+        hook = self.on_tap
+        if hook is not None:
+            try:
+                hook(self._snap_one(cf))
+            except Exception:
+                pass
+
+    def check(self, token: int) -> Optional[CohortDiverged]:
+        """The runtime's between-block probe: the tripped sentinel's
+        exception, if any (call :func:`barrier` first so the block's tap
+        has landed)."""
+        cf = self._flights.get(int(token))
+        return cf.diverged if cf is not None else None
+
+    def finish(self, token: int, status: str = "done") -> None:
+        cf = self._flights.get(int(token))
+        if cf is None or cf.status == "diverged":
+            return
+        cf.status = status
+        self._write_status(cf)
+
+    # ---------------------------------------------------------- snapshots
+    def _snap_one(self, cf: _CohortFlight) -> Dict[str, Any]:
+        tail = cf.ring[-1] if cf.ring else None
+        snap: Dict[str, Any] = {
+            "sig": cf.sig, "status": cf.status, "cells": cf.cells,
+            "rounds": cf.rounds, "r_done": cf.r_done,
+            "started": cf.started, "updated": time.time(),
+            "rounds_per_s": cf.rate(), "eta_s": cf.eta_s(),
+        }
+        if tail is not None:
+            snap["tail"] = {k: tail[k] for k in
+                            ("loss_key", "loss", "snr_db", "selected",
+                             "a_last", "b_last", "eta_last", "finite")
+                            if k in tail}
+        if cf.diverged is not None:
+            snap["diverged"] = dict(cf.diverged.diverged_doc)
+        return snap
+
+    def snapshot(self, sig: Optional[str] = None) -> Any:
+        """One cohort's live snapshot (by signature), or all of them."""
+        with self._lock:
+            if sig is not None:
+                tok = self._by_sig.get(sig)
+                cf = self._flights.get(tok) if tok is not None else None
+                return self._snap_one(cf) if cf is not None else None
+            return [self._snap_one(cf) for cf in self._flights.values()]
+
+    def rounds_remaining(self) -> int:
+        """Sum of rounds not yet flown across running cohorts (the
+        ``rounds_in_flight`` gauge)."""
+        with self._lock:
+            return sum(cf.rounds - cf.r_done
+                       for cf in self._flights.values()
+                       if cf.status == "running")
+
+    # -------------------------------------------------------- persistence
+    def _write_status(self, cf: _CohortFlight) -> None:
+        """Atomic rewrite of ``<dir>/<sig>.json`` — what ``obs watch
+        <store>`` and heal runs read cross-process."""
+        path = os.path.join(self.dir, f"{cf.sig}.json")
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self._snap_one(cf), f, indent=1, default=float)
+            os.replace(tmp, path)
+            cf.last_write = time.monotonic()
+        except OSError:
+            pass
+
+    def flush(self) -> None:
+        """Rewrite every cohort's status file (shutdown hook)."""
+        with self._lock:
+            flights = list(self._flights.values())
+        for cf in flights:
+            self._write_status(cf)
+
+
+def _payload_record(r_next: int, payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Convert one io_callback payload (numpy arrays) to the plain-python
+    ring record the sentinel and status file consume."""
+    def lst(key: str) -> List[float]:
+        return [float(v) for v in payload[key]]
+
+    finite = bool(payload["finite"].all())
+    a_last, b_last = lst("a_last"), lst("b_last")
+    finite = finite and all(math.isfinite(v) for v in a_last + b_last)
+    rec: Dict[str, Any] = {
+        "r_done": int(r_next), "finite": finite,
+        "a_last": a_last, "b_last": b_last,
+        "eta_last": lst("eta_last"),
+        "selected": [int(v) for v in payload["selected_last"]],
+        "snr_db": [10.0 * math.log10(max(float(v), 1e-30))
+                   for v in payload["snr_last"]],
+        "a_block": lst("a_block"), "b_block": lst("b_block"),
+    }
+    metrics = payload.get("metrics") or {}
+    if metrics:
+        names = sorted(metrics)
+        loss_key = next((k for k in _LOSS_ORDER if k in metrics),
+                        next((k for k in names if k != "accuracy"),
+                             names[0]))
+        rec["loss_key"] = loss_key
+        rec["loss"] = [float(v) for v in metrics[loss_key]]
+        rec["metrics"] = {k: [float(v) for v in metrics[k]]
+                          for k in names}
+    return rec
+
+
+# ------------------------------------------------------------ the tap fn
+
+def _tap_dispatch(token: Any, r_next: Any, payload: Any) -> None:
+    """Module-level io_callback target: routes to the installed recorder
+    (a late lookup, so the jitted function never captures a recorder and
+    a re-install between blocks just works)."""
+    rec = _rec
+    if rec is not None:
+        rec._tap(int(token), int(r_next), payload)
+
+
+def wrap_block(base: Callable[..., Any]) -> Callable[..., Any]:
+    """Wrap one (already vmapped) cohort block function with the flight
+    tap.
+
+    The wrapped function takes two extra *traced* i32 scalars — the
+    cohort token and the absolute round index the block ends at — so one
+    compile per ``(length, eval_offsets)`` key serves every block and
+    every cohort, exactly like the untapped path.  The payload is a few
+    in-graph reductions over outputs the block already produces; the
+    block's own results flow through untouched, so tapped and untapped
+    stores stay byte-identical.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import io_callback
+
+    def tapped(state, batch, token, r_next):
+        state, out = base(state, batch)
+        flat = state.flat
+        a, b = out["a_t"], out["b_t"]
+        # suffix products prod_{s>t} a_s -> realized block transfer
+        # (A_blk, B_blk) for the host-side Lemma-1 recursion
+        rev = jnp.cumprod(a[:, ::-1], axis=-1)
+        sp = jnp.concatenate(
+            [jnp.ones_like(a[:, :1]), rev[:, :-1]], axis=-1)[:, ::-1]
+        payload = {
+            "finite": jnp.isfinite(flat).all(
+                axis=tuple(range(1, flat.ndim))),
+            "a_last": a[:, -1], "b_last": b[:, -1],
+            "eta_last": out["eta"][:, -1],
+            "snr_last": out["snr"][:, -1],
+            "selected_last": out["selected"][:, -1],
+            "a_block": jnp.prod(a, axis=-1),
+            "b_block": jnp.sum(b * sp, axis=-1),
+            "metrics": {k: v[:, -1] for k, v in out.items()
+                        if k not in _STAT_KEYS and v.ndim == 2
+                        and v.shape[-1] > 0},
+        }
+        io_callback(_tap_dispatch, None, token, r_next, payload)
+        return state, out
+
+    return tapped
+
+
+def barrier() -> None:
+    """Wait for outstanding io_callbacks (so a between-block sentinel
+    check sees the block's own tap)."""
+    import jax
+    jax.effects_barrier()
+
+
+# ------------------------------------------------------- module-level API
+
+def install(flight_dir: str, *, predicates: Optional[str] = None,
+            capacity: int = 256) -> FlightRecorder:
+    """Install a process-global flight recorder writing under
+    ``flight_dir``.  Idempotent per directory (like ``trace.install``);
+    ``predicates`` is the sentinel grammar string (default: ``nan``)."""
+    global _rec
+    preds = parse_predicates(predicates)
+    with _lock:
+        if _rec is not None and _rec.dir == flight_dir \
+                and _rec.predicates == preds:
+            return _rec
+        _rec = FlightRecorder(flight_dir, capacity=capacity,
+                              predicates=preds)
+        return _rec
+
+
+def install_from_env() -> Optional[FlightRecorder]:
+    """Install from ``$REPRO_FLIGHT`` (a flight directory) with
+    ``$REPRO_SENTINEL`` predicates — how subprocess runs opt in."""
+    d = os.environ.get(ENV_VAR)
+    if not d:
+        return None
+    return install(d, predicates=os.environ.get(SENTINEL_ENV_VAR))
+
+
+def uninstall() -> None:
+    global _rec
+    with _lock:
+        if _rec is not None:
+            _rec.flush()
+        _rec = None
+
+
+def installed() -> Optional[FlightRecorder]:
+    return _rec
+
+
+def enabled() -> bool:
+    return _rec is not None
+
+
+def flush() -> None:
+    rec = _rec
+    if rec is not None:
+        rec.flush()
+
+
+# ----------------------------------------------------------- store reads
+
+def load_statuses(store_root_or_dir: str) -> List[Dict[str, Any]]:
+    """Read every cohort status file from a store (or a flight dir
+    directly) — the cross-process view ``obs watch <store>`` renders."""
+    d = store_root_or_dir
+    if not os.path.basename(os.path.normpath(d)) == "flight":
+        d = flight_dir_for(store_root_or_dir)
+    out: List[Dict[str, Any]] = []
+    if not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(d, fn)) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if isinstance(doc, dict):
+            out.append(doc)
+    out.sort(key=lambda s: s.get("started", 0))
+    return out

@@ -162,10 +162,14 @@ def costbook_rows(store_root: str) -> List[Dict[str, Any]]:
 
 def trace_summary(store_root: str) -> Dict[str, Any]:
     """Aggregate the trace directory (if any): per-span-name counts and
-    wall totals, instant-event tallies, and the covered wall window."""
+    wall totals, instant-event tallies, the covered wall window, and —
+    for multi-process traces (elastic multi-host runs, a daemon next to
+    CLI runs) — the contributing host/pid lanes."""
     from repro.obs import trace as trace_lib
 
-    events = trace_lib.load_events(trace_lib.trace_dir_for(store_root))
+    trace_dir = trace_lib.trace_dir_for(store_root)
+    events = trace_lib.load_events(trace_dir)
+    sync = trace_lib.load_sync(trace_dir)
     spans: Dict[str, Dict[str, float]] = {}
     instants: Dict[str, int] = {}
     t_min, t_max = None, None
@@ -185,9 +189,12 @@ def trace_summary(store_root: str) -> Dict[str, Any]:
             s["max_s"] = max(s["max_s"], dur_s)
         elif ev.get("ph") == "i":
             instants[name] = instants.get(name, 0) + 1
+    pids = sorted({e["pid"] for e in events if "pid" in e})
     return {"events": len(events), "spans": spans, "instants": instants,
             "wall_s": ((t_max - t_min) / 1e6
-                       if t_min is not None else None)}
+                       if t_min is not None else None),
+            "processes": len(pids),
+            "hosts": sorted({s["host"] for s in sync.values()})}
 
 
 # ------------------------------------------------------------- rendering
@@ -267,6 +274,10 @@ def render(store_root: str, *, gap0: float = 1.0,
     if ts["events"]:
         if ts["wall_s"] is not None:
             lines.append(f"covered wall: {_f(ts['wall_s'], 3)}s")
+        if ts.get("processes", 0) > 1:
+            hosts = ", ".join(ts["hosts"]) or "?"
+            lines.append(f"merged lanes: {ts['processes']} process(es) "
+                         f"on {hosts}")
         body = [[name, str(int(s["count"])), _f(s["total_s"], 3),
                  _f(s["total_s"] / s["count"], 4), _f(s["max_s"], 3)]
                 for name, s in sorted(ts["spans"].items())]

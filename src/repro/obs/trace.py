@@ -9,9 +9,13 @@ Chrome trace-event shape so export is a pure re-wrap:
      "pid": <os pid>, "tid": <thread id>, "args": {...}}
 
 ``ph`` is ``"X"`` for complete spans and ``"i"`` for instant events.
-:func:`export_chrome` folds every ``*.jsonl`` file in a trace directory
-into one ``{"traceEvents": [...]}`` document loadable in Perfetto or
-``chrome://tracing``.
+:func:`export_chrome` folds every ``*.jsonl`` file in one or more trace
+directories into one ``{"traceEvents": [...]}`` document loadable in
+Perfetto or ``chrome://tracing``.  Each recorder opens its file with a
+``clock_sync`` metadata record (host, epoch vs monotonic clock at open),
+so a merged multi-process export can name per-pid/host lanes, correct
+same-host wall-clock skew against the monotonic clock, and draw flow
+arrows from a cohort claim's original holder to the host that stole it.
 
 The module-level API (:func:`span` / :func:`event`) is what the runtime
 is instrumented with: when no recorder is installed both are no-ops
@@ -30,9 +34,11 @@ from __future__ import annotations
 import contextlib
 import json
 import os
+import socket
 import threading
 import time
-from typing import Any, Dict, Iterator, List, Optional
+from typing import (Any, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 ENV_VAR = "REPRO_TRACE"
 TRACE_DIRNAME = os.path.join("meta", "trace")
@@ -84,6 +90,16 @@ class TraceRecorder:
                 break
             except FileExistsError:
                 seq += 1
+        # clock-sync metadata opens every file: pairs this process's
+        # wall clock with its monotonic clock so a multi-process merge
+        # can align same-host lanes skew-free (``export_chrome``) and
+        # label lanes by host.  ``ph: "M"`` records are metadata — the
+        # default ``load_events`` skips them.
+        self._emit({"name": "clock_sync", "ph": "M", "pid": self.pid,
+                    "tid": 0, "ts": int(time.time() * 1e6),
+                    "args": {"host": socket.gethostname(),
+                             "epoch_us": int(time.time() * 1e6),
+                             "mono_us": int(time.monotonic() * 1e6)}})
 
     # ------------------------------------------------------------ recording
     def _emit(self, rec: Dict[str, Any]) -> None:
@@ -241,43 +257,173 @@ def profile(profile_dir: Optional[str]) -> Iterator[None]:
 
 # ---------------------------------------------------------------- reading
 
-def load_events(trace_dir: str) -> List[Dict[str, Any]]:
-    """Every record from every ``*.jsonl`` file under ``trace_dir``,
-    sorted by timestamp.  Unparseable lines (a live writer's partial
-    tail) are skipped — reading a trace must never fail a run."""
+def _load_file(path: str) -> List[Dict[str, Any]]:
     out: List[Dict[str, Any]] = []
-    if not os.path.isdir(trace_dir):
+    try:
+        f = open(path)
+    except OSError:
         return out
-    for fn in sorted(os.listdir(trace_dir)):
-        if not fn.endswith(".jsonl"):
+    with f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict):
+                out.append(rec)
+    return out
+
+
+def _trace_files(trace_dirs: Union[str, Sequence[str]]) -> List[str]:
+    dirs = ([trace_dirs] if isinstance(trace_dirs, str)
+            else list(trace_dirs))
+    paths: List[str] = []
+    for d in dirs:
+        if not os.path.isdir(d):
             continue
-        with open(os.path.join(trace_dir, fn)) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    continue
-                if isinstance(rec, dict):
-                    out.append(rec)
+        paths.extend(os.path.join(d, fn) for fn in sorted(os.listdir(d))
+                     if fn.endswith(".jsonl"))
+    return paths
+
+
+def load_events(trace_dirs: Union[str, Sequence[str]],
+                include_meta: bool = False) -> List[Dict[str, Any]]:
+    """Every record from every ``*.jsonl`` file under one or more trace
+    directories, sorted by timestamp.  Unparseable lines (a live
+    writer's partial tail) are skipped — reading a trace must never fail
+    a run.  Metadata records (``ph: "M"``, e.g. ``clock_sync``) are
+    skipped unless ``include_meta``."""
+    out: List[Dict[str, Any]] = []
+    for path in _trace_files(trace_dirs):
+        for rec in _load_file(path):
+            if include_meta or rec.get("ph") != "M":
+                out.append(rec)
     out.sort(key=lambda r: r.get("ts", 0))
     return out
 
 
-def export_chrome(trace_dir: str) -> Dict[str, Any]:
-    """Fold a trace directory into one Chrome trace-event document.
+def load_sync(trace_dirs: Union[str, Sequence[str]]
+              ) -> Dict[int, Dict[str, Any]]:
+    """Per-pid clock-sync metadata (host, epoch/monotonic pairing at
+    recorder open) from one or more trace directories."""
+    out: Dict[int, Dict[str, Any]] = {}
+    for path in _trace_files(trace_dirs):
+        for rec in _load_file(path):
+            if rec.get("ph") == "M" and rec.get("name") == "clock_sync":
+                args = rec.get("args") or {}
+                pid = rec.get("pid")
+                if isinstance(pid, int) and pid not in out:
+                    out[pid] = {"host": args.get("host", "?"),
+                                "epoch_us": args.get("epoch_us"),
+                                "mono_us": args.get("mono_us")}
+    return out
+
+
+#: trace-event names that anchor claim-steal flow arrows: the source
+#: side last touched the claim; the destination side took it over.
+_FLOW_SRC = ("claim.acquire", "claim.release")
+_FLOW_DST = ("claim.steal", "session.steal")
+
+
+def _claim_flows(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Chrome flow-event pairs (``ph: "s"`` / ``"f"``) from one process's
+    claim on a cohort to the process that stole it — the work-stealing
+    handoff drawn as an arrow across lanes."""
+    last_touch: Dict[str, Dict[str, Any]] = {}
+    flows: List[Dict[str, Any]] = []
+    fid = 0
+    for ev in events:
+        sig = (ev.get("args") or {}).get("sig")
+        if not sig:
+            continue
+        name = ev.get("name")
+        if name in _FLOW_SRC:
+            last_touch[sig] = ev
+        elif name in _FLOW_DST:
+            src = last_touch.get(sig)
+            if src is not None and src.get("pid") != ev.get("pid"):
+                fid += 1
+                common = {"cat": "claim", "name": "claim-steal",
+                          "id": fid, "args": {"sig": sig}}
+                flows.append({**common, "ph": "s", "pid": src["pid"],
+                              "tid": src.get("tid", 0),
+                              "ts": src.get("ts", 0)})
+                flows.append({**common, "ph": "f", "bp": "e",
+                              "pid": ev.get("pid"),
+                              "tid": ev.get("tid", 0),
+                              "ts": ev.get("ts", 0)})
+            # the thief now holds the claim: further steals arrow from it
+            last_touch[sig] = ev
+    return flows
+
+
+def export_chrome(trace_dirs: Union[str, Sequence[str]]
+                  ) -> Dict[str, Any]:
+    """Fold one or more trace directories into one Chrome trace-event
+    document.
 
     The records are already trace-event shaped; the export re-bases
     timestamps to the earliest event (Perfetto prefers small ``ts``) and
-    wraps them with the container keys viewers expect.
+    wraps them with the container keys viewers expect.  When the trace
+    spans multiple processes (an elastic multi-host run, a daemon next
+    to CLI runs), the merge additionally
+
+    * aligns same-host lanes on their monotonic-clock offsets (each
+      file's ``clock_sync`` record pairs the wall and monotonic clocks
+      at open, so wall-clock skew between two processes of one host
+      cancels out),
+    * names per-pid lanes ``<host> pid <pid>`` via ``process_name``
+      metadata, and
+    * draws claim-steal flow arrows (``ph: "s"/"f"``) from the process
+      that held a cohort's claim to the one that stole it.
     """
-    events = load_events(trace_dir)
+    events = load_events(trace_dirs)
+    sync = load_sync(trace_dirs)
+    pids = sorted({e["pid"] for e in events if "pid" in e})
+
+    if len(pids) > 1 and sync:
+        # same-host skew correction: every process records
+        # (epoch - mono) at open; on one host the monotonic clocks share
+        # a base, so differences in that offset ARE wall-clock skew
+        by_host: Dict[str, List[Tuple[int, float]]] = {}
+        for pid, s in sync.items():
+            if s["epoch_us"] is not None and s["mono_us"] is not None:
+                by_host.setdefault(s["host"], []).append(
+                    (pid, s["epoch_us"] - s["mono_us"]))
+        shift: Dict[int, float] = {}
+        for host, offsets in by_host.items():
+            ref = min(off for _, off in offsets)
+            for pid, off in offsets:
+                if off != ref:
+                    shift[pid] = off - ref
+        if shift:
+            for e in events:
+                if "ts" in e and e.get("pid") in shift:
+                    e["ts"] = e["ts"] - shift[e["pid"]]
+            events.sort(key=lambda r: r.get("ts", 0))
+
+    if len(pids) > 1:
+        events.extend(_claim_flows(events))
+        for sort_index, pid in enumerate(pids):
+            host = sync.get(pid, {}).get("host", "?")
+            events.append({"name": "process_name", "ph": "M",
+                           "pid": pid,
+                           "args": {"name": f"{host} pid {pid}"}})
+            events.append({"name": "process_sort_index", "ph": "M",
+                           "pid": pid,
+                           "args": {"sort_index": sort_index}})
+
     t0 = min((e["ts"] for e in events if "ts" in e), default=0)
     for e in events:
         if "ts" in e:
             e["ts"] = e["ts"] - t0
+    hosts = sorted({s["host"] for s in sync.values()}) or None
     return {"traceEvents": events, "displayTimeUnit": "ms",
             "otherData": {"source": "repro.obs.trace",
-                          "epoch_us": t0}}
+                          "epoch_us": t0,
+                          **({"hosts": hosts,
+                              "processes": len(pids)}
+                             if len(pids) > 1 else {})}}

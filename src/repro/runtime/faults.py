@@ -39,6 +39,11 @@ Points and their args:
                               (drives retry exhaustion -> quarantine)
     flaky_cohort:K:M          fail the first M dispatches of cohort K,
                               then succeed (drives retry-then-recover)
+    nan_at_block:N            poison the scan carry with NaN after the
+                              Nth checkpointed block (probe point: the
+                              runtime asks via ``tripped`` and corrupts
+                              its own state, driving the flight
+                              recorder's divergence sentinel)
 
 Examples::
 
@@ -63,7 +68,8 @@ _EXIT_CODE = 43          # distinctive: "died by injected fault"
 
 _POINTS = ("crash_before_put", "crash_mid_put", "corrupt_tmp_write",
            "delay_resolve", "crash_after_block", "crash_after_claim",
-           "kill_at_cohort", "fail_cohort", "flaky_cohort")
+           "kill_at_cohort", "fail_cohort", "flaky_cohort",
+           "nan_at_block")
 
 
 class InjectedFault(RuntimeError):
@@ -139,6 +145,19 @@ class FaultPlan:
             if count == s.n:
                 self._trip(s)
 
+    def tripped(self, point: str) -> bool:
+        """Counter probe: True on the Nth call, without raising.
+
+        For faults where the *call site* applies the damage (e.g.
+        ``nan_at_block`` corrupting the scan carry) rather than this
+        module interrupting control flow.
+        """
+        specs = [s for s in self.specs if s.point == point]
+        if not specs:
+            return False
+        count = self._bump(point)
+        return any(count == s.n for s in specs)
+
     def delay(self, point: str) -> None:
         """Sleep for the spec's arg seconds (every invocation)."""
         for s in self.specs:
@@ -207,3 +226,8 @@ def delay(point: str) -> None:
 def corrupt(point: str, payload: str) -> str:
     plan = active()
     return plan.corrupt(point, payload) if plan else payload
+
+
+def tripped(point: str) -> bool:
+    plan = active()
+    return plan.tripped(point) if plan else False

@@ -61,6 +61,7 @@ class QuarantineLog:
         os.makedirs(self.dir, exist_ok=True)
         doc = {
             "signature": sig,
+            "kind": "error",
             "static": store_lib.jsonable(cohort.static),
             "cells": [store_lib.jsonable(c) for c in cohort.cells],
             "cell_hashes": [store_lib.cell_hash(c, cache_key)
@@ -72,6 +73,13 @@ class QuarantineLog:
                 "traceback": traceback.format_exc(),
             },
         }
+        # a tripped divergence sentinel attaches its structured verdict
+        # (reason, round, predicate) — the record every live surface and
+        # the CI NaN-injection check key off
+        diverged = getattr(exc, "diverged_doc", None)
+        if isinstance(diverged, dict):
+            doc["kind"] = "diverged"
+            doc["diverged"] = dict(diverged)
         path = os.path.join(self.dir, f"{sig}.json")
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
         try:
@@ -139,7 +147,10 @@ def run_with_retry(execute: Callable[[int], Any], *, policy: RetryPolicy,
         try:
             result = execute(attempt)
         except Exception as e:
-            if attempt < policy.max_retries:
+            # non-retryable failures (a divergence sentinel trip: the
+            # same cells diverge again on every retry) skip the backoff
+            # loop and quarantine immediately
+            if getattr(e, "retryable", True) and attempt < policy.max_retries:
                 pause = policy.sleep_for(attempt)
                 if verbose:
                     print(f"# runtime: {label} failed "

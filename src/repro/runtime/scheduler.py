@@ -286,7 +286,8 @@ class _Batch:
                 self._attempts.get(entry.order, 0) + 1
             n = self._attempts[entry.order]
         if n <= self.policy.max_retries and not self.stopped \
-                and not self.engine.closed:
+                and not self.engine.closed \
+                and getattr(exc, "retryable", True):
             pause = self.policy.sleep_for(n - 1)
             if self.verbose:
                 print(f"# runtime: cohort {entry.order + 1} failed "

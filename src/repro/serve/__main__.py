@@ -18,10 +18,12 @@ Then query it:
 from __future__ import annotations
 
 import argparse
+import atexit
 import os
+import signal
 import sys
 
-from repro.obs import logs, trace
+from repro.obs import flight, logs, trace
 from repro.serve import api as api_lib
 from repro.serve import session as session_lib
 
@@ -66,6 +68,22 @@ def main(argv=None) -> int:
                          "<store>/meta/trace (export with "
                          "'python -m repro.obs export <store>'; never "
                          "changes result bytes)")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    metavar="R",
+                    help="run cohorts in checkpointed R-round blocks "
+                         "(resumable; also where --flight taps live)")
+    ap.add_argument("--flight", action="store_true",
+                    help="stream in-flight round telemetry under "
+                         "<store>/meta/flight and serve it on GET /live "
+                         "(implies blocked execution — defaults "
+                         "--checkpoint-every to 25; never changes "
+                         "result bytes)")
+    ap.add_argument("--sentinel", default=None, metavar="PRED[,PRED..]",
+                    help="divergence sentinel predicates for --flight "
+                         "(default 'nan'): nan | gap_bound:<margin>:<K> "
+                         "| snr_below:<db>:<K>; a trip aborts the "
+                         "cohort between blocks into quarantine "
+                         "(implies --flight)")
     ap.add_argument("--log-json", action="store_true",
                     help="emit one JSON object per log line (ts, level, "
                          "component, event, ...) instead of plain "
@@ -97,13 +115,32 @@ def main(argv=None) -> int:
                   plain="REPRO_FAULTS is set — fault injection active",
                   stream=sys.stderr)
 
-    service = session_lib.SweepService(
-        args.store, jobs=jobs, dispatch_ahead=args.dispatch_ahead,
-        devices=args.devices, lease_timeout=args.lease_timeout,
-        max_retries=args.max_retries, retry_backoff=args.retry_backoff,
-        max_queued_s_per_client=args.max_queued_s,
-        poll_s=args.poll_interval, verbose=not args.quiet)
+    if args.sentinel is not None:
+        args.flight = True
+    try:
+        service = session_lib.SweepService(
+            args.store, jobs=jobs, dispatch_ahead=args.dispatch_ahead,
+            devices=args.devices, lease_timeout=args.lease_timeout,
+            max_retries=args.max_retries,
+            retry_backoff=args.retry_backoff,
+            max_queued_s_per_client=args.max_queued_s,
+            poll_s=args.poll_interval, verbose=not args.quiet,
+            checkpoint_every=args.checkpoint_every,
+            flight=args.flight, sentinel=args.sentinel)
+    except ValueError as e:          # bad --sentinel grammar
+        ap.error(str(e))
     server = api_lib.make_server(service, host, int(port_s))
+
+    # graceful flush on orderly stops: the trace recorder buffers up to
+    # 64 records / 2s — a SIGTERM (systemd stop, docker stop, CI kill)
+    # must not lose that tail.  SystemExit unwinds serve_forever into
+    # the finally block below; atexit covers exits that bypass it.
+    def _on_term(signum, frame):
+        raise SystemExit(0)
+
+    signal.signal(signal.SIGTERM, _on_term)
+    atexit.register(flight.flush)
+    atexit.register(trace.flush)
     bound = server.server_address
     # stdout, flushed: scripts (tests, CI) parse the bound address
     logs.raw(f"listening on {bound[0]}:{bound[1]}")
@@ -124,6 +161,7 @@ def main(argv=None) -> int:
         server.server_close()
         service.close()
         trace.flush()
+        flight.flush()
     return 0
 
 

@@ -7,6 +7,10 @@ Endpoints (see docs/service.md for the full reference):
                                400 bad spec, 429 admission-rejected
     GET  /sweep/<id>           request status (``?results=1`` inlines
                                the per-cell result documents)
+    GET  /sweep/<id>/live      one request's in-flight cohorts: current
+                               round, rounds/sec, tail metrics, ETA
+                               (flight-rate-scaled, CostBook fallback)
+    GET  /live                 same document for every in-flight cohort
     GET  /cell/<hash>          one store entry by content hash
     GET  /stats                service/engine/store observability (JSON;
                                ``?format=prometheus`` for text)
@@ -102,6 +106,17 @@ def make_server(service: session_lib.SweepService, host: str,
                         or q.get("format") == "prometheus":
                     return self._text(200, service.metrics_text())
                 return self._json(200, service.stats())
+            if path == "/live":
+                return self._json(200, service.live())
+            if path.startswith("/sweep/") and path.endswith("/live"):
+                # must match BEFORE the generic /sweep/<id> handler,
+                # which would read the whole suffix as a request id
+                rid = path[len("/sweep/"):-len("/live")]
+                try:
+                    return self._json(200, service.live(rid=rid))
+                except KeyError:
+                    return self._json(404,
+                                      {"error": f"unknown request {rid}"})
             if path.startswith("/sweep/"):
                 rid = path[len("/sweep/"):]
                 snap = service.request_snapshot(

@@ -39,6 +39,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Set
 
+from repro.obs import flight as flight_lib
 from repro.obs import metrics as metrics_lib
 from repro.obs import trace as obs_trace
 from repro.runtime import resilience
@@ -178,7 +179,9 @@ class SweepService:
                  lease_timeout: float = 60.0,
                  max_retries: int = 1, retry_backoff: float = 0.5,
                  max_queued_s_per_client: float = 600.0,
-                 poll_s: float = 1.0, verbose: bool = False):
+                 poll_s: float = 1.0, verbose: bool = False,
+                 checkpoint_every: Optional[int] = None,
+                 flight: bool = False, sentinel: Optional[str] = None):
         self.store = store_lib.SweepStore(store_root)
         # startup hygiene: debris from crashed writers older than one
         # lease cannot belong to a live process (satellite fix — the
@@ -206,6 +209,19 @@ class SweepService:
             max_queued_s_per_client=max_queued_s_per_client)
         self.max_retries = max_retries
         self.retry_backoff = retry_backoff
+        # in-flight telemetry: a flight recorder taps round-level signals
+        # out of the engine's blocked cohorts; /live and the
+        # rounds-in-flight gauge read it.  Taps exist only at block
+        # boundaries, so --flight implies blocked execution.
+        if flight and checkpoint_every is None:
+            checkpoint_every = 25
+        self.checkpoint_every = checkpoint_every
+        self.flight = None
+        if flight:
+            self.flight = flight_lib.install(
+                flight_lib.flight_dir_for(store_root),
+                predicates=sentinel)
+            self.flight.on_tap = self._on_tap
         self.started = time.time()
 
         self._lock = threading.RLock()
@@ -258,6 +274,19 @@ class SweepService:
         reg.gauge("store_cells", fn=lambda: len(self.store))
         reg.gauge("admission_max_queued_s_per_client",
                   fn=lambda: self.admission.max_queued_s)
+        reg.gauge("rounds_in_flight",
+                  "rounds not yet flown across running tapped cohorts",
+                  fn=lambda: (self.flight.rounds_remaining()
+                              if self.flight is not None else 0))
+
+    def _on_tap(self, snap: Dict[str, Any]) -> None:
+        """Flight-recorder hook (engine thread): fold each tap's realized
+        rate into the per-cohort rounds/sec histogram."""
+        rate = snap.get("rounds_per_s")
+        if rate is not None:
+            self.registry.histogram(
+                "cohort_rounds_per_s",
+                "realized rounds/sec per flight tap").observe(rate)
 
     def _hit_rate(self) -> float:
         served = self._counters.get("cells_requested", 0)
@@ -411,6 +440,7 @@ class SweepService:
             [inf.cohort for inf in inflights], sink=sink,
             do_eval=spec.eval, tail=spec.tail, costs=self.costs,
             store_root=self.store.root, cache_key=cache_key,
+            checkpoint_every=self.checkpoint_every,
             max_retries=self.max_retries,
             retry_backoff=self.retry_backoff,
             quarantine=True, verbose=self.verbose,
@@ -527,6 +557,49 @@ class SweepService:
     def cell(self, h: str) -> Optional[Dict[str, Any]]:
         return self.store.get_by_hash(h)
 
+    def live(self, rid: Optional[str] = None) -> Dict[str, Any]:
+        """The /live document: every in-flight cohort (or one request's)
+        with its flight snapshot, realized rounds/sec, and an ETA —
+        flight-rate-scaled when taps exist, CostBook walls otherwise.
+
+        Raises ``KeyError`` for an unknown ``rid`` (the API layer's 404).
+        """
+        with self._lock:
+            if rid is not None and rid not in self._requests:
+                raise KeyError(rid)
+            inflights = [
+                inf for inf in self._inflight.values()
+                if rid is None or any(r.id == rid
+                                      for r in inf.subscribers)]
+            rows = []
+            for inf in inflights:
+                snap = (self.flight.snapshot(inf.sig)
+                        if self.flight is not None else None)
+                eta, source = None, None
+                if snap is not None and snap.get("eta_s") is not None:
+                    eta, source = snap["eta_s"], "flight"
+                else:
+                    wall = self.costs.per_cell_wall(
+                        grid_lib.cohort_static_hash(inf.cohort))
+                    if wall is not None:
+                        eta = wall * len(inf.cohort)
+                        if snap and snap.get("rounds"):
+                            # scale the whole-cohort wall by what's left
+                            frac = 1.0 - (snap.get("r_done", 0)
+                                          / snap["rounds"])
+                            eta *= max(frac, 0.0)
+                        source = "costbook"
+                rows.append({
+                    "sig": inf.sig, "kind": inf.kind,
+                    "cells": len(inf.cohort),
+                    "requests": sorted(r.id for r in inf.subscribers),
+                    "flight": snap, "eta_s": eta, "eta_source": source,
+                })
+        return {"ts": time.time(),
+                "rounds_in_flight": (self.flight.rounds_remaining()
+                                     if self.flight is not None else 0),
+                "cohorts": rows}
+
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             counters = dict(self._counters)
@@ -579,3 +652,5 @@ class SweepService:
             self.board.stop_heartbeat()
             for sig in self.board.held():
                 self.board.release(sig)
+            if self.flight is not None:
+                self.flight.flush()

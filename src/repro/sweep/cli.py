@@ -292,6 +292,21 @@ def main(argv=None) -> int:
                          "<store>/meta/trace (requires --store; export "
                          "with 'python -m repro.obs export <store>'; "
                          "never changes result bytes)")
+    ap.add_argument("--flight", action="store_true",
+                    help="stream in-flight round telemetry (current "
+                         "round, rounds/sec, loss/SNR tail, divergence "
+                         "flags) under <store>/meta/flight while cohorts "
+                         "run; watch with 'python -m repro.obs watch "
+                         "<store>' (requires --store; implies blocked "
+                         "execution — defaults --checkpoint-every to "
+                         "25; never changes result bytes)")
+    ap.add_argument("--sentinel", default=None, metavar="PRED[,PRED..]",
+                    help="divergence sentinel predicates for --flight "
+                         "(default 'nan'); grammar: nan | "
+                         "gap_bound:<margin>:<K> | snr_below:<db>:<K>. "
+                         "A trip aborts the cohort between blocks and "
+                         "quarantines it with a structured 'diverged' "
+                         "record (implies --flight)")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of cohort "
                          "execution into DIR (open with Perfetto / "
@@ -325,6 +340,8 @@ def main(argv=None) -> int:
                          ("--quarantine", args.quarantine),
                          ("--fault", bool(args.fault)),
                          ("--trace", args.trace),
+                         ("--flight", args.flight),
+                         ("--sentinel", args.sentinel is not None),
                          ("--profile", args.profile is not None)):
             if on:
                 ap.error(f"{flag} is incompatible with --submit: the "
@@ -338,10 +355,17 @@ def main(argv=None) -> int:
                          ("--checkpoint-every",
                           args.checkpoint_every is not None),
                          ("--quarantine", args.quarantine),
-                         ("--trace", args.trace)):
+                         ("--trace", args.trace),
+                         ("--flight", args.flight),
+                         ("--sentinel", args.sentinel is not None)):
             if on:
                 ap.error(f"{flag} needs --store (it operates on the "
                          f"result store on disk)")
+    if args.sentinel is not None:
+        args.flight = True
+    if args.flight and args.checkpoint_every is None:
+        # taps live at blocked-scan boundaries; give them blocks
+        args.checkpoint_every = 25
     if args.fault:
         from repro.runtime import faults
         try:
@@ -356,6 +380,21 @@ def main(argv=None) -> int:
                   file=sys.stderr)
     else:
         trace_lib.install_from_env()   # $REPRO_TRACE opt-in
+    if args.flight:
+        from repro.obs import flight as flight_lib
+        try:
+            flight_lib.install(flight_lib.flight_dir_for(args.store),
+                               predicates=args.sentinel)
+        except ValueError as e:
+            ap.error(str(e))
+        if not args.quiet:
+            print(f"# flight: streaming round telemetry under "
+                  f"{flight_lib.flight_dir_for(args.store)} (sentinel: "
+                  f"{args.sentinel or flight_lib.DEFAULT_PREDICATES})",
+                  file=sys.stderr)
+    else:
+        from repro.obs import flight as flight_lib
+        flight_lib.install_from_env()  # $REPRO_FLIGHT opt-in
     registry = metrics_lib.Registry(namespace="repro_sweep")
 
     jobs = args.jobs
@@ -465,6 +504,8 @@ def main(argv=None) -> int:
             print(f"# metrics: snapshot written to {args.metrics_out}",
                   file=sys.stderr)
     trace_lib.flush()
+    from repro.obs import flight as flight_lib
+    flight_lib.flush()
     if quarantined and args.submit:
         print(f"# FAILED: {quarantined} cell(s) quarantined/failed by "
               f"the service:", file=sys.stderr)

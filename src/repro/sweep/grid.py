@@ -577,8 +577,17 @@ def run_cohort_blocks(cohort: Cohort, *, every: int, ckpt_dir: str,
 
     Runs unsharded (single jit per block shape); mesh-sharded cohorts
     use the whole-scan path.
+
+    When a flight recorder is installed (``obs.flight``), each block's
+    jitted function carries an ``io_callback`` tap streaming round-level
+    signals into the recorder, and the recorder's divergence sentinel is
+    probed between blocks — a trip deletes the checkpoint directory
+    (the carry is poisoned; it must not resume) and raises the
+    non-retryable :class:`~repro.obs.flight.CohortDiverged`.  With no
+    recorder the built functions are the exact untapped computation.
     """
     from repro.checkpoint import store as ckpt
+    from repro.obs import flight as flight_lib
     from repro.runtime import faults
 
     if every <= 0:
@@ -617,6 +626,11 @@ def run_cohort_blocks(cohort: Cohort, *, every: int, ckpt_dir: str,
         # step, and a leftover later step would shadow this run's saves
         shutil.rmtree(ckpt_dir, ignore_errors=True)
 
+    flight_rec = flight_lib.installed()
+    tok = (flight_rec.register(sig, rounds=rounds, cells=len(cohort),
+                               r_done=r_done)
+           if flight_rec is not None else None)
+
     fns: Dict[Tuple, Any] = {}   # (length, offsets) -> compiled block
     while r_done < rounds:
         n = min(every, rounds - r_done)
@@ -624,13 +638,38 @@ def run_cohort_blocks(cohort: Cohort, *, every: int, ckpt_dir: str,
                      if (r_done + j) % eval_every == 0)
         fn_key = (n, offs)
         if fn_key not in fns:
-            fns[fn_key] = jax.jit(jax.vmap(phases.block_one(n, offs)))
-        state, out = jax.block_until_ready(fns[fn_key](state,
-                                                       phases.batch))
+            base = jax.vmap(phases.block_one(n, offs))
+            fns[fn_key] = jax.jit(flight_lib.wrap_block(base)
+                                  if tok is not None else base)
+        if tok is None:
+            state, out = jax.block_until_ready(fns[fn_key](state,
+                                                           phases.batch))
+        else:
+            # token + absolute round index enter as traced scalars so one
+            # compile per (length, offsets) serves every block and cohort
+            state, out = jax.block_until_ready(
+                fns[fn_key](state, phases.batch, jnp.int32(tok),
+                            jnp.int32(r_done + n)))
         out = {k: np.asarray(v) for k, v in out.items()}
         hist = {k: (np.concatenate([hist[k], out[k]], axis=1)
                     if k in hist else out[k]) for k in out}
         r_done += n
+        if tok is not None:
+            flight_lib.barrier()        # the block's tap has landed
+            err = flight_rec.check(tok)
+            if err is not None:
+                # poisoned carry: a resume from this dir would diverge
+                # again, and the healing re-run must start clean
+                shutil.rmtree(ckpt_dir, ignore_errors=True)
+                obs_trace.event("cohort.diverged", sig=sig,
+                                round=err.round, reason=err.reason,
+                                predicate=err.predicate)
+                raise err
+            obs_trace.event("flight.block", cat="flight", sig=sig,
+                            r_done=r_done, rounds=rounds)
+        if faults.tripped("nan_at_block"):
+            state = state._replace(
+                flat=jnp.full_like(state.flat, jnp.nan))
         # checkpoint every boundary incl. the last: a crash between the
         # final block and the store write then resumes from here instead
         # of recomputing the whole cohort
@@ -641,6 +680,8 @@ def run_cohort_blocks(cohort: Cohort, *, every: int, ckpt_dir: str,
                         rounds=rounds)
         faults.fire("crash_after_block")
 
+    if tok is not None:
+        flight_rec.finish(tok)
     final = dict(hist)
     final["flat"] = np.asarray(state.flat)
     return finalize_cohort(cohort, final, tail=tail)

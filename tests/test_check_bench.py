@@ -1,0 +1,120 @@
+"""The benchmark regression gate (``tools/check_bench.py``).
+
+CI reruns a benchmark suite and gates on the committed BENCH_*.json;
+these tests pin the gate's verdicts: wall/rate regressions beyond
+tolerance fail, overhead percentages fail only against an explicit cap,
+bit-exactness may never drop, and row-set drift warns without failing.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_TOOL = os.path.join(os.path.dirname(__file__), "..", "tools",
+                     "check_bench.py")
+_spec = importlib.util.spec_from_file_location("check_bench", _TOOL)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump({"host": "x", "rows": rows}, f)
+    return str(path)
+
+
+ROWS = [
+    {"name": "ota_aggregate_D1024", "metric": "us_per_call",
+     "value": 100.0},
+    {"name": "sweep_vec_runs_per_s_n32", "metric": "runs/s",
+     "value": 4.0},
+    {"name": "cohorts_grid_after",
+     "metric": "cells/cohorts/compile_s/runs_per_s",
+     "value": [8, 2, 10.0, 1.0]},
+    {"name": "trace_overhead_fig4_5_6_pct", "metric": "percent",
+     "value": 2.0},
+    {"name": "sweep_bitexact", "metric": "cells==32", "value": 32},
+]
+
+
+def _mutate(name, value):
+    rows = [dict(r) for r in ROWS]
+    for r in rows:
+        if r["name"] == name:
+            r["value"] = value
+    return rows
+
+
+def _run(tmp_path, fresh_rows, *extra):
+    base = _write(tmp_path / "base.json", ROWS)
+    fresh = _write(tmp_path / "fresh.json", fresh_rows)
+    return check_bench.main([base, fresh, *extra])
+
+
+def test_identical_passes(tmp_path, capsys):
+    assert _run(tmp_path, ROWS) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_wall_regression_fails_beyond_tolerance(tmp_path, capsys):
+    # +20% wall is inside the default 25% slack
+    assert _run(tmp_path,
+                _mutate("ota_aggregate_D1024", 120.0)) == 0
+    # +50% is a regression
+    assert _run(tmp_path,
+                _mutate("ota_aggregate_D1024", 150.0)) == 1
+    assert "wall regressed" in capsys.readouterr().err
+
+
+def test_rate_regression_fails(tmp_path, capsys):
+    assert _run(tmp_path,
+                _mutate("sweep_vec_runs_per_s_n32", 3.5)) == 0
+    assert _run(tmp_path,
+                _mutate("sweep_vec_runs_per_s_n32", 1.0)) == 1
+    assert "rate regressed" in capsys.readouterr().err
+
+
+def test_composite_rows_compare_componentwise(tmp_path, capsys):
+    # compile wall doubles -> the composite row's wall component fails
+    assert _run(tmp_path,
+                _mutate("cohorts_grid_after", [8, 2, 25.0, 1.0])) == 1
+    err = capsys.readouterr().err
+    assert "cohorts_grid_after/compile_s" in err
+    # a changed cell count fails as suite divergence, not as perf
+    assert _run(tmp_path,
+                _mutate("cohorts_grid_after", [9, 2, 10.0, 1.0])) == 1
+    assert "count" in capsys.readouterr().err
+
+
+def test_pct_rows_gate_only_against_cap(tmp_path, capsys):
+    worse = _mutate("trace_overhead_fig4_5_6_pct", 9.0)
+    # informational without a cap, even when it grew
+    assert _run(tmp_path, worse) == 0
+    assert _run(tmp_path, worse, "--pct-cap", "3") == 1
+    assert "over the 3% cap" in capsys.readouterr().err
+    assert _run(tmp_path, ROWS, "--pct-cap", "3") == 0
+
+
+def test_bitexact_may_never_drop(tmp_path, capsys):
+    assert _run(tmp_path, _mutate("sweep_bitexact", 31)) == 1
+    assert "bit-exact" in capsys.readouterr().err
+
+
+def test_row_drift_warns_but_passes(tmp_path, capsys):
+    fresh = [dict(r) for r in ROWS[1:]]          # one row gone...
+    fresh.append({"name": "brand_new_row", "metric": "runs/s",
+                  "value": 1.0})                 # ...one row born
+    assert _run(tmp_path, fresh) == 0
+    out = capsys.readouterr().out
+    assert "only in baseline: ota_aggregate_D1024" in out
+    assert "new row (no baseline): brand_new_row" in out
+
+
+def test_unusable_input_is_exit_2(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{\"rows\": \"nope\"}")
+    base = _write(tmp_path / "base.json", ROWS)
+    assert check_bench.main([base, str(bad)]) == 2
+    assert check_bench.main([str(tmp_path / "missing.json"), base]) == 2

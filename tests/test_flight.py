@@ -1,0 +1,460 @@
+"""In-flight cohort telemetry (ISSUE 10): flight taps, divergence
+sentinels, live surfaces, and the zero-overhead contract.
+
+The load-bearing invariants under test:
+
+* **Zero overhead when off** — with no flight recorder installed the
+  runtime builds the exact untapped computation: no ``io_callback``
+  appears in the block jaxpr, and no ``meta/flight`` directory is born.
+* **Byte identity when on** — a tapped blocked run's store is
+  byte-identical to the untapped blocked run; everything the flight
+  recorder writes lands under ``meta/``.
+* **Divergence routes to quarantine** — an injected NaN carry trips the
+  ``nan`` sentinel between blocks, aborts the cohort non-retryably in
+  well under the full-run wall, leaves a structured ``diverged``
+  quarantine record, and a healing re-run reproduces the uninterrupted
+  store exactly.
+* **Live surfaces agree** — the daemon's ``/live``, the
+  ``rounds_in_flight`` gauge, and ``python -m repro.obs watch`` all read
+  the same recorder state.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import flight, trace
+from repro.obs import __main__ as obs_main
+from repro.runtime import faults
+from repro.serve import api as api_lib
+from repro.serve import client as client_lib
+from repro.serve import session as session_lib
+from repro.sweep import SweepSpec, SweepStore, cells, cohorts, run_spec
+from repro.sweep.grid import prepare_cohort_phases
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _flight_clean():
+    """Flight/trace recorders and fault plans are process-global; never
+    leak them between tests."""
+    yield
+    flight.uninstall()
+    trace.uninstall()
+    faults.install(None)
+
+
+U, K_BAR = 4, 6
+
+SPEC = SweepSpec(axes={"seed": (0, 1)},
+                 base={"task": "linreg", "U": U, "k_bar": K_BAR,
+                       "rounds": 6})
+SPEC_DIV = SweepSpec(axes={"seed": (0, 1)},
+                     base={"task": "linreg", "U": U, "k_bar": K_BAR,
+                           "rounds": 20})
+
+_ENV = dict(os.environ, JAX_PLATFORMS="cpu",
+            PYTHONPATH=os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", "src")]
+                + sys.path))
+
+
+def _store_files(root):
+    return {f: open(os.path.join(root, f), "rb").read()
+            for f in sorted(os.listdir(root)) if f.endswith(".json")}
+
+
+def _one_cohort(spec):
+    (cohort,) = cohorts(cells(spec))
+    return cohort
+
+
+# ----------------------------------------------------------- the grammar
+
+def test_parse_predicates_grammar():
+    # default (None / empty) arms NaN detection
+    assert flight.parse_predicates(None) == flight.parse_predicates("")
+    (p,) = flight.parse_predicates(None)
+    assert (p.kind, p.streak) == ("nan", 1)
+
+    preds = flight.parse_predicates("nan, gap_bound:10:3,snr_below:-5:2")
+    assert [p.kind for p in preds] == ["nan", "gap_bound", "snr_below"]
+    assert preds[1].threshold == 10.0 and preds[1].streak == 3
+    assert preds[2].threshold == -5.0 and preds[2].streak == 2
+    # text round-trips through the parser
+    assert flight.parse_predicates(
+        ",".join(p.text for p in preds)) == preds
+
+    for bad in ("nan:1", "gap_bound:10", "gap_bound:10:0",
+                "snr_below", "warp_core_breach:1:1"):
+        with pytest.raises(ValueError):
+            flight.parse_predicates(bad)
+
+
+def _rec_for(loss, *, a=0.9, b=0.0, snr_db=20.0, finite=True):
+    return {"finite": finite, "loss": [loss], "a_block": [a],
+            "b_block": [b], "snr_db": [snr_db]}
+
+
+def test_sentinel_gap_bound_streak_and_reset():
+    s = flight.DivergenceSentinel(
+        flight.parse_predicates("gap_bound:2:2"))
+    # seed block establishes the bound; never compares
+    assert s.observe(_rec_for(1.0)) is None
+    # bound is now 0.9; loss within margin -> no trip, streak stays 0
+    assert s.observe(_rec_for(1.0)) is None
+    # two consecutive blocks over margin trip on the SECOND
+    assert s.observe(_rec_for(50.0)) is None
+    reason, pred = s.observe(_rec_for(50.0))
+    assert "Lemma-1" in reason and pred == "gap_bound:2:2"
+
+    # a healthy block in between resets the streak
+    s2 = flight.DivergenceSentinel(
+        flight.parse_predicates("gap_bound:2:2"))
+    s2.observe(_rec_for(1.0))               # seed
+    assert s2.observe(_rec_for(50.0)) is None    # streak 1
+    assert s2.observe(_rec_for(0.1)) is None     # reset
+    assert s2.observe(_rec_for(50.0)) is None    # streak 1 again
+
+
+def test_sentinel_snr_and_nan():
+    s = flight.DivergenceSentinel(
+        flight.parse_predicates("snr_below:-10:2"))
+    s.observe(_rec_for(1.0, snr_db=0.0))
+    assert s.observe(_rec_for(1.0, snr_db=-20.0)) is None
+    reason, pred = s.observe(_rec_for(1.0, snr_db=-20.0))
+    assert "SNR" in reason and pred == "snr_below:-10:2"
+
+    n = flight.DivergenceSentinel(flight.parse_predicates("nan"))
+    assert n.observe(_rec_for(1.0)) is None
+    reason, pred = n.observe(_rec_for(1.0, finite=False))
+    assert "non-finite" in reason and pred == "nan"
+
+
+# --------------------------------------------- zero-overhead contract
+
+def test_block_jaxpr_has_no_io_callback_when_off():
+    """Satellite: the tap is structurally absent from the computation
+    the untapped runtime compiles — not merely disabled."""
+    cohort = _one_cohort(SPEC)
+    phases = prepare_cohort_phases(cohort)
+    state = jax.jit(jax.vmap(phases.init_one))(phases.batch)
+    n = 2
+    eval_every = int(cohort.static["eval_every"])
+    offs = tuple(j for j in range(n) if j % eval_every == 0)
+    base = jax.vmap(phases.block_one(n, offs))
+
+    plain = str(jax.make_jaxpr(base)(state, phases.batch))
+    assert "io_callback" not in plain
+
+    tapped = flight.wrap_block(base)
+    wrapped = str(jax.make_jaxpr(tapped)(
+        state, phases.batch, jnp.int32(0), jnp.int32(n)))
+    assert "io_callback" in wrapped
+
+
+def test_module_noop_when_uninstalled(tmp_path, monkeypatch):
+    assert not flight.enabled() and flight.installed() is None
+    flight.flush()                        # no-op, no raise
+    monkeypatch.delenv(flight.ENV_VAR, raising=False)
+    assert flight.install_from_env() is None
+    assert flight.load_statuses(str(tmp_path)) == []
+
+    # an untapped blocked run never creates the flight directory
+    store = tmp_path / "store"
+    run_spec(SPEC, store=SweepStore(str(store)), checkpoint_every=2)
+    assert not os.path.exists(flight.flight_dir_for(str(store)))
+
+
+def test_install_is_idempotent_per_dir(tmp_path):
+    a = flight.install(str(tmp_path / "f"))
+    assert flight.install(str(tmp_path / "f")) is a
+    b = flight.install(str(tmp_path / "f"), predicates="nan,snr_below:0:1")
+    assert b is not a and flight.installed() is b
+    monkey_dir = str(tmp_path / "g")
+    os.environ[flight.ENV_VAR] = monkey_dir
+    try:
+        c = flight.install_from_env()
+        assert c is not None and c.dir == monkey_dir
+    finally:
+        del os.environ[flight.ENV_VAR]
+
+
+# ------------------------------------------------- byte identity + live
+
+def test_tapped_run_byte_identical_and_watch(tmp_path, capsys):
+    ref = tmp_path / "ref"
+    run_spec(SPEC, store=SweepStore(str(ref)), checkpoint_every=2)
+
+    tapped = tmp_path / "tap"
+    flight.install(flight.flight_dir_for(str(tapped)))
+    results = run_spec(SPEC, store=SweepStore(str(tapped)),
+                       checkpoint_every=2)
+    assert all(r is not None for r in results)
+
+    # the cardinal invariant: taps never change result bytes, and all
+    # flight output lives under meta/
+    assert _store_files(str(tapped)) == _store_files(str(ref))
+    fdir = flight.flight_dir_for(str(tapped))
+    assert os.path.isdir(fdir) and fdir.startswith(
+        os.path.join(str(tapped), "meta"))
+
+    (status,) = flight.load_statuses(str(tapped))
+    assert status["status"] == "done"
+    assert status["r_done"] == status["rounds"] == 6
+    assert status["cells"] == 2
+    tail = status["tail"]
+    assert tail["finite"] is True
+    assert len(tail["snr_db"]) == 2 and len(tail["a_last"]) == 2
+    assert tail["loss_key"] == "mse" and len(tail["loss"]) == 2
+
+    # the in-process snapshot agrees with the on-disk status
+    (snap,) = flight.installed().snapshot()
+    assert snap["sig"] == status["sig"] and snap["r_done"] == 6
+    assert flight.installed().rounds_remaining() == 0
+
+    # `obs watch --once` renders the same store view
+    assert obs_main.main(["watch", str(tapped), "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "done" in out and "6/6" in out
+    assert status["sig"][:12] in out
+
+
+# --------------------------------------------- divergence -> quarantine
+
+def test_nan_sentinel_aborts_early_then_heals(tmp_path):
+    rounds = int(SPEC_DIV.base["rounds"])
+    ref = tmp_path / "ref"
+    run_spec(SPEC_DIV, store=SweepStore(str(ref)), checkpoint_every=2)
+
+    store = tmp_path / "div"
+    flight.install(flight.flight_dir_for(str(store)),
+                   predicates="nan")
+    # poison the carry after block 1 (round 2); the block-2 tap sees it
+    faults.install(faults.parse("nan_at_block:1"))
+    results = run_spec(SPEC_DIV, store=SweepStore(str(store)),
+                       checkpoint_every=2, quarantine=True,
+                       max_retries=2)
+    assert all(r is None for r in results)
+
+    failed_dir = os.path.join(str(store), "failed")
+    (fn,) = [f for f in os.listdir(failed_dir) if f.endswith(".json")]
+    with open(os.path.join(failed_dir, fn)) as f:
+        doc = json.load(f)
+    assert doc["kind"] == "diverged"
+    assert doc["error"]["type"] == "CohortDiverged"
+    div = doc["diverged"]
+    assert div["predicate"] == "nan" and div["cells"] == 2
+    assert "non-finite" in div["reason"]
+    # aborted in well under the full run: detection lands one block
+    # after the poison, at <= 25% of the cohort's rounds
+    assert div["round"] <= 0.25 * rounds
+    # non-retryable: the sentinel fired once, not once per retry
+    assert doc["attempts"] == 1
+
+    (status,) = flight.load_statuses(str(store))
+    assert status["status"] == "diverged"
+    assert status["diverged"]["round"] == div["round"]
+
+    # the poisoned checkpoint must not survive to seed a resume
+    runtime_dir = os.path.join(str(store), ".runtime", "ckpt")
+    assert not os.path.isdir(runtime_dir) or not os.listdir(runtime_dir)
+
+    # heal: clear the fault, re-run the same grid (taps still on) —
+    # byte-identical to the uninterrupted store, quarantine cleared
+    faults.install(faults.parse(""))
+    results2 = run_spec(SPEC_DIV, store=SweepStore(str(store)),
+                        checkpoint_every=2, quarantine=True)
+    assert all(r is not None for r in results2)
+    assert _store_files(str(store)) == _store_files(str(ref))
+    assert [f for f in os.listdir(failed_dir)
+            if f.endswith(".json")] == []
+
+
+def test_cli_flight_flag_validation():
+    from repro.sweep import cli
+    with pytest.raises(SystemExit):       # --flight needs a store
+        cli.main(["--flight", "--axis", "seed=0:2"])
+    with pytest.raises(SystemExit):       # bad sentinel grammar
+        cli.main(["--store", "s", "--sentinel", "bogus:1",
+                  "--axis", "seed=0:2"])
+    with pytest.raises(SystemExit):       # submit is remote-only
+        cli.main(["--submit", "x:1", "--flight",
+                  "--axis", "seed=0:2"])
+
+
+# -------------------------------------------------- trace lane merging
+
+def _write_trace(path, records):
+    with open(path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+
+
+def test_export_chrome_merges_lanes_and_flows(tmp_path):
+    """Two processes touching one cohort: the merged export grows named
+    per-pid/host lanes and a claim-steal flow arrow between them."""
+    da = tmp_path / "a"
+    rec = trace.TraceRecorder(str(da), flush_every=1)
+    rec.event("claim.acquire", cat="claims", sig="SIG1")
+    rec.close()
+
+    db = tmp_path / "b"
+    os.makedirs(str(db))
+    thief = os.getpid() + 1
+    _write_trace(str(db / f"trace-{thief}-0.jsonl"), [
+        {"name": "clock_sync", "ph": "M", "pid": thief, "tid": 0,
+         "ts": int(time.time() * 1e6),
+         "args": {"host": "otherhost", "epoch_us": int(time.time() * 1e6),
+                  "mono_us": int(time.monotonic() * 1e6)}},
+        {"name": "claim.steal", "cat": "claims", "ph": "i", "s": "t",
+         "ts": int(time.time() * 1e6) + 1000, "pid": thief, "tid": 0,
+         "args": {"sig": "SIG1"}},
+    ])
+
+    doc = trace.export_chrome([str(da), str(db)])
+    evs = doc["traceEvents"]
+    assert doc["otherData"]["processes"] == 2
+    assert "otherhost" in doc["otherData"]["hosts"]
+
+    lanes = {e["args"]["name"] for e in evs
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert any(f"pid {os.getpid()}" in l for l in lanes)
+    assert f"otherhost pid {thief}" in lanes
+
+    flows = [e for e in evs if e.get("name") == "claim-steal"]
+    assert {e["ph"] for e in flows} == {"s", "f"}
+    src = next(e for e in flows if e["ph"] == "s")
+    dst = next(e for e in flows if e["ph"] == "f")
+    assert src["id"] == dst["id"] and src["pid"] == os.getpid()
+    assert dst["pid"] == thief and dst["args"]["sig"] == "SIG1"
+
+    # timestamps rebased to the earliest event
+    assert min(e["ts"] for e in evs if "ts" in e) == 0
+
+
+def test_export_chrome_corrects_same_host_skew(tmp_path):
+    """Two same-host processes whose wall clocks disagree by 0.5s: the
+    monotonic clock_sync offsets cancel the skew, so two events that
+    happened at the same monotonic instant land on the same ts."""
+    d = tmp_path / "t"
+    os.makedirs(str(d))
+    recs = []
+    for pid, epoch0, ev_ts in ((111, 1_000_000, 2_000_000),
+                               (222, 1_500_000, 2_500_000)):
+        _write_trace(str(d / f"trace-{pid}-0.jsonl"), [
+            {"name": "clock_sync", "ph": "M", "pid": pid, "tid": 0,
+             "ts": epoch0, "args": {"host": "samehost",
+                                    "epoch_us": epoch0,
+                                    "mono_us": 1_000_000}},
+            {"name": "tick", "cat": "t", "ph": "i", "s": "t",
+             "ts": ev_ts, "pid": pid, "tid": 0, "args": {}},
+        ])
+        recs.append((pid, ev_ts))
+
+    doc = trace.export_chrome(str(d))
+    ticks = {e["pid"]: e["ts"] for e in doc["traceEvents"]
+             if e.get("name") == "tick"}
+    # pid 222's wall clock runs 500ms ahead; post-correction both ticks
+    # coincide (and rebase to 0)
+    assert ticks[111] == ticks[222] == 0
+
+
+# ------------------------------------------------- the daemon surfaces
+
+def _wait_done(svc, rid, timeout=180.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        snap = svc.request_snapshot(rid)
+        if snap["state"] == "done":
+            return snap
+        time.sleep(0.05)
+    raise AssertionError(f"request never settled: "
+                         f"{svc.request_snapshot(rid)}")
+
+
+def test_service_live_endpoint_and_gauges(tmp_path):
+    store = str(tmp_path / "store")
+    svc = session_lib.SweepService(store, jobs=1, poll_s=0.1,
+                                   flight=True, checkpoint_every=2)
+    server = api_lib.make_server(svc, "127.0.0.1", 0)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    host, port = server.server_address
+    base = f"http://{host}:{port}"
+    try:
+        spec = SweepSpec(axes={"seed": (0, 1)},
+                         base={"task": "linreg", "U": U, "k_bar": K_BAR,
+                               "rounds": 5})
+        snap = svc.submit(spec, client="t")
+        _wait_done(svc, snap["id"])
+
+        # /live: well-formed whether or not cohorts are still in flight
+        with urllib.request.urlopen(f"{base}/live", timeout=30) as r:
+            doc = json.loads(r.read())
+        assert set(doc) >= {"ts", "rounds_in_flight", "cohorts"}
+        assert doc["rounds_in_flight"] == 0          # flight finished
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/sweep/nope/live", timeout=30)
+        assert ei.value.code == 404
+        with pytest.raises(KeyError):
+            svc.live(rid="nope")
+
+        # the recorder fed both metric surfaces: the in-flight gauge and
+        # the realized rounds/sec histogram (one observation per tap)
+        text = svc.registry.render_prometheus()
+        assert "repro_serve_rounds_in_flight 0" in text
+        assert "repro_serve_cohort_rounds_per_s_count" in text
+        hist = svc.registry.snapshot()["cohort_rounds_per_s"]
+        assert hist["count"] >= 2                    # 3 blocks tapped
+
+        # the same run's status file serves obs watch / heal readers
+        (status,) = flight.load_statuses(store)
+        assert status["status"] == "done" and status["r_done"] == 5
+    finally:
+        server.shutdown()
+        server.server_close()
+        svc.close()
+
+
+def test_daemon_sigterm_flushes_trace(tmp_path):
+    """Satellite: SIGTERM (systemd/docker stop, CI kill) must flush the
+    buffered trace tail instead of dying with it in memory."""
+    d = str(tmp_path / "store")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve", "--store", d,
+         "--listen", "127.0.0.1:0", "--jobs", "1", "--trace", "-q"],
+        env=_ENV, stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+        text=True)
+    try:
+        line = proc.stdout.readline()
+        assert line.startswith("listening on "), line
+        addr = line.split()[-1]
+        spec = SweepSpec(axes={"seed": (0, 1)},
+                         base={"task": "linreg", "U": U, "k_bar": K_BAR,
+                               "rounds": 3})
+        client_lib.submit_and_wait(addr, spec, poll_s=0.2, timeout_s=180)
+        # the tail of the request's spans/events sits in the recorder
+        # buffer; a graceful stop must persist it
+        proc.send_signal(signal.SIGTERM)
+        rc = proc.wait(timeout=60)
+        assert rc == 0, f"SIGTERM should exit cleanly, got {rc}"
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+    evs = trace.load_events(trace.trace_dir_for(d))
+    names = {e["name"] for e in evs}
+    assert "session.classify" in names      # the submit made it to disk
+    assert "session.submit" in names

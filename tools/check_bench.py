@@ -1,0 +1,191 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: fresh BENCH_*.json vs the committed one.
+
+CI reruns a benchmark suite (``benchmarks/kernels_micro.py --json``,
+``benchmarks/sweep_bench.py --json``) and this tool compares the fresh
+rows against the committed baseline, failing the job on real
+regressions instead of just printing a table nobody reads:
+
+* **wall-like** rows (lower is better — name/metric mentions ``wall``,
+  ``us_per_call``, ``compile_s`` or ends in ``_s``) fail when the fresh
+  value exceeds baseline by more than ``--tolerance`` (default 25%);
+* **rate-like** rows (higher is better — ``per_s``, ``runs/s``,
+  ``speedup``) fail when the fresh value drops below baseline by more
+  than the same tolerance;
+* **percent** rows (``*_pct`` / metric ``percent`` — e.g. the trace and
+  flight overhead percentages) fail when they exceed ``--pct-cap``
+  (skipped unless the cap is given: they measure overhead against an
+  absolute budget, not against last week's noise);
+* **bitexact** rows must not lose exactness: fresh < baseline fails;
+* **count** components (``cells``, ``cohorts``, ``files==N``) must match
+  exactly — a changed cell count means the suites diverged and every
+  other comparison is meaningless.
+
+Composite rows (``metric: "cells/cohorts/compile_s/runs_per_s"``,
+``value: [8, 2, 6.84, 1.167]``) are compared component-wise by zipping
+the ``/``-split metric with the value list.  Rows present in only one
+file warn but never fail — suites legitimately grow new rows.
+
+Exit status: 0 clean, 1 on any regression, 2 on unusable input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, List, Optional, Tuple
+
+LOWER_BETTER = ("wall", "us_per_call", "compile_s")
+HIGHER_BETTER = ("per_s", "runs/s", "speedup")
+COUNT_NAMES = ("cells", "cohorts", "files")
+
+
+def classify(name: str, component: str) -> str:
+    """'wall' | 'rate' | 'pct' | 'bitexact' | 'count' | 'info' for one
+    scalar, from the row name and the metric component label."""
+    label = f"{name}/{component}".lower()
+    if "bitexact" in label:
+        return "bitexact"
+    if label.endswith("_pct") or component == "percent":
+        return "pct"
+    if component.split("==")[0] in COUNT_NAMES:
+        return "count"
+    if any(t in label for t in HIGHER_BETTER):
+        return "rate"
+    if any(t in label for t in LOWER_BETTER) or label.endswith("_s"):
+        return "wall"
+    return "info"
+
+
+def _fmt(v: Any) -> str:
+    return (f"{v:12.3f}" if isinstance(v, (int, float))
+            else f"{str(v):>12s}")
+
+
+def _components(row: dict) -> List[Tuple[str, Any]]:
+    """(component_label, scalar) pairs of a row — one pair for scalar
+    rows, the metric/value zip for composite rows."""
+    metric, value = str(row.get("metric", "")), row.get("value")
+    if isinstance(value, (list, tuple)):
+        labels = metric.split("/")
+        if len(labels) != len(value):
+            labels = [f"v{i}" for i in range(len(value))]
+        return list(zip(labels, value))
+    return [(metric, value)]
+
+
+def compare(base_rows: List[dict], fresh_rows: List[dict], *,
+            tolerance: float, pct_cap: Optional[float]
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """-> (table lines, warnings, failures)."""
+    base = {r["name"]: r for r in base_rows}
+    fresh = {r["name"]: r for r in fresh_rows}
+    lines, warns, fails = [], [], []
+    lines.append(f"{'benchmark':44s} {'component':14s} "
+                 f"{'base':>12s} {'fresh':>12s}  verdict")
+    for name in sorted(base):
+        if name not in fresh:
+            warns.append(f"row only in baseline: {name}")
+            continue
+        b_comps, f_comps = _components(base[name]), _components(fresh[name])
+        if len(b_comps) != len(f_comps):
+            fails.append(f"{name}: shape changed "
+                         f"({len(b_comps)} vs {len(f_comps)} components)")
+            continue
+        for (label, bv), (_, fv) in zip(b_comps, f_comps):
+            kind = classify(name, label)
+            verdict = "ok"
+            if not isinstance(bv, (int, float)) \
+                    or not isinstance(fv, (int, float)):
+                kind = "info"
+            if kind == "count":
+                if fv != bv:
+                    verdict = "FAIL count"
+                    fails.append(f"{name}/{label}: count {bv} -> {fv}")
+            elif kind == "bitexact":
+                if fv < bv:
+                    verdict = "FAIL exactness"
+                    fails.append(f"{name}/{label}: bit-exact cells "
+                                 f"{bv} -> {fv}")
+            elif kind == "wall":
+                if bv > 0 and fv > bv * (1.0 + tolerance):
+                    verdict = f"FAIL +{100.0 * (fv / bv - 1.0):.0f}%"
+                    fails.append(
+                        f"{name}/{label}: wall regressed "
+                        f"{bv:g} -> {fv:g} "
+                        f"(+{100.0 * (fv / bv - 1.0):.0f}% > "
+                        f"{100.0 * tolerance:.0f}%)")
+            elif kind == "rate":
+                if bv > 0 and fv < bv * (1.0 - tolerance):
+                    verdict = f"FAIL -{100.0 * (1.0 - fv / bv):.0f}%"
+                    fails.append(
+                        f"{name}/{label}: rate regressed "
+                        f"{bv:g} -> {fv:g} "
+                        f"(-{100.0 * (1.0 - fv / bv):.0f}% > "
+                        f"{100.0 * tolerance:.0f}%)")
+            elif kind == "pct":
+                if pct_cap is not None and fv > pct_cap:
+                    verdict = f"FAIL >{pct_cap:g}%"
+                    fails.append(f"{name}/{label}: overhead {fv:g}% "
+                                 f"over the {pct_cap:g}% cap")
+            lines.append(f"{name:44s} {label:14s} "
+                         f"{_fmt(bv)} {_fmt(fv)}  {verdict}")
+    for name in sorted(set(fresh) - set(base)):
+        warns.append(f"new row (no baseline): {name}")
+    return lines, warns, fails
+
+
+def _load_rows(path: str) -> List[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows") if isinstance(doc, dict) else doc
+    if not isinstance(rows, list) or not all(
+            isinstance(r, dict) and "name" in r for r in rows):
+        raise ValueError(f"{path}: expected {{'rows': [{{name,...}}]}}")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/check_bench.py",
+        description="fail CI when a fresh benchmark JSON regresses "
+                    "against the committed baseline")
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="freshly measured JSON (same suite)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    metavar="FRAC",
+                    help="relative wall/rate slack before failing "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--pct-cap", type=float, default=None, metavar="PCT",
+                    help="absolute cap for *_pct overhead rows "
+                         "(unset: pct rows are informational)")
+    args = ap.parse_args(argv)
+
+    try:
+        base_rows = _load_rows(args.baseline)
+        fresh_rows = _load_rows(args.fresh)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check_bench: {e}", file=sys.stderr)
+        return 2
+
+    lines, warns, fails = compare(base_rows, fresh_rows,
+                                  tolerance=args.tolerance,
+                                  pct_cap=args.pct_cap)
+    print("\n".join(lines))
+    for w in warns:
+        print(f"# warn: {w}")
+    if fails:
+        print(f"\ncheck_bench: {len(fails)} regression(s) beyond "
+              f"{100.0 * args.tolerance:.0f}% tolerance:",
+              file=sys.stderr)
+        for f_ in fails:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print(f"\ncheck_bench: OK ({len(lines) - 1} comparisons, "
+          f"{len(warns)} warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
